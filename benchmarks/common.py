@@ -1,0 +1,34 @@
+"""Shared benchmark helpers: timing + the CPU-scale bench CNN config."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+from repro.configs.paper_cnn import CNNConfig
+
+# CPU-scale parent model used by all FL benches (same elasticity contract
+# as the paper's MobileNetV3-OFA parent; sized so a full experiment runs
+# in minutes on one CPU core).
+BENCH_CNN = CNNConfig(name="bench", in_channels=1, image_size=28,
+                      stem_channels=8, stages=((16, 2), (32, 2)),
+                      groupnorm_groups=4, elastic_widths=(0.5, 1.0))
+
+Row = Tuple[str, float, str]
+
+
+def timed(fn: Callable, *, repeat: int = 3, warmup: int = 1) -> float:
+    """Median wall-time per call in microseconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(rows: List[Row]):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

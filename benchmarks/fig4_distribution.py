@@ -1,0 +1,39 @@
+"""Fig. 4(b): CFL vs standard FL under data-DISTRIBUTION heterogeneity
+(non-IID, 0.8 class imbalance). Claim: CFL accuracy > FL."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import BENCH_CNN, Row
+from repro.fl import CFLConfig, run_cfl, run_fedavg
+
+# scarce per-client data (~170 train samples each): the regime the paper
+# targets, where collaboration across non-IID clients actually pays
+ROUNDS = 14
+WORKERS = 8
+SAMPLES = 2400
+
+
+def run(seed: int = 0):
+    fl = CFLConfig(n_workers=WORKERS, local_epochs=2, batch_size=32,
+                   lr=0.08, seed=seed)
+    t0 = time.perf_counter()
+    cfl = run_cfl(BENCH_CNN, kind="synthmnist", n_workers=WORKERS,
+                  n_samples=SAMPLES, heterogeneity="distribution",
+                  rounds=ROUNDS, fl_cfg=fl, seed=seed)
+    t_cfl = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    fed = run_fedavg(BENCH_CNN, kind="synthmnist", n_workers=WORKERS,
+                     n_samples=SAMPLES, heterogeneity="distribution",
+                     rounds=ROUNDS, fl_cfg=fl, seed=seed)
+    t_fed = time.perf_counter() - t0
+
+    acc_c = cfl.history[-1]["fairness"]["mean"]
+    acc_f = fed.history[-1]["fairness"]["mean"]
+    return [
+        ("fig4b_cfl_acc", t_cfl * 1e6 / ROUNDS,
+         f"mean_acc={acc_c:.3f};jain={cfl.history[-1]['fairness']['jain_index']:.3f}"),
+        ("fig4b_fedavg_acc", t_fed * 1e6 / ROUNDS,
+         f"mean_acc={acc_f:.3f};jain={fed.history[-1]['fairness']['jain_index']:.3f}"),
+        ("fig4b_cfl_minus_fl", 0.0, f"delta_acc={acc_c - acc_f:+.3f}"),
+    ]

@@ -1,0 +1,53 @@
+"""Fig. 5: time for the first 200 iterations over 32 heterogeneous workers
+— CFL's latency-bounded submodels vs full-model FL. Claims: round time
+lower AND straggler gap (fairness) smaller.
+
+Times come from the device-profile latency model (the same artifact the
+paper's offline LUT provides), driven by the specs the CFL server actually
+samples."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import BENCH_CNN, Row
+from repro.core import (LatencyTable, full_spec, train_step_latency,
+                        fleet_for_workers)
+from repro.fl import CFLConfig
+from repro.fl.rounds import build_population
+from repro.fl.server import CFLServer
+from repro.models import cnn
+
+import jax
+
+WORKERS = 32
+ITERS = 200
+
+
+def run(seed: int = 0):
+    t0 = time.perf_counter()
+    fl = CFLConfig(n_workers=WORKERS, seed=seed)
+    clients, cdata, tdata = build_population(
+        BENCH_CNN, kind="synthmnist", n_workers=WORKERS, n_samples=3200,
+        heterogeneity="quality", seed=seed)
+    params = cnn.init_params(jax.random.PRNGKey(seed), BENCH_CNN)
+    server = CFLServer(BENCH_CNN, params, clients, cdata, tdata, fl)
+    specs = server.sample_submodels()        # round-0 latency-bounded specs
+
+    cfl_times = [ITERS * server.latency.lookup(s, c.device)
+                 for s, c in zip(specs, clients)]
+    fs = full_spec(BENCH_CNN)
+    fl_times = [ITERS * server.latency.lookup(fs, c.device) for c in clients]
+    wall = time.perf_counter() - t0
+
+    return [
+        ("fig5_cfl_200iter", wall * 1e6,
+         f"round_time_s={max(cfl_times):.1f};gap_s="
+         f"{max(cfl_times) - min(cfl_times):.1f}"),
+        ("fig5_fl_200iter", 0.0,
+         f"round_time_s={max(fl_times):.1f};gap_s="
+         f"{max(fl_times) - min(fl_times):.1f}"),
+        ("fig5_speedup", 0.0,
+         f"x={max(fl_times) / max(cfl_times):.2f}"),
+    ]

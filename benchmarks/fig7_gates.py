@@ -1,0 +1,55 @@
+"""Fig. 7: the data-quality-aware RL gate. (a-c) gated vs ungated accuracy
+per quality condition; (d) computed-layer percentage < 100% and adaptive
+to quality."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import BENCH_CNN, Row
+from repro.core import GateTrainConfig, train_gates
+from repro.data import apply_quality, batches, make_dataset
+from repro.models import cnn
+
+
+def run(seed: int = 0):
+    t0 = time.perf_counter()
+    data = make_dataset("synthmnist", 4096, seed=seed)
+    # warm-up on the worst quality (paper: server warm-up on a small public
+    # set at the worst quality level), then the hybrid RL phase on the
+    # MIXED-quality set so the gates learn to be quality-adaptive
+    worst = dict(data, x=apply_quality(data["x"], 3))
+    from repro.data import mixed_quality_dataset
+    mixed = mixed_quality_dataset(data, seed=seed)
+    params = cnn.init_params(jax.random.PRNGKey(seed), BENCH_CNN)
+    warm_cfg = GateTrainConfig(warmup_steps=50, rl_steps=0, lr=2e-3,
+                               compute_penalty=0.15)
+    params, hist = train_gates(params, BENCH_CNN,
+                               batches(worst, 64, seed=seed), warm_cfg,
+                               seed=seed)
+    rl_cfg = GateTrainConfig(warmup_steps=0, rl_steps=80, lr=2e-3,
+                             compute_penalty=0.15)
+    params, hist2 = train_gates(params, BENCH_CNN,
+                                batches(mixed, 64, seed=seed + 1), rl_cfg,
+                                seed=seed)
+    hist = hist + hist2
+    tcfg = warm_cfg
+    rows: list[Row] = [
+        ("fig7_gate_train", (time.perf_counter() - t0) * 1e6,
+         f"final_acc={hist[-1]['acc']:.3f};"
+         f"warmup_acc={hist[tcfg.warmup_steps - 1]['acc']:.3f}")]
+
+    # per-quality compute% with hard gates (Fig. 7d)
+    for q, label in ((3, "blur3"), (0, "clean"), (4, "sharpen")):
+        x = jnp.asarray(apply_quality(data["x"][:256], q))
+        y = jnp.asarray(data["y"][:256])
+        logits, info = cnn.forward(params, BENCH_CNN, x, gate_mode="hard")
+        acc = float(jnp.mean((jnp.argmax(logits, -1) == y)))
+        logits_u, _ = cnn.forward(params, BENCH_CNN, x, gate_mode="off")
+        acc_u = float(jnp.mean((jnp.argmax(logits_u, -1) == y)))
+        rows.append((f"fig7_quality_{label}", 0.0,
+                     f"gated_acc={acc:.3f};ungated_acc={acc_u:.3f};"
+                     f"compute_pct={float(info['compute_pct']):.2f}"))
+    return rows

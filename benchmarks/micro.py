@@ -1,0 +1,62 @@
+"""System microbenches: alignment+aggregation throughput, kernel-vs-ref
+timing (interpret mode — functional path, not TPU perf), GA search time."""
+from __future__ import annotations
+
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import BENCH_CNN, Row, timed
+from repro.core import (AccuracyPredictor, LatencyTable, aggregate,
+                        extract_cnn, pad_cnn, random_spec, search_submodel,
+                        EDGE_FLEET, full_spec, train_step_latency,
+                        SubmodelSpec)
+from repro.kernels import elastic_matmul, ref
+from repro.models import cnn
+
+
+def run(seed: int = 0):
+    rows: list[Row] = []
+
+    # aggregation of 8 heterogeneous submodel updates
+    params = cnn.init_params(jax.random.PRNGKey(seed), BENCH_CNN)
+    rng = random.Random(seed)
+    specs = [random_spec(BENCH_CNN, rng) for _ in range(8)]
+    deltas = [extract_cnn(params, BENCH_CNN, s) for s in specs]
+
+    def agg():
+        padded = [pad_cnn(d, params, BENCH_CNN, s)
+                  for d, s in zip(deltas, specs)]
+        out = aggregate(padded, [1.0] * 8)
+        jax.block_until_ready(jax.tree.leaves(out)[0])
+    rows.append(("micro_align_aggregate_8clients", timed(agg), "alg3"))
+
+    # GA search helper (one worker)
+    table = LatencyTable(BENCH_CNN, depth_choices=(1, 2))
+    pred = AccuracyPredictor(BENCH_CNN)
+    dev = EDGE_FLEET[1]
+    lo = train_step_latency(BENCH_CNN,
+                            SubmodelSpec((1, 1), (0.5, 0.5)), dev)
+    hi = train_step_latency(BENCH_CNN, full_spec(BENCH_CNN), dev)
+
+    def search():
+        search_submodel(BENCH_CNN, pred, table, device=dev.name, quality=0,
+                        latency_bound=(lo + hi) / 2, seed=seed)
+    rows.append(("micro_ga_search_1worker", timed(search, repeat=3),
+                 f"lut_entries={len(table)}"))
+
+    # elastic matmul kernel (interpret) vs jnp ref, full vs half width
+    x = jax.random.normal(jax.random.PRNGKey(1), (256, 256))
+    w = jax.random.normal(jax.random.PRNGKey(2), (256, 512))
+    for ka in (512, 256):
+        y = elastic_matmul(x, w, ka)  # compile
+        rows.append((f"micro_elastic_matmul_k{ka}",
+                     timed(lambda: jax.block_until_ready(
+                         elastic_matmul(x, w, ka))),
+                     "pallas_interpret"))
+    rows.append(("micro_elastic_matmul_ref",
+                 timed(lambda: jax.block_until_ready(
+                     ref.elastic_matmul_ref(x, w, 512))), "jnp"))
+    return rows

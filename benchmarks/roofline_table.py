@@ -1,0 +1,75 @@
+"""§Roofline generator: reads the dry-run sweep (dryrun.jsonl) and emits
+the per-(arch × shape × mesh) roofline table as markdown + CSV rows."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results",
+                       "dryrun.jsonl")
+
+
+def load(path: str = RESULTS) -> List[Dict]:
+    out = []
+    if not os.path.exists(path):
+        return out
+    with open(path) as f:
+        for ln in f:
+            try:
+                out.append(json.loads(ln))
+            except json.JSONDecodeError:
+                pass
+    # last write wins per combo
+    dedup = {}
+    for r in out:
+        dedup[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(dedup.values())
+
+
+def markdown_table(records: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | mem/dev GB | t_comp ms | t_mem ms |"
+        " t_coll ms | bottleneck | useful |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    key = lambda r: (r["arch"], r["shape"], r["mesh"])
+    for r in sorted(records, key=key):
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"FAILED | | | | {r.get('error', '')[:40]} | |")
+            continue
+        rl = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['mem_peak_per_device'] / 1e9:.2f} "
+            f"| {rl['t_compute'] * 1e3:.1f} "
+            f"| {rl['t_memory'] * 1e3:.1f} "
+            f"| {rl['t_collective'] * 1e3:.1f} "
+            f"| {rl['bottleneck']} "
+            f"| {rl['useful_flops_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def run(seed: int = 0):
+    recs = load()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    fails = [r for r in recs if r.get("status") != "ok"]
+    rows = [("roofline_combos_ok", 0.0, f"n={len(ok)}"),
+            ("roofline_combos_failed", 0.0, f"n={len(fails)}")]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        rl = r["roofline"]
+        rows.append((
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+            r["t_compile_s"] * 1e6,
+            f"bottleneck={rl['bottleneck']};"
+            f"t_comp_ms={rl['t_compute'] * 1e3:.2f};"
+            f"t_mem_ms={rl['t_memory'] * 1e3:.2f};"
+            f"t_coll_ms={rl['t_collective'] * 1e3:.2f};"
+            f"mem_gb={r['mem_peak_per_device'] / 1e9:.2f};"
+            f"useful={rl['useful_flops_ratio']:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print(markdown_table(load()))

@@ -1,0 +1,57 @@
+"""Benchmark harness — one module per paper table/figure plus system
+microbenches. Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run             # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig5,micro
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+from benchmarks.common import emit
+
+MODULES = {
+    "fig4a": "benchmarks.fig4_quality",
+    "fig4b": "benchmarks.fig4_distribution",
+    "fig5": "benchmarks.fig5_round_time",
+    "table2": "benchmarks.table2_cfl_vs_il",
+    "fig7": "benchmarks.fig7_gates",
+    "ablation": "benchmarks.ablation_coverage",
+    "micro": "benchmarks.micro",
+    "roofline": "benchmarks.roofline_table",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(MODULES))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    names = list(MODULES) if not args.only else args.only.split(",")
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        mod_name = MODULES[name]
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(mod_name)
+            rows = mod.run(seed=args.seed)
+            emit(rows)
+            print(f"# {name} done in {time.time() - t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:
+            failures += 1
+            print(f"{name}_FAILED,0,error")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

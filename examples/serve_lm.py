@@ -1,0 +1,12 @@
+"""Batched serving demo: prefill + cached decode on any decoder arch
+(reduced CPU-scale config); prints aggregate tokens/s.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch mamba2-2.7b --batch 4
+"""
+import sys
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

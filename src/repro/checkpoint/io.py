@@ -1,0 +1,70 @@
+"""npz-based pytree checkpointing with a path manifest (no external deps).
+
+Leaves are flattened to ``key.path.like.this`` npz entries; namedtuples and
+tuples/lists are encoded positionally. Restores into the same treedef.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix="", out=None):
+    out = out if out is not None else {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            _flatten(tree[k], f"{prefix}{k}.", out)
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            _flatten(v, f"{prefix}{i}.", out)
+    elif tree is None:
+        out[prefix[:-1] + "#none"] = np.zeros((0,))
+    else:
+        arr = np.asarray(tree)
+        if arr.dtype.name == "bfloat16":     # numpy can't serialise bf16
+            out[prefix[:-1] + "#bf16"] = arr.astype(np.float32)
+        else:
+            out[prefix[:-1]] = arr
+    return out
+
+
+def save_checkpoint(path: str, tree: Any, metadata: Dict = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path, **flat)
+    if metadata is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(metadata, f, indent=2)
+
+
+def restore_checkpoint(path: str, template: Any) -> Any:
+    """Restores array values into the structure of `template`."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}{k}.") for k, v in tree.items()}
+        if isinstance(tree, tuple) and hasattr(tree, "_fields"):  # namedtuple
+            return type(tree)(*[rebuild(v, f"{prefix}{i}.")
+                                for i, v in enumerate(tree)])
+        if isinstance(tree, (list, tuple)):
+            vals = [rebuild(v, f"{prefix}{i}.") for i, v in enumerate(tree)]
+            return type(tree)(vals) if isinstance(tree, list) else tuple(vals)
+        if tree is None:
+            return None
+        key = prefix[:-1]
+        arr = data[key + "#bf16"] if key + "#bf16" in data else data[key]
+        return jax.numpy.asarray(arr, dtype=tree.dtype if hasattr(
+            tree, "dtype") else None)
+    return rebuild(template)
+
+
+def load_metadata(path: str) -> Dict:
+    with open(path + ".meta.json") as f:
+        return json.load(f)

@@ -1,0 +1,15 @@
+"""CFL — the paper's contribution as a composable module."""
+from repro.core.submodel import (SubmodelSpec, TransformerSubSpec,
+                                 extract_cnn, pad_cnn, sub_cnn_config,
+                                 coverage_cnn, full_spec,
+                                 extract_transformer, pad_transformer,
+                                 full_transformer_spec)
+from repro.core.aggregate import (aggregate, aggregate_coverage,
+                                  apply_server_update, weighted_sum)
+from repro.core.search import (SearchConfig, search_submodel,
+                               search_all_workers, random_spec)
+from repro.core.predictor import AccuracyPredictor, featurize
+from repro.core.latency import (DeviceProfile, EDGE_FLEET, LatencyTable,
+                                fleet_for_workers, train_step_latency)
+from repro.core.gating import GateTrainConfig, train_gates, gate_depth_policy
+from repro.core.fairness import accuracy_fairness, round_time_fairness

@@ -1,0 +1,56 @@
+"""Alg. 3 — submodel alignment + aggregation.
+
+``aggregate``: the paper's rule — zero-pad every client update to parent
+coordinates, then data-size-weighted average  Δ_t = Σ_k (n_k/n) Δ_k.
+
+``aggregate_coverage``: beyond-paper variant — normalise each parent entry
+by the total weight of clients that actually *covered* it (HeteroFL-style),
+so rarely-sampled deep layers / late channels are not diluted toward zero.
+Falls back to the paper's rule where coverage is full. Controlled by the
+`coverage` flag so experiments can compare both (EXPERIMENTS.md §Perf).
+
+On a pod, this whole operation is jit-able: the padded updates are a pytree
+sum — under `data`-axis sharding it lowers to reduce-scatter/all-reduce.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def weighted_sum(trees: Sequence, weights: Sequence[float]):
+    total = sum(weights)
+    out = jax.tree.map(lambda a: a * (weights[0] / total), trees[0])
+    for t, w in zip(trees[1:], weights[1:]):
+        out = jax.tree.map(lambda acc, a, w=w: acc + a * (w / total), out, t)
+    return out
+
+
+def aggregate(padded_deltas: Sequence, data_sizes: Sequence[float]):
+    """Paper rule (Alg. 3 last line): Δ = Σ (n_k/n) Δ_k over *aligned*
+    (already padded) updates."""
+    return weighted_sum(padded_deltas, list(data_sizes))
+
+
+def aggregate_coverage(padded_deltas: Sequence, coverages: Sequence,
+                       data_sizes: Sequence[float], eps: float = 1e-8):
+    """Entry-wise: Δ[i] = Σ_k n_k c_k[i] Δ_k[i] / max(Σ_k n_k c_k[i], eps).
+
+    coverages: 0/1 trees of the same structure (core.submodel.coverage_*).
+    """
+    n = list(data_sizes)
+    num = jax.tree.map(lambda a: a * n[0], padded_deltas[0])
+    den = jax.tree.map(lambda c: c * n[0], coverages[0])
+    for t, c, w in zip(padded_deltas[1:], coverages[1:], n[1:]):
+        num = jax.tree.map(lambda acc, a, w=w: acc + a * w, num, t)
+        den = jax.tree.map(lambda acc, a, w=w: acc + a * w, den, c)
+    return jax.tree.map(lambda nu, de: nu / jnp.maximum(de, eps), num, den)
+
+
+def apply_server_update(params, delta, server_lr: float = 1.0):
+    """ω_{t+1} = ω_t − Δ_t (Alg. 4); Δ already carries the client-side sign
+    convention (ω_0 − ω_E)."""
+    return jax.tree.map(lambda p, d: (p - server_lr * d).astype(p.dtype),
+                        params, delta)

@@ -1,0 +1,102 @@
+"""Device profiles + offline latency lookup table (paper §III-B1, [65]).
+
+The paper uses an offline-measured latency LUT per device type. Without
+edge hardware we use the standard two-term cost model per device —
+``latency = FLOPs/throughput + bytes/mem_bw + fixed`` — and *tabulate* it
+over the submodel gene space, which is exactly the artifact the search
+helper consumes (`g(ω, p_k) < l_k` in Alg. 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Sequence, Tuple
+
+from repro.configs.paper_cnn import CNNConfig
+from repro.core.submodel import SubmodelSpec, channels_of
+from repro.models.cnn import flops as cnn_flops
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    name: str
+    flops_per_s: float        # effective sustained
+    mem_bw: float             # bytes/s
+    net_bw: float             # bytes/s up+down (FL update exchange)
+    fixed_s: float = 0.01     # per-batch overhead
+
+    def step_latency(self, flops: float, bytes_touched: float) -> float:
+        return flops / self.flops_per_s + bytes_touched / self.mem_bw + \
+            self.fixed_s
+
+    def comm_latency(self, update_bytes: float) -> float:
+        return update_bytes / self.net_bw
+
+
+# A heterogeneous edge fleet (spec-sheet-scale numbers; relative spread is
+# what matters for straggler/fairness effects).
+EDGE_FLEET = (
+    DeviceProfile("jetson-orin", 2.0e12, 6.0e10, 1.2e7),
+    DeviceProfile("pixel-7", 6.0e11, 2.0e10, 6.0e6),
+    DeviceProfile("rpi-4", 5.0e10, 4.0e9, 2.0e6),
+    DeviceProfile("laptop-cpu", 3.0e11, 1.5e10, 1.0e7),
+    DeviceProfile("jetson-nano", 2.4e11, 8.0e9, 4.0e6),
+)
+
+
+def fleet_for_workers(n_workers: int,
+                      fleet: Sequence[DeviceProfile] = EDGE_FLEET
+                      ) -> Tuple[DeviceProfile, ...]:
+    return tuple(fleet[i % len(fleet)] for i in range(n_workers))
+
+
+def submodel_bytes(cfg: CNNConfig, spec: SubmodelSpec,
+                   bytes_per_param: int = 4) -> float:
+    total = 9 * cfg.in_channels * cfg.stem_channels
+    cin = cfg.stem_channels
+    for si, (cmax, _) in enumerate(cfg.stages):
+        c = channels_of(cfg, si, spec.width[si])
+        total += 9 * cin * c
+        total += spec.depth[si] * 2 * 9 * c * c
+        cin = c
+    total += cin * cfg.n_classes
+    return float(total * bytes_per_param)
+
+
+def train_step_latency(cfg: CNNConfig, spec: SubmodelSpec,
+                       profile: DeviceProfile, batch_size: int = 32) -> float:
+    f = cnn_flops(cfg, depth=spec.depth, widths=spec.width)
+    # fwd + bwd ~ 3x fwd; activations ~ 2 bytes-touched per FLOP/8
+    return profile.step_latency(3.0 * f * batch_size,
+                                submodel_bytes(cfg, spec) * 3)
+
+
+class LatencyTable:
+    """Offline LUT: (gene, device) -> seconds (Alg. 1's `g`)."""
+
+    def __init__(self, cfg: CNNConfig,
+                 fleet: Sequence[DeviceProfile] = EDGE_FLEET,
+                 depth_choices: Sequence[int] = (1, 2, 3),
+                 batch_size: int = 32):
+        self.cfg = cfg
+        self.fleet = {p.name: p for p in fleet}
+        self.batch_size = batch_size
+        self._table: Dict[Tuple, float] = {}
+        widths = cfg.elastic_widths
+        n_stages = len(cfg.stages)
+        for depth in itertools.product(depth_choices, repeat=n_stages):
+            for width in itertools.product(widths, repeat=n_stages):
+                spec = SubmodelSpec(depth=depth, width=width)
+                for p in fleet:
+                    self._table[(spec.genes(), p.name)] = \
+                        train_step_latency(cfg, spec, p, batch_size)
+
+    def lookup(self, spec: SubmodelSpec, device: str) -> float:
+        key = (spec.genes(), device)
+        if key not in self._table:
+            self._table[key] = train_step_latency(
+                self.cfg, spec, self.fleet[device], self.batch_size)
+        return self._table[key]
+
+    def __len__(self):
+        return len(self._table)

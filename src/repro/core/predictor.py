@@ -1,0 +1,115 @@
+"""Alg. 2 — the online-trained accuracy predictor.
+
+A four-layer MLP (exactly as the paper states) mapping
+(submodel structure, data quality) -> predicted test accuracy, trained
+online on the (x_k=(q_k, ω_k^t), y_k=acc_k^t) profiles the clients upload
+each round; training stops once the predictor converges (paper: "one or
+two CFL rounds of samples suffice").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_cnn import CNNConfig
+from repro.core.submodel import SubmodelSpec
+from repro.models.cnn import flops as cnn_flops
+from repro.optim import adamw, apply_updates
+
+N_QUALITY_LEVELS = 5
+
+
+def featurize(cfg: CNNConfig, spec: SubmodelSpec, quality: int) -> np.ndarray:
+    """Structure + quality features; bounded [0,1]-ish."""
+    depth_f = [spec.depth[s] / cfg.stages[s][1] for s in range(len(cfg.stages))]
+    width_f = list(spec.width)
+    q = np.zeros(N_QUALITY_LEVELS)
+    q[int(quality)] = 1.0
+    fl = cnn_flops(cfg, spec.depth, spec.width) / cnn_flops(cfg)
+    return np.asarray(depth_f + width_f + list(q) + [fl], np.float32)
+
+
+def feature_dim(cfg: CNNConfig) -> int:
+    return 2 * len(cfg.stages) + N_QUALITY_LEVELS + 1
+
+
+class AccuracyPredictor:
+    """4-layer MLP, sigmoid head (accuracy in [0,1])."""
+
+    def __init__(self, cfg: CNNConfig, hidden: int = 64, lr: float = 3e-3,
+                 seed: int = 0, converge_mae: float = 0.03):
+        self.cfg = cfg
+        d = feature_dim(cfg)
+        key = jax.random.PRNGKey(seed)
+        ks = jax.random.split(key, 4)
+        dims = [d, hidden, hidden, hidden, 1]
+        self.params = [
+            {"w": jax.random.normal(ks[i], (dims[i], dims[i + 1])) /
+             np.sqrt(dims[i]), "b": jnp.zeros((dims[i + 1],))}
+            for i in range(4)]
+        self.opt = adamw(lr)
+        self.opt_state = self.opt.init(self.params)
+        self.buffer_x: List[np.ndarray] = []
+        self.buffer_y: List[float] = []
+        self.converged = False
+        self.converge_mae = converge_mae
+        self.last_mae = float("inf")
+
+        def net(params, x):
+            h = x
+            for i, layer in enumerate(params):
+                h = h @ layer["w"] + layer["b"]
+                if i < 3:
+                    h = jax.nn.relu(h)
+            return jax.nn.sigmoid(h[..., 0])
+
+        def loss(params, x, y):
+            pred = net(params, x)
+            return jnp.mean(jnp.square(pred - y))
+
+        self._net = jax.jit(net)
+
+        @jax.jit
+        def train_step(params, opt_state, x, y):
+            l, g = jax.value_and_grad(loss)(params, x, y)
+            upd, opt_state = self.opt.update(g, opt_state, params)
+            return apply_updates(params, upd), opt_state, l
+        self._train_step = train_step
+
+    # -- Alg. 2 ------------------------------------------------------------
+    def add_profiles(self, samples: Sequence[Tuple[SubmodelSpec, int, float]]):
+        """samples: (spec, quality_level, observed_accuracy)."""
+        for spec, q, acc in samples:
+            self.buffer_x.append(featurize(self.cfg, spec, q))
+            self.buffer_y.append(float(acc))
+
+    def train_round(self, epochs: int = 1):
+        """One epoch over all collected profiles per FL round (Alg. 2);
+        freezes itself once MAE converges (paper §III-B1)."""
+        if self.converged or not self.buffer_x:
+            return self.last_mae
+        x = jnp.asarray(np.stack(self.buffer_x))
+        y = jnp.asarray(np.asarray(self.buffer_y, np.float32))
+        for _ in range(epochs):
+            self.params, self.opt_state, _ = self._train_step(
+                self.params, self.opt_state, x, y)
+        pred = self._net(self.params, x)
+        self.last_mae = float(jnp.mean(jnp.abs(pred - y)))
+        if self.last_mae < self.converge_mae and len(self.buffer_y) >= 16:
+            self.converged = True
+        return self.last_mae
+
+    # -- Alg. 1's `f_t` ------------------------------------------------------
+    def predict(self, spec: SubmodelSpec, quality: int) -> float:
+        x = jnp.asarray(featurize(self.cfg, spec, quality))[None]
+        return float(self._net(self.params, x)[0])
+
+    def predict_batch(self, specs: Sequence[SubmodelSpec],
+                      quality: int) -> np.ndarray:
+        x = jnp.asarray(np.stack([featurize(self.cfg, s, quality)
+                                  for s in specs]))
+        return np.asarray(self._net(self.params, x))

@@ -1,0 +1,277 @@
+"""Submodel specification + extraction + zero-pad alignment (paper §III-B).
+
+The CFL contract: a *parent* model exposes elastic dimensions; a
+``SubmodelSpec`` selects a sub-structure; ``extract_*`` slices parent
+params down to the submodel; ``pad_*`` aligns a submodel *update* back to
+parent coordinates by zero-filling (Fig. 2 width expansion, Fig. 3 depth
+expansion). Channels are prefix-slices in parent order, so the paper's
+"sort channels to original order" step is the identity (DESIGN.md §5).
+
+Two parent families:
+  * the paper's elastic CNN (per-stage depth + width)  — used by the FL
+    reproduction experiments;
+  * the assigned transformer/SSM zoo (per-segment depth, d_ff / expert /
+    SSD-head width) — CFL as a first-class feature of the framework.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, Segment
+from repro.configs.paper_cnn import CNNConfig
+
+
+# ===========================================================================
+# CNN parent (paper-faithful)
+# ===========================================================================
+@dataclasses.dataclass(frozen=True)
+class SubmodelSpec:
+    """depth[s] = blocks kept in stage s; width[s] = channel fraction."""
+    depth: Tuple[int, ...]
+    width: Tuple[float, ...]
+
+    def genes(self) -> Tuple[int, ...]:
+        return self.depth + tuple(int(w * 100) for w in self.width)
+
+
+def full_spec(cfg: CNNConfig) -> SubmodelSpec:
+    return SubmodelSpec(depth=tuple(b for _, b in cfg.stages),
+                        width=tuple(1.0 for _ in cfg.stages))
+
+
+def channels_of(cfg: CNNConfig, stage: int, frac: float) -> int:
+    c = cfg.stages[stage][0]
+    g = cfg.groupnorm_groups
+    return max(g, int(round(c * frac / g)) * g)
+
+
+def extract_cnn(params: Dict, cfg: CNNConfig, spec: SubmodelSpec) -> Dict:
+    """Slice parent params down to the submodel (prefix channels)."""
+    out = {"stem": params["stem"], "head": None, "stages": []}
+    cin_prev = cfg.stem_channels
+    for si, stage in enumerate(params["stages"]):
+        c = channels_of(cfg, si, spec.width[si])
+        sub = {"down": {"w": stage["down"]["w"][:, :, :cin_prev, :c],
+                        "b": stage["down"]["b"][:c]},
+               "blocks": []}
+        for bi in range(spec.depth[si]):
+            bp = stage["blocks"][bi]
+            sub["blocks"].append({
+                "conv1": {"w": bp["conv1"]["w"][:, :, :c, :c],
+                          "b": bp["conv1"]["b"][:c]},
+                "conv2": {"w": bp["conv2"]["w"][:, :, :c, :c],
+                          "b": bp["conv2"]["b"][:c]},
+                "gate": {"fc1": {"w": bp["gate"]["fc1"]["w"][:c, :],
+                                 "b": bp["gate"]["fc1"]["b"]},
+                         "fc2": bp["gate"]["fc2"]},
+            })
+        out["stages"].append(sub)
+        cin_prev = c
+    out["head"] = {"w": params["head"]["w"][:cin_prev, :],
+                   "b": params["head"]["b"]}
+    return out
+
+
+def sub_cnn_config(cfg: CNNConfig, spec: SubmodelSpec) -> CNNConfig:
+    stages = tuple((channels_of(cfg, si, spec.width[si]), spec.depth[si])
+                   for si in range(len(cfg.stages)))
+    return dataclasses.replace(cfg, stages=stages)
+
+
+def pad_cnn(delta: Dict, parent_template: Dict, cfg: CNNConfig,
+            spec: SubmodelSpec) -> Dict:
+    """Zero-pad a submodel update to parent shape (Alg. 3 alignment)."""
+    def zeros_like_leaf(a):
+        return jnp.zeros(a.shape, a.dtype)
+
+    out = {"stem": delta["stem"],
+           "head": None,
+           "stages": []}
+    for si, (pstage, dstage) in enumerate(zip(parent_template["stages"],
+                                              delta["stages"])):
+        sub = {"down": _pad_to(dstage["down"], pstage["down"]), "blocks": []}
+        n_blocks = len(pstage["blocks"])
+        for bi in range(n_blocks):
+            if bi < spec.depth[si]:
+                sub["blocks"].append(_pad_to(dstage["blocks"][bi],
+                                             pstage["blocks"][bi]))
+            else:
+                # depth expansion: all-zero layer at parent width (Fig. 2)
+                sub["blocks"].append(jax.tree.map(zeros_like_leaf,
+                                                  pstage["blocks"][bi]))
+        out["stages"].append(sub)
+    out["head"] = _pad_to(delta["head"], parent_template["head"])
+    return out
+
+
+def _pad_to(sub_tree, parent_tree):
+    """Zero-pad every leaf of sub_tree up to parent leaf shape (prefix)."""
+    def pad_leaf(s, p):
+        pads = [(0, pd - sd) for sd, pd in zip(s.shape, p.shape)]
+        return jnp.pad(s.astype(p.dtype), pads)
+    return jax.tree.map(pad_leaf, sub_tree, parent_tree)
+
+
+def coverage_cnn(parent_template: Dict, cfg: CNNConfig,
+                 spec: SubmodelSpec) -> Dict:
+    """1/0 mask of which parent entries this submodel covers (for the
+    coverage-normalised aggregation variant)."""
+    ones = jax.tree.map(jnp.ones_like, parent_template)
+    sub = extract_cnn(ones, cfg, spec)
+    return pad_cnn(jax.tree.map(jnp.ones_like, sub), parent_template, cfg,
+                   spec)
+
+
+# ===========================================================================
+# Transformer parent (framework feature)
+# ===========================================================================
+@dataclasses.dataclass(frozen=True)
+class TransformerSubSpec:
+    """Per-segment kept layers + global width fractions.
+
+    layers[i]: tuple of kept layer indices (sorted) within segment i.
+    ff_frac: fraction of d_ff kept (prefix).
+    expert_frac: fraction of routed experts kept (prefix; MoE only).
+    """
+    layers: Tuple[Tuple[int, ...], ...]
+    ff_frac: float = 1.0
+    expert_frac: float = 1.0
+
+
+def full_transformer_spec(cfg: ModelConfig) -> TransformerSubSpec:
+    return TransformerSubSpec(
+        layers=tuple(tuple(range(s.n_layers)) for s in cfg.segments))
+
+
+def _round8(x: int) -> int:
+    return max(8, (int(x) // 8) * 8)
+
+
+def extract_transformer(params: Dict, cfg: ModelConfig,
+                        spec: TransformerSubSpec):
+    """Returns (sub_params, sub_cfg). Slices stacked per-layer arrays on the
+    leading axis (depth) and d_ff / expert axes (width)."""
+    ff = _round8(int(cfg.d_ff * spec.ff_frac)) if cfg.d_ff else 0
+    n_exp = None
+    if cfg.moe is not None:
+        n_exp = max(cfg.moe.top_k,
+                    int(round(cfg.moe.n_experts * spec.expert_frac)))
+
+    def slice_block(tree, keep_idx):
+        idx = np.asarray(keep_idx, np.int32)
+        sliced = jax.tree.map(lambda a: a[idx], tree)
+        return _slice_width(sliced, ff, n_exp, cfg)
+
+    sub_segs = []
+    new_cfg_segs = []
+    for seg_p, seg, keep in zip(params["segments"], cfg.segments,
+                                spec.layers):
+        if seg.kind == "attn_pair":
+            sub_segs.append({"local": slice_block(seg_p["local"], keep),
+                             "global": slice_block(seg_p["global"], keep)})
+        else:
+            sub_segs.append({"blocks": slice_block(seg_p["blocks"], keep)})
+        new_cfg_segs.append(dataclasses.replace(seg, n_layers=len(keep)))
+
+    sub = dict(params)
+    sub["segments"] = sub_segs
+    if "shared_attn" in params:
+        sub["shared_attn"] = _slice_width(params["shared_attn"], None, None,
+                                          cfg)
+    moe = cfg.moe
+    if moe is not None and n_exp is not None:
+        moe = dataclasses.replace(moe, n_experts=n_exp)
+    sub_cfg = dataclasses.replace(
+        cfg, name=cfg.name + "-sub", segments=tuple(new_cfg_segs),
+        n_layers=sum(len(k) for k in spec.layers),
+        d_ff=ff or cfg.d_ff, moe=moe)
+    return sub, sub_cfg
+
+
+def _slice_width(block_tree, ff: Optional[int], n_exp: Optional[int],
+                 cfg: ModelConfig):
+    """Width-slice mlp d_ff (wi/wg last axis, wo first-after-stack) and MoE
+    expert axis inside a (stacked or unstacked) block tree."""
+    def walk(d):
+        if not isinstance(d, dict):
+            return d
+        out = {}
+        for k, v in d.items():
+            if k == "mlp" and ff:
+                out[k] = {kk: _slice_mlp_leaf(kk, vv, ff)
+                          for kk, vv in v.items()}
+            elif k == "moe" and n_exp is not None:
+                out[k] = _slice_moe(v, n_exp)
+            elif isinstance(v, dict):
+                out[k] = walk(v)
+            else:
+                out[k] = v
+        return out
+    return walk(block_tree)
+
+
+def _slice_mlp_leaf(name, a, ff):
+    if name in ("wi", "wg"):
+        return a[..., :ff]
+    if name == "wo":
+        return jax.lax.slice_in_dim(a, 0, ff, axis=a.ndim - 2)
+    return a
+
+
+def _slice_moe(tree, n_exp):
+    out = {}
+    for k, v in tree.items():
+        if k == "router":
+            out[k] = v[..., :n_exp]
+        elif k in ("wi", "wg", "wo"):
+            # stacked: (L, E, ...) or unstacked (E, ...): expert axis is
+            # ndim-3 either way
+            ax = v.ndim - 3
+            out[k] = jax.lax.slice_in_dim(v, 0, n_exp, axis=ax)
+        elif isinstance(v, dict):
+            out[k] = v  # shared experts kept whole
+        else:
+            out[k] = v
+    return out
+
+
+def pad_transformer(delta: Dict, parent_template: Dict, cfg: ModelConfig,
+                    spec: TransformerSubSpec) -> Dict:
+    """Zero-pad a transformer submodel update to parent coordinates."""
+    def scatter_layers(sub_tree, parent_tree, keep_idx):
+        idx = np.asarray(keep_idx, np.int32)
+
+        def leaf(s, p):
+            z = jnp.zeros(p.shape, p.dtype)
+            # width-pad each kept layer first, then scatter on depth axis
+            pads = [(0, 0)] + [(0, pd - sd)
+                               for sd, pd in zip(s.shape[1:], p.shape[1:])]
+            s_padded = jnp.pad(s.astype(p.dtype), pads)
+            return z.at[idx].set(s_padded)
+        return jax.tree.map(leaf, sub_tree, parent_tree)
+
+    out = dict(delta)
+    segs = []
+    for d_seg, p_seg, keep in zip(delta["segments"],
+                                  parent_template["segments"], spec.layers):
+        if "local" in d_seg:
+            segs.append({
+                "local": scatter_layers(d_seg["local"], p_seg["local"], keep),
+                "global": scatter_layers(d_seg["global"], p_seg["global"],
+                                         keep)})
+        else:
+            segs.append({"blocks": scatter_layers(d_seg["blocks"],
+                                                  p_seg["blocks"], keep)})
+    out["segments"] = segs
+    if "shared_attn" in delta:
+        out["shared_attn"] = _pad_to(delta["shared_attn"],
+                                     parent_template["shared_attn"])
+    for k in ("embed", "final_norm", "lm_head"):
+        if k in delta:
+            out[k] = delta[k]
+    return out

@@ -1,0 +1,30 @@
+"""Simple epoch-shuffled batch iterator (host-side, numpy)."""
+from __future__ import annotations
+
+from typing import Dict, Iterator
+
+import numpy as np
+
+
+def batches(data: Dict[str, np.ndarray], batch_size: int, *,
+            seed: int = 0, epochs: int = None,
+            drop_remainder: bool = True) -> Iterator[Dict]:
+    n = len(data["y"])
+    rng = np.random.RandomState(seed)
+    epoch = 0
+    while epochs is None or epoch < epochs:
+        perm = rng.permutation(n)
+        end = n - (n % batch_size) if drop_remainder else n
+        if end == 0:
+            end = n
+        for i in range(0, end, batch_size):
+            idx = perm[i:i + batch_size]
+            yield {k: v[idx] for k, v in data.items()}
+        epoch += 1
+
+
+def eval_batches(data: Dict[str, np.ndarray],
+                 batch_size: int) -> Iterator[Dict]:
+    n = len(data["y"])
+    for i in range(0, n, batch_size):
+        yield {k: v[i:i + batch_size] for k, v in data.items()}

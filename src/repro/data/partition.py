@@ -1,0 +1,48 @@
+"""Client partitions: IID and the paper's non-IID scheme (imbalance 0.8:
+80% of each worker's data from one class, 20% uniform from the rest)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+
+def iid_partition(n: int, n_workers: int, seed: int = 0) -> List[np.ndarray]:
+    rng = np.random.RandomState(seed)
+    return [np.sort(a) for a in np.array_split(rng.permutation(n), n_workers)]
+
+
+def noniid_partition(labels: np.ndarray, n_workers: int,
+                     imbalance: float = 0.8, seed: int = 0
+                     ) -> List[np.ndarray]:
+    """Per worker: `imbalance` fraction from a single dominant class, the
+    rest uniform over the other classes (paper §IV-A)."""
+    rng = np.random.RandomState(seed)
+    n = len(labels)
+    n_classes = int(labels.max()) + 1
+    per_worker = n // n_workers
+    by_class = [list(rng.permutation(np.where(labels == c)[0]))
+                for c in range(n_classes)]
+    # phase 1: reserve every worker's dominant allocation first, so later
+    # workers' dominant pools aren't drained by earlier workers' uniform
+    # remainders
+    want_dom = int(per_worker * imbalance)
+    takes = []
+    for k in range(n_workers):
+        dom = k % n_classes
+        take = [by_class[dom].pop() for _ in range(want_dom)
+                if by_class[dom]]
+        takes.append(take)
+    # phase 2: fill remainders uniformly over the other classes
+    for k, take in enumerate(takes):
+        dom = k % n_classes
+        pool = [c for c in range(n_classes) if c != dom]
+        while len(take) < per_worker and any(by_class[c] for c in pool):
+            c = pool[rng.randint(len(pool))]
+            if by_class[c]:
+                take.append(by_class[c].pop())
+    return [np.sort(np.asarray(t, np.int64)) for t in takes]
+
+
+def subset(data: Dict[str, np.ndarray], idx: np.ndarray) -> Dict:
+    return {k: v[idx] for k, v in data.items()}

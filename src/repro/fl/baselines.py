@@ -1,0 +1,83 @@
+"""Baselines the paper compares against: standard FedAvg (one global model
+for every client) and Independent Learning (IL — local training only)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.configs.paper_cnn import CNNConfig
+from repro.core.aggregate import aggregate, apply_server_update
+from repro.core.fairness import accuracy_fairness, round_time_fairness
+from repro.core.latency import LatencyTable, submodel_bytes
+from repro.core.submodel import full_spec
+from repro.fl.client import ClientInfo, evaluate, local_train
+
+
+class FedAvgServer:
+    """Standard FL [40]: every client trains the full parent model."""
+
+    def __init__(self, cfg: CNNConfig, params, clients: List[ClientInfo],
+                 client_data: List[Dict], test_data: List[Dict], fl_cfg):
+        self.cfg = cfg
+        self.params = params
+        self.clients = clients
+        self.client_data = client_data
+        self.test_data = test_data
+        self.fl = fl_cfg
+        self.latency = LatencyTable(
+            cfg, depth_choices=tuple(
+                range(1, max(b for _, b in cfg.stages) + 1)),
+            batch_size=fl_cfg.batch_size)
+        self.round_idx = 0
+        self.history: List[Dict] = []
+
+    def run_round(self) -> Dict:
+        spec = full_spec(self.cfg)
+        deltas, sizes, accs, times = [], [], [], []
+        for k, client in enumerate(self.clients):
+            delta, n_steps = local_train(
+                self.params, self.cfg, self.client_data[k],
+                epochs=self.fl.local_epochs, batch_size=self.fl.batch_size,
+                lr=self.fl.lr, momentum=self.fl.momentum,
+                seed=self.fl.seed * 7 + self.round_idx * 131 + k)
+            acc = evaluate(apply_server_update(self.params, delta), self.cfg,
+                           self.test_data[k])
+            deltas.append(delta)
+            sizes.append(client.n_samples)
+            accs.append(acc)
+            prof = self.latency.fleet[client.device]
+            t = n_steps * self.latency.lookup(spec, client.device) + \
+                prof.comm_latency(2 * submodel_bytes(self.cfg, spec))
+            times.append(t)
+        self.params = apply_server_update(self.params, aggregate(deltas,
+                                                                 sizes))
+        rec = {"round": self.round_idx, "accs": accs,
+               "fairness": accuracy_fairness(accs),
+               "timing": round_time_fairness(times)}
+        self.history.append(rec)
+        self.round_idx += 1
+        return rec
+
+    def global_accuracy(self, data: Dict) -> float:
+        return evaluate(self.params, self.cfg, data)
+
+
+def independent_learning(cfg: CNNConfig, init_params,
+                         clients: List[ClientInfo], client_data: List[Dict],
+                         test_data: List[Dict], *, rounds: int,
+                         fl_cfg) -> List[float]:
+    """IL baseline (Table II): same local budget, no aggregation."""
+    accs = []
+    for k, client in enumerate(clients):
+        p = init_params
+        for r in range(rounds):
+            delta, _ = local_train(
+                p, cfg, client_data[k], epochs=fl_cfg.local_epochs,
+                batch_size=fl_cfg.batch_size, lr=fl_cfg.lr,
+                momentum=fl_cfg.momentum, seed=fl_cfg.seed + r * 31 + k)
+            p = apply_server_update(p, delta)
+        accs.append(evaluate(p, cfg, test_data[k]))
+    return accs

@@ -1,0 +1,83 @@
+"""FL client: local training of a (sub)model + profile reporting (Alg. 4,
+worker side). Train-step compilation is cached per submodel structure."""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_cnn import CNNConfig
+from repro.data.loader import batches, eval_batches
+from repro.models import cnn
+from repro.optim import sgd, apply_updates, clip_by_global_norm
+
+
+@dataclasses.dataclass
+class ClientInfo:
+    cid: int
+    device: str               # DeviceProfile name
+    quality: int              # dominant data-quality level
+    n_samples: int
+    latency_bound: float      # l_k in Alg. 1 (seconds per local step)
+
+
+_STEP_CACHE: Dict[Tuple, callable] = {}
+
+
+def _train_step(cfg_key, cfg: CNNConfig, lr: float, momentum: float):
+    key = ("cnn_train", cfg_key, lr, momentum)
+    if key not in _STEP_CACHE:
+        opt = sgd(lr, momentum=momentum)
+
+        @jax.jit
+        def step(params, opt_state, batch):
+            def loss(p):
+                return cnn.loss_fn(p, cfg, batch)
+            (l, m), g = jax.value_and_grad(loss, has_aux=True)(params)
+            g, _ = clip_by_global_norm(g, 5.0)
+            upd, opt_state = opt.update(g, opt_state, params)
+            return apply_updates(params, upd), opt_state, l, m
+        _STEP_CACHE[key] = (opt, step)
+    return _STEP_CACHE[key]
+
+
+def _cfg_key(cfg: CNNConfig):
+    return (cfg.stages, cfg.in_channels, cfg.n_classes, cfg.stem_channels)
+
+
+def local_train(params, cfg: CNNConfig, data: Dict[str, np.ndarray], *,
+                epochs: int = 1, batch_size: int = 32, lr: float = 0.05,
+                momentum: float = 0.9, seed: int = 0):
+    """Runs E local epochs; returns (delta = ω_0 − ω_E, n_steps)."""
+    opt, step = _train_step(_cfg_key(cfg), cfg, lr, momentum)
+    opt_state = opt.init(params)
+    p = params
+    n_steps = 0
+    for batch in batches(data, batch_size, seed=seed, epochs=epochs):
+        b = {"x": jnp.asarray(batch["x"]), "y": jnp.asarray(batch["y"])}
+        p, opt_state, _, _ = step(p, opt_state, b)
+        n_steps += 1
+    delta = jax.tree.map(lambda a, b_: a - b_, params, p)
+    return delta, n_steps
+
+
+def evaluate(params, cfg: CNNConfig, data: Dict[str, np.ndarray],
+             batch_size: int = 128, *, depth=None) -> float:
+    key = ("cnn_eval", _cfg_key(cfg), depth)
+    if key not in _STEP_CACHE:
+        @jax.jit
+        def fwd(p, x):
+            logits, _ = cnn.forward(p, cfg, x, depth=depth)
+            return jnp.argmax(logits, -1)
+        _STEP_CACHE[key] = fwd
+    fwd = _STEP_CACHE[key]
+    correct = total = 0
+    for b in eval_batches(data, batch_size):
+        pred = np.asarray(fwd(params, jnp.asarray(b["x"])))
+        correct += int((pred == b["y"]).sum())
+        total += len(b["y"])
+    return correct / max(total, 1)

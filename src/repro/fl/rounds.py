@@ -1,0 +1,101 @@
+"""Experiment drivers: build a heterogeneous FL population (devices ×
+quality × distribution) and run CFL / FedAvg / IL under identical budgets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.paper_cnn import CNNConfig
+from repro.core.latency import (EDGE_FLEET, LatencyTable, fleet_for_workers,
+                                train_step_latency)
+from repro.core.submodel import full_spec
+from repro.data import (make_dataset, mixed_quality_dataset, apply_quality,
+                        iid_partition, noniid_partition, subset,
+                        train_test_split)
+from repro.fl.client import ClientInfo
+from repro.fl.server import CFLConfig, CFLServer
+from repro.fl.baselines import FedAvgServer, independent_learning
+from repro.models import cnn
+
+
+def build_population(cfg: CNNConfig, *, kind: str, n_workers: int,
+                     n_samples: int, heterogeneity: str, seed: int = 0
+                     ) -> Tuple[List[ClientInfo], List[Dict], List[Dict]]:
+    """heterogeneity: 'quality' | 'distribution' | 'both' | 'none'."""
+    raw = make_dataset(kind, n_samples, seed=seed)
+    train, test = train_test_split(raw, 0.25, seed)
+    rng = np.random.RandomState(seed)
+
+    if heterogeneity in ("distribution", "both"):
+        parts = noniid_partition(train["y"], n_workers, 0.8, seed)
+        test_parts = noniid_partition(test["y"], n_workers, 0.8, seed + 1)
+    else:
+        parts = iid_partition(len(train["y"]), n_workers, seed)
+        test_parts = iid_partition(len(test["y"]), n_workers, seed + 1)
+
+    fleet = fleet_for_workers(n_workers)
+    clients, cdata, tdata = [], [], []
+    for k in range(n_workers):
+        ctr = subset(train, parts[k])
+        cte = subset(test, test_parts[k])
+        q = 0
+        if heterogeneity in ("quality", "both"):
+            q = int(rng.randint(0, 5))
+            ctr = dict(ctr, x=apply_quality(ctr["x"], q))
+            cte = dict(cte, x=apply_quality(cte["x"], q))
+        prof = fleet[k]
+        full_lat = train_step_latency(cfg, full_spec(cfg), prof)
+        # heterogeneity in latency budgets: weak devices get tight bounds
+        med = np.median([train_step_latency(cfg, full_spec(cfg), p)
+                         for p in fleet])
+        bound = float(min(full_lat, med) * 1.05)
+        clients.append(ClientInfo(cid=k, device=prof.name, quality=q,
+                                  n_samples=len(ctr["y"]),
+                                  latency_bound=bound))
+        cdata.append(ctr)
+        tdata.append(cte)
+    return clients, cdata, tdata
+
+
+def run_cfl(cfg: CNNConfig, *, kind="synthmnist", n_workers=8,
+            n_samples=4000, heterogeneity="quality", rounds=5,
+            fl_cfg: Optional[CFLConfig] = None, seed=0):
+    fl_cfg = fl_cfg or CFLConfig(n_workers=n_workers, seed=seed)
+    clients, cdata, tdata = build_population(
+        cfg, kind=kind, n_workers=n_workers, n_samples=n_samples,
+        heterogeneity=heterogeneity, seed=seed)
+    params = cnn.init_params(jax.random.PRNGKey(seed), cfg)
+    server = CFLServer(cfg, params, clients, cdata, tdata, fl_cfg)
+    for _ in range(rounds):
+        server.run_round()
+    return server
+
+
+def run_fedavg(cfg: CNNConfig, *, kind="synthmnist", n_workers=8,
+               n_samples=4000, heterogeneity="quality", rounds=5,
+               fl_cfg: Optional[CFLConfig] = None, seed=0):
+    fl_cfg = fl_cfg or CFLConfig(n_workers=n_workers, seed=seed)
+    clients, cdata, tdata = build_population(
+        cfg, kind=kind, n_workers=n_workers, n_samples=n_samples,
+        heterogeneity=heterogeneity, seed=seed)
+    params = cnn.init_params(jax.random.PRNGKey(seed), cfg)
+    server = FedAvgServer(cfg, params, clients, cdata, tdata, fl_cfg)
+    for _ in range(rounds):
+        server.run_round()
+    return server
+
+
+def run_il(cfg: CNNConfig, *, kind="synthmnist", n_workers=8,
+           n_samples=4000, heterogeneity="quality", rounds=5,
+           fl_cfg: Optional[CFLConfig] = None, seed=0) -> List[float]:
+    fl_cfg = fl_cfg or CFLConfig(n_workers=n_workers, seed=seed)
+    clients, cdata, tdata = build_population(
+        cfg, kind=kind, n_workers=n_workers, n_samples=n_samples,
+        heterogeneity=heterogeneity, seed=seed)
+    params = cnn.init_params(jax.random.PRNGKey(seed), cfg)
+    return independent_learning(cfg, params, clients, cdata, tdata,
+                                rounds=rounds, fl_cfg=fl_cfg)

@@ -1,0 +1,132 @@
+"""CFL server (Alg. 4): submodel sampling -> local training -> alignment +
+aggregation -> search-helper update, with per-round latency/fairness
+accounting from the device profiles."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.configs.paper_cnn import CNNConfig
+from repro.core.aggregate import aggregate, aggregate_coverage, \
+    apply_server_update
+from repro.core.latency import LatencyTable, fleet_for_workers
+from repro.core.predictor import AccuracyPredictor
+from repro.core.search import SearchConfig, search_all_workers, random_spec
+from repro.core.submodel import (SubmodelSpec, coverage_cnn, extract_cnn,
+                                 full_spec, pad_cnn, sub_cnn_config)
+from repro.core.fairness import accuracy_fairness, round_time_fairness
+from repro.core.latency import submodel_bytes
+from repro.fl.client import ClientInfo, evaluate, local_train
+
+
+@dataclasses.dataclass
+class CFLConfig:
+    n_workers: int = 8
+    local_epochs: int = 1
+    batch_size: int = 32
+    lr: float = 0.05
+    momentum: float = 0.9
+    search: SearchConfig = dataclasses.field(default_factory=SearchConfig)
+    coverage_norm: bool = False     # beyond-paper aggregation variant
+    latency_bound_frac: float = 0.6  # l_k = frac * full-model latency
+    seed: int = 0
+
+
+class CFLServer:
+    def __init__(self, cfg: CNNConfig, params, clients: List[ClientInfo],
+                 client_data: List[Dict], test_data: List[Dict],
+                 fl_cfg: CFLConfig):
+        self.cfg = cfg
+        self.params = params
+        self.clients = clients
+        self.client_data = client_data
+        self.test_data = test_data
+        self.fl = fl_cfg
+        self.predictor = AccuracyPredictor(cfg, seed=fl_cfg.seed)
+        self.latency = LatencyTable(
+            cfg, depth_choices=tuple(
+                range(1, max(b for _, b in cfg.stages) + 1)),
+            batch_size=fl_cfg.batch_size)
+        self.round_idx = 0
+        self.history: List[Dict] = []
+        self._rng = np.random.RandomState(fl_cfg.seed)
+
+    # ------------------------------------------------------------------
+    def sample_submodels(self) -> List[SubmodelSpec]:
+        """Alg. 1 + helper filtering; round 0 uses random feasible specs
+        (predictor untrained)."""
+        bounds = [c.latency_bound for c in self.clients]
+        if self.round_idx == 0:
+            specs = []
+            import random as _r
+            for k, c in enumerate(self.clients):
+                rng = _r.Random(self.fl.seed * 131 + k)
+                cand = [random_spec(self.cfg, rng) for _ in range(32)]
+                feas = [s for s in cand
+                        if self.latency.lookup(s, c.device) < c.latency_bound]
+                specs.append(feas[0] if feas else SubmodelSpec(
+                    tuple(1 for _ in self.cfg.stages),
+                    tuple(min(self.cfg.elastic_widths)
+                          for _ in self.cfg.stages)))
+            return specs
+        return search_all_workers(
+            self.cfg, self.predictor, self.latency,
+            devices=[c.device for c in self.clients],
+            qualities=[c.quality for c in self.clients],
+            latency_bounds=bounds, search_cfg=self.fl.search,
+            seed=self.fl.seed + self.round_idx)
+
+    # ------------------------------------------------------------------
+    def run_round(self) -> Dict:
+        specs = self.sample_submodels()
+        deltas, covs, sizes, accs, times = [], [], [], [], []
+        for k, (client, spec) in enumerate(zip(self.clients, specs)):
+            sub_cfg = sub_cnn_config(self.cfg, spec)
+            sub_params = extract_cnn(self.params, self.cfg, spec)
+            delta, n_steps = local_train(
+                sub_params, sub_cfg, self.client_data[k],
+                epochs=self.fl.local_epochs, batch_size=self.fl.batch_size,
+                lr=self.fl.lr, momentum=self.fl.momentum,
+                seed=self.fl.seed * 7 + self.round_idx * 131 + k)
+            acc = evaluate(apply_server_update(sub_params, delta), sub_cfg,
+                           self.test_data[k])
+            deltas.append(pad_cnn(delta, self.params, self.cfg, spec))
+            if self.fl.coverage_norm:
+                covs.append(coverage_cnn(self.params, self.cfg, spec))
+            sizes.append(client.n_samples)
+            accs.append(acc)
+            # simulated wall-clock: compute + update exchange
+            prof = self.latency.fleet[client.device]
+            t = n_steps * self.latency.lookup(spec, client.device) + \
+                prof.comm_latency(2 * submodel_bytes(self.cfg, spec))
+            times.append(t)
+
+        if self.fl.coverage_norm:
+            delta_t = aggregate_coverage(deltas, covs, sizes)
+        else:
+            delta_t = aggregate(deltas, sizes)
+        self.params = apply_server_update(self.params, delta_t)
+
+        # search-helper update (Alg. 2)
+        self.predictor.add_profiles(
+            [(spec, c.quality, acc)
+             for spec, c, acc in zip(specs, self.clients, accs)])
+        mae = self.predictor.train_round(epochs=4)
+
+        rec = {
+            "round": self.round_idx,
+            "specs": [s.genes() for s in specs],
+            "accs": accs,
+            "fairness": accuracy_fairness(accs),
+            "timing": round_time_fairness(times),
+            "predictor_mae": mae,
+        }
+        self.history.append(rec)
+        self.round_idx += 1
+        return rec
+
+    def global_accuracy(self, data: Dict) -> float:
+        return evaluate(self.params, self.cfg, data)

@@ -1,0 +1,6 @@
+from repro.kernels.elastic_matmul import elastic_matmul
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.ops import (attention_op, ssd_op, elastic_mlp_matmul,
+                               model_kernels)
+from repro.kernels import ref

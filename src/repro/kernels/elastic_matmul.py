@@ -1,0 +1,84 @@
+"""Elastic-width matmul — the CFL hot-spot as a Pallas TPU kernel.
+
+CFL submodels keep a *prefix* of output channels (DESIGN.md §5). On GPU
+the paper slices channels (a gather); on TPU arbitrary slicing breaks MXU
+tiling, so we adapt: output columns are blocked in BN=128-lane tiles and
+the kernel *skips whole tiles* past the active width `k_active` (zero
+write, no matmul issued) and masks the boundary tile. Compute therefore
+scales with the submodel width while weights stay parent-resident —
+submodel switches (per FL round / per RL-gate decision) need no
+re-layout and no recompile (`k_active` is a runtime scalar).
+
+Grid: (M/BM, N/BN, K/BK), K innermost (sequential accumulation in VMEM
+scratch). dims (i, j) are parallel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(k_active_ref, x_ref, w_ref, o_ref, acc_ref, *, bn, bk, nk):
+    j = pl.program_id(1)
+    kk = pl.program_id(2)
+    k_active = k_active_ref[0]
+    col0 = j * bn
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # whole-tile skip: only accumulate if this column tile intersects the
+    # active prefix
+    @pl.when(col0 < k_active)
+    def _accum():
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[...], w_ref[...],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(kk == nk - 1)
+    def _write():
+        cols = col0 + jax.lax.broadcasted_iota(jnp.int32, acc_ref.shape, 1)
+        mask = cols < k_active
+        o_ref[...] = jnp.where(mask, acc_ref[...], 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "interpret"))
+def elastic_matmul(x, w, k_active, *, bm=128, bn=128, bk=128,
+                   interpret=True):
+    """y[m, n] = sum_k x[m,k] w[k,n] for n < k_active else 0.
+
+    x: (M, K), w: (K, N), k_active: int32 scalar (dynamic).
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2
+    bm = min(bm, M)
+    bn = min(bn, N)
+    bk = min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0
+    nk = K // bk
+    grid = (M // bm, N // bn, nk)
+    k_active = jnp.asarray(k_active, jnp.int32).reshape(1)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, bn=bn, bk=bk, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(k_active, x, w)

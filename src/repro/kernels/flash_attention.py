@@ -1,0 +1,124 @@
+"""Flash attention (Pallas TPU): causal / sliding-window / softcap / GQA.
+
+TPU adaptation of the standard flash algorithm:
+  * grid (B*H, Sq/BQ, Sk/BK), KV innermost (sequential); online-softmax
+    accumulators (m, l, acc) live in VMEM scratch across KV steps;
+  * causal and sliding-window *whole-block skipping* via `pl.when` — for a
+    window `w`, compute is O(S·w) instead of O(S²) (this is what makes
+    gemma2 local layers and zamba2@500k affordable);
+  * BQ/BK default 128/256: (BQ,D)+(BK,D)+(BQ,BK) fp32 tiles stay well
+    under VMEM (~16 MB) for D ≤ 256 while filling the 128-lane MXU.
+  * logit softcap (gemma2) folded into the score tile before masking.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bq, bk, nk, causal, window, cap, scale):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    q0 = qi * bq
+    k0 = ki * bk
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # whole-block skip (causal upper triangle / outside sliding window)
+    contributes = True
+    if causal:
+        contributes = k0 <= q0 + bq - 1
+    if window is not None:
+        contributes = jnp.logical_and(
+            contributes, k0 + bk - 1 >= q0 - (window - 1))
+
+    @pl.when(contributes)
+    def _step():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if cap is not None:
+            s = cap * jnp.tanh(s / cap)
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, qpos - kpos < window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, 1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _write():
+        o_ref[0, :, 0, :] = (acc_ref[...] /
+                             jnp.maximum(l_ref[...], 1e-30)).astype(
+                                 o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "cap", "scale", "bq", "bk",
+                              "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    cap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    bq: int = 128, bk: int = 256, interpret: bool = True):
+    """q: (B,Sq,H,D) k,v: (B,Sk,KV,D) -> (B,Sq,H,D)."""
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0
+    nk = Sk // bk
+    grid = (B * H, Sq // bq, nk)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, nk=nk, causal=causal,
+                          window=window, cap=cap, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, D),
+                         lambda bh, qi, ki: (bh // H, qi, bh % H, 0)),
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda bh, qi, ki: (bh // H, ki, (bh % H) // G, 0)),
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda bh, qi, ki: (bh // H, ki, (bh % H) // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D),
+                               lambda bh, qi, ki: (bh // H, qi, bh % H, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,49 @@
+"""Jit'd kernel wrappers with model-facing signatures.
+
+``model_kernels(interpret=...)`` returns the `kernels` dict consumed by
+repro.models.transformer.forward — plug-in replacements for the XLA
+reference paths. On this CPU container kernels run in interpret mode
+(functional validation); on TPU set interpret=False.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.elastic_matmul import elastic_matmul
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def attention_op(q, k, v, *, causal=True, window=None, cap=None,
+                 interpret=True, bq=128, bk=256):
+    """(B,Sq,H,D)x(B,Sk,KV,D) -> (B,Sq,H,D); contract matches
+    models.attention.chunked_attention."""
+    return flash_attention(q, k, v, causal=causal, window=window, cap=cap,
+                           bq=bq, bk=bk, interpret=interpret)
+
+
+def ssd_op(xh, dt, A, Bm, Cm, chunk, *, interpret=True):
+    """Contract matches models.ssm.ssd_chunked (returns (y, None) — the
+    final state is only used by decode, which has its own path)."""
+    y = ssd_scan(xh, dt.astype(jnp.float32), A, Bm, Cm, chunk=chunk,
+                 interpret=interpret)
+    return y, None
+
+
+def elastic_mlp_matmul(x, w, k_active, *, interpret=True):
+    """(…, K) @ (K, N) with active output prefix k_active (CFL width)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = elastic_matmul(x2, w, k_active, interpret=interpret)
+    return y.reshape(*lead, w.shape[-1])
+
+
+def model_kernels(interpret: bool = True):
+    return {
+        "attention": functools.partial(attention_op, interpret=interpret),
+        "ssd": functools.partial(ssd_op, interpret=interpret),
+    }

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def elastic_matmul_ref(x, w, k_active: int):
+    """y = x @ w with only the first k_active output columns active."""
+    y = x @ w
+    mask = (jnp.arange(w.shape[-1]) < k_active)
+    return y * mask.astype(y.dtype)[None, :]
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        cap: Optional[float] = None,
+                        scale: Optional[float] = None):
+    """Naive full-softmax attention. q:(B,Sq,H,D) k,v:(B,Sk,KV,D)."""
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qr = q.reshape(B, Sq, KV, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qr.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None, None], s, -2.0 ** 30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def ssd_ref(xh, dt, A, Bm, Cm):
+    """Sequential (timestep-by-timestep) SSD recurrence — the clearest
+    oracle, independent of any chunking scheme.
+
+    xh: (B,S,H,P)  dt: (B,S,H)  A: (H,)  Bm/Cm: (B,S,G,N).
+    Returns (y (B,S,H,P), final state (B,H,P,N)).
+    """
+    B, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    xf = xh.astype(jnp.float32)
+
+    def step(h, t):
+        dA = jnp.exp(dtf[:, t] * A[None, :])                    # (B,H)
+        h = h * dA[:, :, None, None] + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dtf[:, t], xf[:, t], Bh[:, t])
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ch[:, t])
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    h, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1).astype(xh.dtype), h

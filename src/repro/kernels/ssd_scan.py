@@ -1,0 +1,99 @@
+"""Mamba2 SSD chunk scan (Pallas TPU).
+
+One grid cell = one (batch, head) × one chunk; the chunk axis is the
+innermost *sequential* grid dimension and the SSM state h (P×N, fp32)
+persists in VMEM scratch across chunks — the TPU-native formulation of
+SSD: intra-chunk compute is dense (Q×Q decay-masked score matmul on the
+MXU), inter-chunk is a rank-preserving state pass, no HBM round-trip for
+the state.
+
+Block shapes: x (Q,P), B/C (Q,N), dt (Q,) with Q=chunk (≤256), P=head_dim
+(64..128), N=d_state (64..128) — everything fits VMEM with room for
+double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *, q):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)       # (Q,P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)        # (Q,)
+    A = a_ref[0]                                    # scalar
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)      # (Q,N)
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)      # (Q,N)
+
+    dA = dt * A                                     # (Q,) negative
+    cum = jnp.cumsum(dA)
+    diff = cum[:, None] - cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    M = jnp.where(tri, jnp.exp(diff), 0.0)
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    xdt = x * dt[:, None]
+    y_intra = jax.lax.dot_general(CB * M, xdt, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    h = h_ref[...]                                   # (P,N)
+    y_inter = jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, h, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    decay_end = jnp.exp(cum[-1] - cum)               # (Q,)
+    S_c = jax.lax.dot_general(xdt * decay_end[:, None], Bm,
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P,N)
+    h_ref[...] = h * jnp.exp(cum[-1]) + S_c
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(xh, dt, A, Bm, Cm, chunk: int = 128, *, interpret: bool = True):
+    """xh: (B,S,H,P)  dt: (B,S,H)  A: (H,)  Bm/Cm: (B,S,G,N).
+
+    Returns y (B,S,H,P). (Final state stays in scratch; the training path
+    doesn't need it — decode uses ssm.mamba_decode.)
+    """
+    B, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert S % chunk == 0
+    nc = S // chunk
+    rep = H // G
+    if rep != 1:
+        Bm = jnp.repeat(Bm, rep, axis=2)
+        Cm = jnp.repeat(Cm, rep, axis=2)
+    grid = (B * H, nc)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, q=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P),
+                         lambda bh, ci: (bh // H, ci, bh % H, 0)),
+            pl.BlockSpec((1, chunk, 1),
+                         lambda bh, ci: (bh // H, ci, bh % H)),
+            pl.BlockSpec((1,), lambda bh, ci: (bh % H,)),
+            pl.BlockSpec((1, chunk, 1, N),
+                         lambda bh, ci: (bh // H, ci, bh % H, 0)),
+            pl.BlockSpec((1, chunk, 1, N),
+                         lambda bh, ci: (bh // H, ci, bh % H, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, P),
+                               lambda bh, ci: (bh // H, ci, bh % H, 0)),
+        out_shape=jax.ShapeDtypeStruct(xh.shape, xh.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(xh, dt, A, Bm, Cm)

@@ -1,0 +1,2 @@
+# NOTE: keep this file free of jax imports — dryrun.py must set
+# XLA_FLAGS before jax initializes.

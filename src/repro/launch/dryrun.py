@@ -1,0 +1,187 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=" +
+                           os.environ.get("DRYRUN_DEVICES", "512")).strip()
+# ^ MUST happen before any jax import (jax locks device count on init).
+
+# Multi-pod dry-run: prove every (architecture × input-shape × mesh)
+# combination lowers, SPMD-partitions, and compiles on the production mesh —
+# and extract the roofline terms from the compiled artifact.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-8b \
+#       --shape train_4k --mesh single
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+#       --out benchmarks/results/dryrun.jsonl
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_config, supported_pairs
+from repro.launch import steps as S
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (build_roofline, model_flops_for,
+                                   parse_collectives)
+from repro.sharding import (cache_shardings, input_shardings,
+                            opt_state_shardings, params_shardings)
+
+REPLICATED = None  # filled per-mesh
+
+
+def _rep(mesh):
+    return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+
+# train combos whose activations exceed 16 GB HBM at full per-device
+# batch — they run with 2-way gradient-accumulation microbatching
+# (EXPERIMENTS.md §Perf H3)
+MICROBATCH = {"gemma2-9b": 4, "deepseek-v2-lite-16b": 2, "zamba2-1.2b": 2}
+
+
+def lower_combo(arch: str, shape_name: str, mesh, *, remat: bool = True,
+                microbatch: Optional[int] = None, extra_tag: str = ""):
+    """Returns (lowered, compiled, meta) for one combination."""
+    cfg = get_config(arch)
+    shp = INPUT_SHAPES[shape_name]
+    rep = _rep(mesh)
+    if shape_name == "long_500k":
+        from repro.configs.archs import long_context_variant
+        cfg = long_context_variant(cfg)
+    if microbatch is None:
+        microbatch = MICROBATCH.get(arch, 1) if shp.kind == "train" else 1
+
+    p_spec = S.params_spec(cfg)
+    p_sh = params_shardings(cfg, mesh, p_spec)
+
+    if shp.kind == "train":
+        o_spec = S.opt_state_spec(cfg, p_spec)
+        o_sh = opt_state_shardings(cfg, mesh, o_spec, p_spec)
+        b_spec = S.batch_spec(cfg, shape_name)
+        b_sh = input_shardings(cfg, mesh, b_spec, shp.global_batch)
+        step, _ = S.make_train_step(cfg, remat=remat, microbatch=microbatch)
+        metrics_sh = {"loss": rep, "ce": rep, "aux": rep}
+        jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, metrics_sh),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(p_spec, o_spec, b_spec)
+    elif shp.kind == "prefill":
+        b_spec = S.batch_spec(cfg, shape_name)
+        b_sh = input_shardings(cfg, mesh, b_spec, shp.global_batch)
+        step = S.make_prefill_step(cfg)
+        lowered = jax.jit(step, in_shardings=(p_sh, b_sh)).lower(
+            p_spec, b_spec)
+    else:  # decode
+        c_spec = S.cache_spec(cfg, shape_name)
+        c_sh = cache_shardings(cfg, mesh, c_spec, shp.global_batch)
+        d_spec = S.decode_input_spec(cfg, shape_name)
+        t_sh = input_shardings(cfg, mesh,
+                               {"token": d_spec["token"]},
+                               shp.global_batch)["token"]
+        step = S.make_serve_step(cfg)
+        jitted = jax.jit(step, in_shardings=(p_sh, c_sh, t_sh, rep),
+                         out_shardings=(t_sh, c_sh), donate_argnums=(1,))
+        lowered = jitted.lower(p_spec, c_spec, d_spec["token"],
+                               d_spec["pos"])
+    return cfg, shp, lowered
+
+
+def run_combo(arch: str, shape_name: str, mesh_name: str,
+              *, remat: bool = True, verbose: bool = True) -> Dict:
+    multi = mesh_name == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = mesh.size
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        cfg, shp, lowered = lower_combo(arch, shape_name, mesh, remat=remat)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        text = compiled.as_text()
+    rl = build_roofline(arch, shape_name, mesh_name, chips, cost, text,
+                        model_flops_for(cfg, shape_name, shp.kind))
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": chips, "status": "ok",
+        "t_lower_s": round(t_lower, 2), "t_compile_s": round(t_compile, 2),
+        "mem_args_bytes": mem.argument_size_in_bytes,
+        "mem_out_bytes": mem.output_size_in_bytes,
+        "mem_temp_bytes": mem.temp_size_in_bytes,
+        "mem_alias_bytes": mem.alias_size_in_bytes,
+        "mem_peak_per_device": (mem.argument_size_in_bytes +
+                                mem.output_size_in_bytes +
+                                mem.temp_size_in_bytes -
+                                mem.alias_size_in_bytes),
+        "roofline": rl.to_dict(),
+    }
+    if verbose:
+        print(f"[{arch} × {shape_name} × {mesh_name}] ok "
+              f"lower={t_lower:.1f}s compile={t_compile:.1f}s "
+              f"mem/dev={rec['mem_peak_per_device']/1e9:.2f}GB "
+              f"flops/chip={rl.flops_per_chip:.3e} "
+              f"t_comp={rl.t_compute*1e3:.2f}ms t_mem={rl.t_memory*1e3:.2f}ms "
+              f"t_coll={rl.t_collective*1e3:.2f}ms -> {rl.bottleneck}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/dryrun.jsonl")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--force", action="store_true",
+                    help="re-run combos already in --out")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        combos = [(a, s, m) for (a, s) in supported_pairs() for m in meshes]
+    else:
+        assert args.arch and args.shape
+        combos = [(args.arch, args.shape, m) for m in meshes]
+
+    done = set()
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            for ln in f:
+                try:
+                    r = json.loads(ln)
+                    if r.get("status") == "ok":
+                        done.add((r["arch"], r["shape"], r["mesh"]))
+                except json.JSONDecodeError:
+                    pass
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+
+    failures = 0
+    with open(args.out, "a") as f:
+        for arch, shape, m in combos:
+            if (arch, shape, m) in done:
+                print(f"[{arch} × {shape} × {m}] cached, skip")
+                continue
+            try:
+                rec = run_combo(arch, shape, m,
+                                remat=not args.no_remat)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                failures += 1
+                rec = {"arch": arch, "shape": shape, "mesh": m,
+                       "status": "error", "error": repr(e),
+                       "trace": traceback.format_exc()[-2000:]}
+                print(f"[{arch} × {shape} × {m}] FAILED: {e!r}")
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+    print(f"done; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,430 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+Terms per (arch × shape × mesh), all in seconds (per-chip view — the HLO
+module after SPMD partitioning has per-device shapes):
+
+  compute    = dot_FLOPs_per_chip / peak_FLOP/s
+  memory     = traffic_bytes_per_chip / HBM_bw
+  collective = wire_bytes_per_chip / link_bw
+
+XLA's `cost_analysis()` visits `while` bodies once (no trip-count
+multiplication), which under scan-over-layers understates everything by
+~L×. We therefore parse `compiled.as_text()` ourselves:
+
+  * computations are split out; execution multipliers are propagated from
+    ENTRY through `while` loops (trip count = the s32 bound constant in the
+    loop condition — XLA canonicalises counted loops that way), `fusion`
+    `calls=`, and `to_apply=` edges;
+  * FLOPs: every `dot` op contributes 2 × |result| × K (K = product of the
+    lhs contracting dims), × its computation's multiplier;
+  * memory traffic: every top-level compute op (fusion/dot/copy/(dynamic-)
+    slice/scatter/gather/dus) contributes operand+result bytes — an
+    HBM↔VMEM upper-bound proxy (CPU-backend HLO fuses less than TPU);
+  * collectives: operand sizes of all-gather / all-reduce / reduce-scatter
+    / all-to-all / collective-permute, converted to wire bytes with ring
+    factors (all-reduce 2×, others 1×).
+
+All three terms are *estimates from the CPU-backend SPMD HLO*; they rank
+bottlenecks and guide the §Perf loop, they are not TPU timings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+# Ops that plausibly round-trip HBM after TPU fusion. Standalone
+# elementwise/shape ops (broadcast, iota, convert, reshape, transpose, pad,
+# reduce, concatenate) fuse into their consumers on TPU and are excluded —
+# their bytes are represented by the fusions/dots that consume them.
+_TRAFFIC_OPS = {"fusion", "dot", "convolution", "copy",
+                "dynamic-slice", "dynamic-update-slice", "scatter", "gather",
+                "sort", "select-and-scatter",
+                "rng-bit-generator"} | set(_COLLECTIVES)
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "while", "conditional", "call", "after-all",
+             "add-dependency", "partition-id", "replica-id"}
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?.*?\)?)\s+([a-z0-9\-$_]+)\(")
+_HDR_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-$]+)\s*\(.*\)\s*->")
+_WHILE_RE = re.compile(r"condition=%([\w.\-$]+),\s*body=%([\w.\-$]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%([\w.\-$]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class HloStats:
+    dot_flops: float
+    traffic_bytes: float
+    wire_bytes: float
+    op_bytes: Dict[str, float]
+    n_ops: Dict[str, int]
+    n_dots: int
+
+
+def parse_hlo(hlo_text: str) -> HloStats:
+    lines = hlo_text.splitlines()
+
+    # --- split into computations ------------------------------------------
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    cname = None
+    for ln in lines:
+        if "=" not in ln.split("(")[0]:
+            m = _HDR_RE.match(ln)
+            if m and "{" in ln:
+                cname = m.group(2)
+                comps[cname] = []
+                if m.group(1):
+                    entry = cname
+                continue
+        if cname is not None:
+            if ln.strip() == "}":
+                cname = None
+            else:
+                comps[cname].append(ln)
+    if entry is None and comps:
+        entry = list(comps)[-1]
+
+    # --- per-computation op scan ------------------------------------------
+    def_shape: Dict[str, str] = {}          # global name -> type str
+    comp_ops: Dict[str, List[Tuple[str, str, List[str], str]]] = {}
+    comp_edges: Dict[str, List[Tuple[str, str]]] = defaultdict(list)
+    cond_bound: Dict[str, int] = {}
+
+    for cn, body in comps.items():
+        ops = []
+        consts: List[int] = []
+        for ln in body:
+            for cm in _CONST_RE.finditer(ln):
+                consts.append(int(cm.group(1)))
+            dm = _DEF_RE.match(ln)
+            if not dm:
+                continue
+            name, type_str, op = dm.groups()
+            def_shape[name] = type_str
+            # operand names: inside the first (...) after op
+            try:
+                args_part = ln.split(op + "(", 1)[1]
+                depth = 1
+                out = []
+                for ch in args_part:
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            break
+                    out.append(ch)
+                args_str = "".join(out)
+            except IndexError:
+                args_str = ""
+            operands = re.findall(r"%([\w.\-$]+)", args_str)
+            ops.append((name, op, operands, ln))
+            wm = _WHILE_RE.search(ln)
+            if op == "while" and wm:
+                comp_edges[cn].append(("while", wm.group(1)))
+                comp_edges[cn].append(("while_body", wm.group(2)))
+                # remember which cond goes with which body
+                cond_bound.setdefault("__pair__" + wm.group(2), 0)
+                cond_bound["__cond_of__" + wm.group(2)] = 0  # placeholder
+                comp_edges[cn][-2] = ("while_cond:" + wm.group(2),
+                                      wm.group(1))
+            else:
+                for cm2 in _CALLS_RE.finditer(ln):
+                    comp_edges[cn].append(("call", cm2.group(1)))
+                bm = _BRANCH_RE.search(ln)
+                if bm:
+                    for b in re.findall(r"%([\w.\-$]+)", bm.group(1)):
+                        comp_edges[cn].append(("call", b))
+        comp_ops[cn] = ops
+        if consts:
+            cond_bound[cn] = max(consts)
+
+    # --- execution multipliers (topological relaxation over the call DAG:
+    # a computation may be reached from many parents, so children must be
+    # relaxed only after ALL parent contributions have accumulated) -------
+    def edge_factor(c, kind, child) -> float:
+        if kind == "while_body":
+            cond = next((cc for kk, cc in comp_edges.get(c, [])
+                         if kk == "while_cond:" + child), None)
+            return float(max(cond_bound.get(cond, 1), 1)) if cond else 1.0
+        if kind.startswith("while_cond:"):
+            body = kind.split(":", 1)[1]
+            return float(cond_bound.get(child, 1) + 1)
+        return 1.0
+
+    # DFS post-order from entry -> reverse = topological order
+    topo: List[str] = []
+    state: Dict[str, int] = {}
+
+    def dfs(c):
+        stack = [(c, iter(comp_edges.get(c, [])))]
+        state[c] = 1
+        while stack:
+            node, it = stack[-1]
+            advanced = False
+            for kind, child in it:
+                if child in comps and state.get(child, 0) == 0:
+                    state[child] = 1
+                    stack.append((child, iter(comp_edges.get(child, []))))
+                    advanced = True
+                    break
+            if not advanced:
+                topo.append(node)
+                state[node] = 2
+                stack.pop()
+
+    dfs(entry)
+    topo.reverse()
+
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    for c in topo:
+        for kind, child in comp_edges.get(c, []):
+            if child in comps:
+                mult[child] += mult[c] * edge_factor(c, kind, child)
+
+    # --- fusion parameter analysis: a fusion operand that is only consumed
+    # by (dynamic-)slice ops inside the fusion is *not* read in full — count
+    # the slice results instead (scan bodies slice K/V/params from the big
+    # stacked tensors; counting them full overstates traffic by ~100x) ----
+    param_read_bytes: Dict[str, Dict[int, float]] = {}
+    for cn, ops in comp_ops.items():
+        params: Dict[str, int] = {}
+        for name, op, operands, ln in ops:
+            if op == "parameter":
+                m = re.search(r"parameter\((\d+)\)", ln)
+                if m:
+                    params[name] = int(m.group(1))
+        if not params:
+            continue
+        usage: Dict[int, float] = {}
+        for pname, pidx in params.items():
+            sliced_bytes = 0.0
+            full = False
+            used = False
+            for name, op, operands, ln in ops:
+                if op == "parameter" or pname not in operands:
+                    continue
+                used = True
+                if op in ("dynamic-slice", "slice") and operands and \
+                        operands[0] == pname:
+                    sliced_bytes += _shape_bytes(def_shape.get(name, ""))
+                elif op == "dynamic-update-slice" and operands and \
+                        operands[0] == pname:
+                    # in-place region write: reads only the update
+                    pass
+                else:
+                    full = True
+            if used and not full:
+                usage[pidx] = sliced_bytes
+        if usage:
+            param_read_bytes[cn] = usage
+
+    # --- accumulate stats ----------------------------------------------------
+    dot_flops = 0.0
+    traffic = 0.0
+    wire = 0.0
+    op_bytes: Dict[str, float] = defaultdict(float)
+    n_ops: Dict[str, int] = defaultdict(int)
+    n_dots = 0
+
+    def _operand_bytes(op, name, operands, ln):
+        if op == "dynamic-update-slice":
+            # read update + write region (in-place)
+            upd = operands[1] if len(operands) > 1 else None
+            return 2.0 * _shape_bytes(def_shape.get(upd, "")) if upd else 0.0
+        if op in ("dynamic-slice", "slice", "gather"):
+            # reads only the sliced/gathered region (~ result size)
+            return float(_shape_bytes(def_shape.get(name, "")))
+        if op == "fusion":
+            cm = _CALLS_RE.search(ln)
+            usage = param_read_bytes.get(cm.group(1), {}) if cm else {}
+            total = 0.0
+            for i, o in enumerate(operands):
+                if i in usage:
+                    total += usage[i]
+                else:
+                    total += _shape_bytes(def_shape.get(o, ""))
+            return total
+        return float(sum(_shape_bytes(def_shape.get(o, ""))
+                         for o in operands))
+
+    for cn, ops in comp_ops.items():
+        f = mult.get(cn, 0.0)
+        if f <= 0.0:
+            continue
+        for name, op, operands, ln in ops:
+            if op in _SKIP_OPS:
+                continue
+            res_b = _shape_bytes(def_shape.get(name, ""))
+            opd_b = _operand_bytes(op, name, operands, ln)
+            if op == "dynamic-update-slice":
+                res_b = 0.0  # write already counted in _operand_bytes
+            if op in _TRAFFIC_OPS:
+                traffic += f * (res_b + opd_b)
+            if op in _COLLECTIVES:
+                b = opd_b if opd_b else float(res_b)
+                op_bytes[op] += f * b
+                n_ops[op] += 1
+                wire += f * b * _WIRE_FACTOR[op]
+            if op == "dot":
+                cd = _CDIMS_RE.search(ln)
+                k = 1
+                if cd and operands:
+                    lhs_dims = _shape_dims(def_shape.get(operands[0], ""))
+                    for di in cd.group(1).split(","):
+                        if di and int(di) < len(lhs_dims):
+                            k *= lhs_dims[int(di)]
+                res_elems = 1
+                for d in _shape_dims(def_shape.get(name, "")):
+                    res_elems *= d
+                dot_flops += f * 2.0 * res_elems * k
+                n_dots += 1
+            if op == "convolution":
+                # rough: 2 * |result| * (|lhs| / batch*spatial) — adequate
+                # for the CNN reference model only
+                res_elems = 1
+                for d in _shape_dims(def_shape.get(name, "")):
+                    res_elems *= d
+                lhs = _shape_dims(def_shape.get(operands[0], "")) if \
+                    operands else []
+                k = lhs[-1] if lhs else 1
+                dot_flops += f * 2.0 * res_elems * k * 9  # 3x3 kernel guess
+
+    return HloStats(dot_flops, traffic, wire, dict(op_bytes), dict(n_ops),
+                    n_dots)
+
+
+# backwards-compat alias used by tests
+def parse_collectives(hlo_text: str):
+    return parse_hlo(hlo_text)
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_wire_bytes: float
+    collective_op_bytes: Dict[str, float]
+    collective_ops: Dict[str, int]
+    model_flops: float                # analytic, global
+    xla_cost_flops: float = 0.0       # raw cost_analysis (unmultiplied)
+    xla_cost_bytes: float = 0.0
+    peak_flops: float = PEAK_FLOPS_BF16
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / self.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_wire_bytes / self.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops_per_chip * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "collective_wire_bytes": self.collective_wire_bytes,
+            "collective_op_bytes": self.collective_op_bytes,
+            "collective_ops": self.collective_ops,
+            "model_flops": self.model_flops,
+            "xla_cost_flops": self.xla_cost_flops,
+            "xla_cost_bytes": self.xla_cost_bytes,
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def model_flops_for(cfg, shape_name: str, kind: str) -> float:
+    """Analytic MODEL_FLOPS: 6*N_active*D for train, 2*N_active*D for a
+    forward-only (prefill) pass, 2*N_active*B for one decode token."""
+    from repro.configs.base import INPUT_SHAPES
+    s = INPUT_SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if kind == "train":
+        return 6.0 * n * s.global_batch * s.seq_len
+    if kind == "prefill":
+        return 2.0 * n * s.global_batch * s.seq_len
+    return 2.0 * n * s.global_batch      # decode: one token
+
+
+def build_roofline(arch: str, shape: str, mesh_name: str, chips: int,
+                   cost: Dict, hlo_text: str, model_flops: float) -> Roofline:
+    st = parse_hlo(hlo_text)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_chip=st.dot_flops,
+        bytes_per_chip=st.traffic_bytes,
+        collective_wire_bytes=st.wire_bytes,
+        collective_op_bytes=st.op_bytes,
+        collective_ops=st.n_ops,
+        model_flops=model_flops,
+        xla_cost_flops=float(cost.get("flops", 0.0)),
+        xla_cost_bytes=float(cost.get("bytes accessed", 0.0)),
+    )

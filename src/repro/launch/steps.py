@@ -1,0 +1,123 @@
+"""Step builders (train / prefill / serve) + ShapeDtypeStruct input specs.
+
+These are the functions the dry-run lowers for every (arch × shape × mesh)
+and the same functions examples/ drive for real on CPU-scale configs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig
+from repro.models import transformer as T
+from repro.optim import adamw, apply_updates
+
+PARAM_DTYPE = jnp.bfloat16
+ACT_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+def batch_spec(cfg: ModelConfig, shape_name: str,
+               act_dtype=ACT_DTYPE) -> Dict[str, jax.ShapeDtypeStruct]:
+    s = INPUT_SHAPES[shape_name]
+    B, S = s.global_batch, s.seq_len
+    if cfg.frontend == "audio":
+        out = {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), act_dtype)}
+        if s.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return out
+    out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.frontend == "vision":
+        out["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_tokens, cfg.d_model), act_dtype)
+    return out
+
+
+def params_spec(cfg: ModelConfig, dtype=PARAM_DTYPE):
+    return jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg,
+                                                dtype=dtype))
+
+
+def opt_state_spec(cfg: ModelConfig, params_shape=None):
+    opt = adamw(1e-4)
+    params_shape = params_shape or params_spec(cfg)
+    return jax.eval_shape(opt.init, params_shape)
+
+
+def cache_spec(cfg: ModelConfig, shape_name: str, dtype=ACT_DTYPE):
+    s = INPUT_SHAPES[shape_name]
+    return jax.eval_shape(lambda: T.init_decode_caches(
+        cfg, s.global_batch, s.seq_len, dtype=dtype))
+
+
+def decode_input_spec(cfg: ModelConfig, shape_name: str):
+    s = INPUT_SHAPES[shape_name]
+    return {"token": jax.ShapeDtypeStruct((s.global_batch, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, *, lr=3e-4, weight_decay=0.01,
+                    remat: bool = True, kernels=None, microbatch: int = 1):
+    """microbatch > 1: gradient accumulation over `microbatch` slices of
+    the global batch — halves/quarters activation memory at unchanged
+    math (the standard fit-into-HBM lever for the largest train combos)."""
+    opt = adamw(lr, weight_decay=weight_decay)
+
+    def loss_on(p, b):
+        l, m = T.loss_fn(p, cfg, b, remat=remat, kernels=kernels,
+                         activation_dtype=ACT_DTYPE)
+        return l, m
+
+    def train_step(params, opt_state, batch):
+        if microbatch == 1:
+            (l, metrics), grads = jax.value_and_grad(
+                loss_on, has_aux=True)(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda a: a.reshape((microbatch,
+                                     a.shape[0] // microbatch) + a.shape[1:]),
+                batch)
+
+            def body(acc, b):
+                g_acc, l_acc = acc
+                (l, _m), g = jax.value_and_grad(loss_on, has_aux=True)(
+                    params, b)
+                g_acc = jax.tree.map(lambda x, y: x + y, g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, l), _ = jax.lax.scan(body, (g0, jnp.zeros(())), mb)
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            l = l / microbatch
+            metrics = {"ce": l, "aux": jnp.zeros(())}
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": l, **metrics}
+
+    return train_step, opt
+
+
+def make_prefill_step(cfg: ModelConfig, *, kernels=None):
+    def prefill_step(params, batch):
+        logits, _ = T.forward(params, cfg, batch, kernels=kernels,
+                              activation_dtype=ACT_DTYPE)
+        # return only the last-position logits (what a server samples from)
+        return logits[:, -1, :]
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, caches, token, pos):
+        logits, caches = T.decode_step(params, cfg, caches, token, pos,
+                                       activation_dtype=ACT_DTYPE)
+        return logits, caches
+    return serve_step

@@ -1,0 +1,189 @@
+"""The paper's parent model: elastic residual CNN with layer-wise RL gates.
+
+Faithful to §III of the paper: a residual conv net (the paper builds on an
+OFA-MobileNetV3; we keep the same *elasticity contract* — elastic depth per
+residual stage, elastic width per layer, SkipNet-style RL gates per block)
+trained with a hybrid supervised + REINFORCE objective.
+
+Layout: NHWC, GroupNorm instead of BatchNorm (BN statistics do not
+aggregate across FL clients — DESIGN.md §8).
+
+Width slicing convention: channels are kept as a *prefix* in parent order,
+so Alg. 3's "sort channels back then zero-pad" is the identity sort +
+suffix-pad (see core/submodel.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_cnn import CNNConfig
+from repro.models.layers import groupnorm
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return {"w": jax.random.normal(key, (kh, kw, cin, cout)) /
+            math.sqrt(fan_in), "b": jnp.zeros((cout,))}
+
+
+def _conv(p, x, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"].astype(x.dtype)
+
+
+def _dense_init(key, cin, cout):
+    return {"w": jax.random.normal(key, (cin, cout)) / math.sqrt(cin),
+            "b": jnp.zeros((cout,))}
+
+
+def _dense(p, x):
+    return x @ p["w"].astype(x.dtype) + p["b"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+def init_params(key, cfg: CNNConfig) -> Dict:
+    ks = iter(jax.random.split(key, 4 + 4 * cfg.n_blocks + 2 * len(cfg.stages)))
+    p: Dict = {"stem": _conv_init(next(ks), 3, 3, cfg.in_channels,
+                                  cfg.stem_channels)}
+    stages = []
+    cin = cfg.stem_channels
+    for (cout, n_blocks) in cfg.stages:
+        stage = {"down": _conv_init(next(ks), 3, 3, cin, cout), "blocks": []}
+        for _ in range(n_blocks):
+            stage["blocks"].append({
+                "conv1": _conv_init(next(ks), 3, 3, cout, cout),
+                "conv2": _conv_init(next(ks), 3, 3, cout, cout),
+                "gate": {
+                    "fc1": _dense_init(next(ks), cout, cfg.gate_hidden),
+                    "fc2": _dense_init(next(ks), cfg.gate_hidden, 1),
+                },
+            })
+        stages.append(stage)
+        cin = cout
+    p["stages"] = stages
+    p["head"] = _dense_init(next(ks), cin, cfg.n_classes)
+    return p
+
+
+def _block(bp, x, groups, width_mask=None):
+    h = jax.nn.relu(groupnorm(_conv(bp["conv1"], x), groups))
+    if width_mask is not None:
+        h = h * width_mask.astype(h.dtype)
+    h = groupnorm(_conv(bp["conv2"], h), groups)
+    return jax.nn.relu(x + h)
+
+
+def _gate_logit(bp, x):
+    feat = jnp.mean(x, axis=(1, 2))                 # GAP (B,C)
+    h = jax.nn.relu(_dense(bp["gate"]["fc1"], feat))
+    return _dense(bp["gate"]["fc2"], h)[:, 0]       # (B,)
+
+
+def forward(params, cfg: CNNConfig, x, *,
+            depth: Optional[Sequence[int]] = None,
+            width_masks: Optional[List[jax.Array]] = None,
+            gate_mode: str = "off",
+            gate_key: Optional[jax.Array] = None):
+    """Forward pass.
+
+    depth: blocks kept per stage (static submodel depth); None = all.
+    width_masks: per-stage (C,) 0/1 masks on block hidden channels.
+    gate_mode:
+      'off'    — plain forward (submodel structure only)
+      'soft'   — expected gating  x + p*f(x)   (supervised warmup)
+      'sample' — Bernoulli-sampled hard gates (REINFORCE); needs gate_key
+      'hard'   — threshold 0.5 gates (inference)
+    Returns (logits, info) where info has gate log-probs and compute %.
+    """
+    g = cfg.groupnorm_groups
+    x = jax.nn.relu(groupnorm(_conv(params["stem"], x), g))
+    log_probs = []
+    gate_draws = []
+    exec_fraction = []
+    for si, stage in enumerate(params["stages"]):
+        x = jax.nn.relu(groupnorm(_conv(stage["down"], x, stride=2), g))
+        keep = cfg.stages[si][1] if depth is None else depth[si]
+        wm = None if width_masks is None else width_masks[si]
+        for bi, bp in enumerate(stage["blocks"]):
+            if bi >= keep:
+                continue
+            if gate_mode == "off":
+                x = _block(bp, x, g, wm)
+                exec_fraction.append(jnp.ones((x.shape[0],)))
+                continue
+            logit = _gate_logit(bp, x)
+            pgate = jax.nn.sigmoid(logit)
+            y = _block(bp, x, g, wm)
+            if gate_mode == "soft":
+                x = x + pgate[:, None, None, None] * (y - x)
+                exec_fraction.append(pgate)
+            elif gate_mode == "sample":
+                gate_key, sub = jax.random.split(gate_key)
+                b = jax.random.bernoulli(sub, pgate).astype(x.dtype)
+                x = x + b[:, None, None, None] * (y - x)
+                lp = b * jnp.log(pgate + 1e-8) + \
+                    (1 - b) * jnp.log(1 - pgate + 1e-8)
+                log_probs.append(lp)
+                gate_draws.append(b)
+                exec_fraction.append(b)
+            else:  # hard
+                b = (pgate > 0.5).astype(x.dtype)
+                x = x + b[:, None, None, None] * (y - x)
+                exec_fraction.append(b)
+    feat = jnp.mean(x, axis=(1, 2))
+    logits = _dense(params["head"], feat)
+    info = {
+        "log_prob": (jnp.stack(log_probs, 1).sum(1) if log_probs
+                     else jnp.zeros((x.shape[0],))),
+        "compute_pct": (jnp.stack(exec_fraction, 1).mean()
+                        if exec_fraction else jnp.array(1.0)),
+        "per_example_compute": (jnp.stack(exec_fraction, 1).mean(1)
+                                if exec_fraction
+                                else jnp.ones((x.shape[0],))),
+    }
+    return logits, info
+
+
+def loss_fn(params, cfg: CNNConfig, batch, *, depth=None, width_masks=None,
+            gate_mode="off", gate_key=None, compute_penalty=0.1):
+    """Hybrid supervised(+REINFORCE) objective (§III-C)."""
+    logits, info = forward(params, cfg, batch["x"], depth=depth,
+                           width_masks=width_masks, gate_mode=gate_mode,
+                           gate_key=gate_key)
+    labels = batch["y"]
+    lp = jax.nn.log_softmax(logits)
+    ce_i = -jnp.take_along_axis(lp, labels[:, None], axis=-1)[:, 0]
+    ce = jnp.mean(ce_i)
+    loss = ce
+    if gate_mode == "sample":
+        # REINFORCE: reward = -(task loss + lambda * compute)
+        reward = -(jax.lax.stop_gradient(ce_i) +
+                   compute_penalty * info["per_example_compute"])
+        baseline = jnp.mean(reward)
+        loss = ce + jnp.mean(-(reward - baseline) * info["log_prob"])
+    elif gate_mode == "soft":
+        loss = ce + compute_penalty * info["compute_pct"]
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"ce": ce, "acc": acc, "compute_pct": info["compute_pct"]}
+
+
+def flops(cfg: CNNConfig, depth=None, widths=None) -> float:
+    """Analytic FLOPs of a submodel (latency LUT input)."""
+    hw = cfg.image_size * cfg.image_size
+    total = 2 * 9 * cfg.in_channels * cfg.stem_channels * hw
+    cin = cfg.stem_channels
+    for si, (cout, n_blocks) in enumerate(cfg.stages):
+        hw = hw // 4
+        w = 1.0 if widths is None else widths[si]
+        keep = n_blocks if depth is None else depth[si]
+        total += 2 * 9 * cin * cout * hw
+        total += keep * (2 * 9 * cout * (cout * w) * hw * 2)
+        cin = cout
+    total += 2 * cin * cfg.n_classes
+    return float(total)

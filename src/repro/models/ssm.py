@@ -1,0 +1,212 @@
+"""Mamba2 / SSD (state-space duality) blocks — arXiv:2405.21060.
+
+Train/prefill path: chunked SSD — quadratic attention-like compute inside
+chunks, linear state passing across chunks (`lax.scan`). Decode path: O(1)
+recurrent state update. The chunk intra-compute is the Pallas-kernel
+hot-spot (`repro.kernels.ssd_scan`); this module holds the XLA reference
+used by the dry-run and the oracles.
+
+Sharding note: the usual fused `in_proj` is stored as *separate* component
+matrices (wz, wx, wB, wC, wdt) and the depthwise conv likewise per
+component — split boundaries of a fused projection never align with TP
+shard boundaries, whereas separate matrices shard cleanly (d_inner and
+SSD heads over the 'model' axis).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _he, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+def mamba_init(key, d_model, ssm):
+    di = ssm.d_inner(d_model)
+    nh = ssm.n_heads(d_model)
+    ng, N, w = ssm.n_groups, ssm.d_state, ssm.d_conv
+    ks = jax.random.split(key, 6)
+    return {
+        "wz": _he(ks[0], (d_model, di), d_model),
+        "wx": _he(ks[1], (d_model, di), d_model),
+        "wB": _he(ks[2], (d_model, ng * N), d_model),
+        "wC": _he(ks[3], (d_model, ng * N), d_model),
+        "wdt": _he(ks[4], (d_model, nh), d_model),
+        "conv_x": {"w": _he(ks[5], (w, di), w), "b": jnp.zeros((di,))},
+        "conv_B": {"w": _he(jax.random.fold_in(ks[5], 1), (w, ng * N), w),
+                   "b": jnp.zeros((ng * N,))},
+        "conv_C": {"w": _he(jax.random.fold_in(ks[5], 2), (w, ng * N), w),
+                   "b": jnp.zeros((ng * N,))},
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+            jax.random.fold_in(ks[4], 1), (nh,), jnp.float32,
+            jnp.log(1e-3), jnp.log(1e-1))))),
+        "norm": {"scale": jnp.zeros((di,), jnp.float32)},
+        "out_proj": _he(jax.random.fold_in(ks[5], 3), (di, d_model), di),
+    }
+
+
+def _causal_conv(cp, x, w):
+    """x: (B, S, C). Depthwise causal conv width w, silu."""
+    pad = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    out = jnp.zeros(x.shape, jnp.float32)
+    for i in range(w):
+        out = out + pad[:, i:i + x.shape[1], :].astype(jnp.float32) * \
+            cp["w"][i].astype(jnp.float32)
+    out = out + cp["b"]
+    return jax.nn.silu(out).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD scan (reference)
+# ---------------------------------------------------------------------------
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk):
+    """SSD over a full sequence, chunked; scan over chunks keeps peak
+    memory O(chunk^2).
+
+    xh: (B,S,H,P)  dt: (B,S,H)  A: (H,)  Bm/Cm: (B,S,G,N)  (G divides H)
+    Returns y: (B,S,H,P) and final state (B,H,P,N).
+    """
+    B_, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert S % chunk == 0
+    nc = S // chunk
+    rep = H // G
+
+    # heads carried as (G, rep) — B/C stay at their group width instead of
+    # being materialised broadcast to all H heads (H/G x memory)
+    xr = jnp.moveaxis(xh.reshape(B_, nc, chunk, G, rep, P), 1, 0)
+    dtr = jnp.moveaxis(dt.reshape(B_, nc, chunk, G, rep), 1, 0)
+    Br = jnp.moveaxis(Bm.reshape(B_, nc, chunk, G, N), 1, 0)
+    Cr = jnp.moveaxis(Cm.reshape(B_, nc, chunk, G, N), 1, 0)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Ar = A.reshape(G, rep)
+
+    def body(h, inp):
+        xc, dtc, Bc, Cc = inp      # (B,Q,G,rep,P) (B,Q,G,rep) (B,Q,G,N)
+        dA = dtc.astype(jnp.float32) * Ar[None, None, :, :]
+        cum = jnp.cumsum(dA, axis=1)                # (B,Q,G,rep)
+        diff = cum[:, :, None] - cum[:, None, :, :, :]   # (B,t,s,G,rep)
+        M = jnp.where(tri[None, :, :, None, None], jnp.exp(diff), 0.0)
+        CB = jnp.einsum("btgn,bsgn->btsg", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))
+        xdt = xc.astype(jnp.float32) * dtc[..., None]
+        y_intra = jnp.einsum("btsg,btsgr,bsgrp->btgrp", CB, M, xdt)
+        y_inter = jnp.einsum("btgr,btgn,bgrpn->btgrp", jnp.exp(cum),
+                             Cc.astype(jnp.float32), h)
+        decay_to_end = jnp.exp(cum[:, -1:] - cum)   # (B,Q,G,rep)
+        S_c = jnp.einsum("bsgr,bsgn,bsgrp->bgrpn", decay_to_end,
+                         Bc.astype(jnp.float32), xdt)
+        h_new = h * jnp.exp(cum[:, -1])[..., None, None] + S_c
+        return h_new, (y_intra + y_inter).astype(xh.dtype)
+
+    h0 = jnp.zeros((B_, G, rep, P, N), jnp.float32)
+    # checkpoint per chunk: backward recomputes the (Q,Q) decay/score
+    # blocks instead of saving them stacked over all chunks
+    h_final, ys = jax.lax.scan(jax.checkpoint(body, prevent_cse=False),
+                               h0, (xr, dtr, Br, Cr))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B_, S, H, P)
+    return y, h_final.reshape(B_, H, P, N)
+
+
+# ---------------------------------------------------------------------------
+# full block
+# ---------------------------------------------------------------------------
+def mamba_forward(p, x, ssm, *, norm_eps=1e-6, head_mask=None, kernel=None):
+    """Full-sequence Mamba2 block. x: (B,S,d) -> (B,S,d)."""
+    B, S, d = x.shape
+    di = ssm.d_inner(d)
+    nh = ssm.n_heads(d)
+    ng, N = ssm.n_groups, ssm.d_state
+    z = x @ p["wz"].astype(x.dtype)
+    xc = _causal_conv(p["conv_x"], x @ p["wx"].astype(x.dtype), ssm.d_conv)
+    Bm = _causal_conv(p["conv_B"], x @ p["wB"].astype(x.dtype), ssm.d_conv)
+    Cm = _causal_conv(p["conv_C"], x @ p["wC"].astype(x.dtype), ssm.d_conv)
+    dt = x @ p["wdt"].astype(x.dtype)
+
+    xh = xc.reshape(B, S, nh, ssm.head_dim)
+    Bm = Bm.reshape(B, S, ng, N)
+    Cm = Cm.reshape(B, S, ng, N)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    ssd = kernel if kernel is not None else ssd_chunked
+    y, _ = ssd(xh, dtv, A, Bm, Cm, min(ssm.chunk, S))
+    y = y.astype(x.dtype) + xh.astype(x.dtype) * \
+        p["D"].astype(x.dtype)[None, None, :, None]
+    if head_mask is not None:
+        y = y * head_mask[None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, di)
+    y = rmsnorm(p["norm"],
+                y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                norm_eps)
+    return y.astype(x.dtype) @ p["out_proj"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+class SSMCache(NamedTuple):
+    h: jax.Array         # (B, H, P, N) fp32 state
+    conv_x: jax.Array    # (B, w-1, di) recent pre-conv x inputs
+    conv_B: jax.Array    # (B, w-1, ng*N)
+    conv_C: jax.Array    # (B, w-1, ng*N)
+
+
+def ssm_cache_init(batch, d_model, ssm, dtype=jnp.bfloat16):
+    di = ssm.d_inner(d_model)
+    nh = ssm.n_heads(d_model)
+    gn = ssm.n_groups * ssm.d_state
+    w = ssm.d_conv
+    return SSMCache(
+        h=jnp.zeros((batch, nh, ssm.head_dim, ssm.d_state), jnp.float32),
+        conv_x=jnp.zeros((batch, w - 1, di), dtype),
+        conv_B=jnp.zeros((batch, w - 1, gn), dtype),
+        conv_C=jnp.zeros((batch, w - 1, gn), dtype))
+
+
+def _conv_step(cp, hist, new):
+    """hist: (B, w-1, C) previous raw inputs; new: (B, 1, C)."""
+    seq = jnp.concatenate([hist.astype(new.dtype), new], axis=1)
+    out = jnp.einsum("bwc,wc->bc", seq.astype(jnp.float32),
+                     cp["w"].astype(jnp.float32)) + cp["b"]
+    return jax.nn.silu(out).astype(new.dtype), seq[:, 1:, :]
+
+
+def mamba_decode(p, x, cache: SSMCache, ssm, *, norm_eps=1e-6):
+    """x: (B,1,d). Returns (out (B,1,d), new cache)."""
+    B, _, d = x.shape
+    di = ssm.d_inner(d)
+    nh = ssm.n_heads(d)
+    ng, N = ssm.n_groups, ssm.d_state
+    z = x @ p["wz"].astype(x.dtype)
+    xc_raw = x @ p["wx"].astype(x.dtype)
+    Bm_raw = x @ p["wB"].astype(x.dtype)
+    Cm_raw = x @ p["wC"].astype(x.dtype)
+    dt = x @ p["wdt"].astype(x.dtype)
+
+    xc, new_cx = _conv_step(p["conv_x"], cache.conv_x, xc_raw)
+    Bm, new_cB = _conv_step(p["conv_B"], cache.conv_B, Bm_raw)
+    Cm, new_cC = _conv_step(p["conv_C"], cache.conv_C, Cm_raw)
+
+    xh = xc.reshape(B, nh, ssm.head_dim)
+    Bm = jnp.repeat(Bm.reshape(B, ng, N), nh // ng, axis=1)
+    Cm = jnp.repeat(Cm.reshape(B, ng, N), nh // ng, axis=1)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dtv * A[None, :])                                # (B,H)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dtv, xh.astype(jnp.float32),
+                     Bm.astype(jnp.float32))
+    h = cache.h * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", h, Cm.astype(jnp.float32))
+    y = y + xh.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B, 1, di)
+    y = rmsnorm(p["norm"],
+                (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, SSMCache(h=h, conv_x=new_cx.astype(cache.conv_x.dtype),
+                         conv_B=new_cB.astype(cache.conv_B.dtype),
+                         conv_C=new_cC.astype(cache.conv_C.dtype))

@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (Optimizer, adamw, sgd, apply_updates,
+                                    clip_by_global_norm)
+from repro.optim.schedule import constant, cosine_decay, linear_warmup_cosine
+
+__all__ = ["Optimizer", "adamw", "sgd", "apply_updates",
+           "clip_by_global_norm", "constant", "cosine_decay",
+           "linear_warmup_cosine"]

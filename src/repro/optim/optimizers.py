@@ -1,0 +1,96 @@
+"""Minimal optimizer library (no optax in this container).
+
+API mirrors optax: ``opt.init(params) -> state``,
+``opt.update(grads, state, params) -> (updates, state)``; updates are
+*subtracted* by apply_updates.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def _lr_at(lr: Schedule, step):
+    return lr(step) if callable(lr) else lr
+
+
+def sgd(lr: Schedule, momentum: float = 0.0, weight_decay: float = 0.0):
+    def init(params):
+        mu = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return {"step": jnp.zeros((), jnp.int32), "mu": mu}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        if weight_decay and params is not None:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads,
+                                 params)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"],
+                              grads)
+            upd = mu
+        else:
+            mu = None
+            upd = grads
+        lr = _lr_at(lr_sched, step)
+        upd = jax.tree.map(lambda u: lr * u, upd)
+        return upd, {"step": step, "mu": mu}
+
+    lr_sched = lr
+    return Optimizer(init, update)
+
+
+def adamw(lr: Schedule, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0):
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params),
+        }
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) *
+                         g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) *
+                         jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = _lr_at(lr_sched, step)
+
+        def upd_leaf(m_, v_, p):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay and p is not None:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (lr * u).astype(p.dtype if p is not None else u.dtype)
+
+        if params is None:
+            upd = jax.tree.map(lambda m_, v_: upd_leaf(m_, v_, None), m, v)
+        else:
+            upd = jax.tree.map(upd_leaf, m, v, params)
+        return upd, {"step": step, "m": m, "v": v}
+
+    lr_sched = lr
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p - u).astype(p.dtype), params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn

@@ -1,0 +1,3 @@
+from repro.sharding.specs import (param_spec, params_shardings,
+                                  input_shardings, cache_shardings,
+                                  opt_state_shardings, batch_axes)

@@ -1,0 +1,216 @@
+"""PartitionSpec rules for every architecture family.
+
+Baseline layout (EXPERIMENTS.md records hillclimbed variants separately):
+  * tensor parallel over 'model': attention heads, d_ff, MoE experts,
+    SSD d_inner/heads, vocab (embedding + lm head);
+  * data parallel over 'data' (+ 'pod' on the multi-pod mesh): batch;
+  * KV-head tensors replicate over 'model' when n_kv doesn't divide it
+    (standard KV replication for GQA under wide TP);
+  * decode caches: sequence dim over 'data' when batch can't use it
+    (long-context), else batch over ('pod','data') and heads over 'model'.
+
+Rules are name+shape driven over the param pytree (tree_map_with_path).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _axis_size(mesh, name) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _div(n, size) -> bool:
+    """Shardable: divisible, or large enough that GSPMD padding waste is
+    negligible (kv-head-style small dims below the axis size replicate)."""
+    return size > 0 and (n % size == 0 or n >= 8 * size)
+
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def param_spec(cfg: ModelConfig, mesh, path: Tuple[str, ...], leaf) -> P:
+    """Sharding rule for one param leaf; `path` is the key path strings."""
+    m = _axis_size(mesh, "model")
+    name = path[-1]
+    joined = "/".join(path)
+    shp = leaf.shape
+
+    def msh(axis: int) -> P:
+        """Shard `axis` of shp over 'model' if divisible else replicate."""
+        if _div(shp[axis], m):
+            spec = [None] * len(shp)
+            spec[axis] = "model"
+            return P(*spec)
+        return P()
+
+    # embeddings / unembedding: vocab over model
+    if "embed" in path and name == "table":
+        return msh(0)
+    if "lm_head" in path:
+        return msh(len(shp) - 1)
+
+    # attention
+    if "attn" in path:
+        if name == "wq":                       # (L?, d, H, hd)
+            return msh(len(shp) - 2)
+        if name in ("wk", "wv"):               # (L?, d, KV, hd)
+            return msh(len(shp) - 2)           # replicates when KV < m
+        if name == "wo":                       # (L?, H, hd, d)
+            return msh(len(shp) - 3)
+        if name in ("w_uk", "w_uv"):           # (L?, r, H, hd) — MLA
+            return msh(len(shp) - 2)
+        if name == "w_dkv":                    # (L?, d, r+rope) small
+            return P()
+
+    # dense / shared-expert MLP
+    if name in ("wi", "wg") and ("moe" not in joined or "shared" in joined):
+        return msh(len(shp) - 1)               # (L?, d, f)
+    if name == "wo" and ("moe" not in joined or "shared" in joined):
+        return msh(len(shp) - 2)               # (L?, f, d)
+
+    # MoE: expert parallelism
+    if "moe" in joined:
+        if name == "router":
+            return msh(len(shp) - 1)           # (L?, d, E)
+        if name in ("wi", "wg", "wo"):         # (L?, E, d, f)
+            return msh(len(shp) - 3)
+        return P()                             # shared experts handled above
+
+    # mamba2 components: d_inner / heads over model
+    if name in ("wz", "wx"):                   # (L?, d, di)
+        return msh(len(shp) - 1)
+    if name == "out_proj":                     # (L?, di, d)
+        return msh(len(shp) - 2)
+    if "conv_x" in path and name == "w":       # (L?, w, di)
+        return msh(len(shp) - 1)
+    if "conv_x" in path and name == "b":
+        return msh(len(shp) - 1)
+    if name in ("wB", "wC", "wdt"):
+        return P()
+    if name in ("A_log", "D", "dt_bias"):
+        return P()
+    if "norm" in joined and name == "scale" and "mamba" in joined:
+        return msh(len(shp) - 1)               # (L?, di) gated norm
+
+    return P()                                 # norms, biases, gates
+
+
+def params_shardings(cfg: ModelConfig, mesh, params_shape) -> Any:
+    """Full pytree of NamedSharding for a params(-shaped) tree."""
+    def one(path, leaf):
+        keys = tuple(_path_str(p) for p in path)
+        return jax.sharding.NamedSharding(mesh,
+                                          param_spec(cfg, mesh, keys, leaf))
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+# ---------------------------------------------------------------------------
+# activations / inputs / caches
+# ---------------------------------------------------------------------------
+def opt_state_shardings(cfg: ModelConfig, mesh, opt_state_shape,
+                        params_shape) -> Any:
+    """ZeRO-1: Adam moments shard like their param *plus* the first
+    still-unsharded divisible dim over 'data' (fp32 m/v dominate memory;
+    the reduce-scatter/all-gather pair this induces is the standard
+    trade)."""
+    d = _axis_size(mesh, "data")
+
+    def one(path, leaf):
+        keys = tuple(_path_str(p) for p in path)
+        base = param_spec(cfg, mesh, keys, leaf)
+        spec = list(base) + [None] * (len(leaf.shape) - len(base))
+        for ax, size in enumerate(leaf.shape):
+            if spec[ax] is None and size % d == 0 and size >= d:
+                spec[ax] = "data"
+                break
+        return jax.sharding.NamedSharding(mesh, P(*spec))
+
+    m = jax.tree_util.tree_map_with_path(one, params_shape)
+    return {
+        "step": jax.sharding.NamedSharding(mesh, P()),
+        "m": m,
+        "v": m,
+    }
+
+
+def input_shardings(cfg: ModelConfig, mesh, batch_shape_tree,
+                    global_batch: int) -> Any:
+    """Batch dims over ('pod','data') when divisible, else replicated."""
+    axes = batch_axes(mesh)
+    dp = 1
+    for a in axes:
+        dp *= _axis_size(mesh, a)
+    bspec = axes if (_div(global_batch, dp) and global_batch > 1) else None
+
+    def one(path, leaf):
+        spec = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 1 and bspec is not None:
+            spec[0] = bspec
+        return jax.sharding.NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, batch_shape_tree)
+
+
+def cache_shardings(cfg: ModelConfig, mesh, cache_shape_tree,
+                    global_batch: int) -> Any:
+    """Decode caches: batch over ('pod','data') when divisible; otherwise
+    shard the sequence dim over 'data'. Head-ish dims over 'model' when
+    divisible."""
+    axes = batch_axes(mesh)
+    dp = 1
+    for a in axes:
+        dp *= _axis_size(mesh, a)
+    m = _axis_size(mesh, "model")
+    batch_ok = _div(global_batch, dp) and global_batch > 1
+
+    def one(path, leaf):
+        shp = leaf.shape  # leading L (stacked layers), then cache dims
+        names = tuple(_path_str(p) for p in path)
+        spec = [None] * len(shp)
+        # identify cache kind by field name of the NamedTuple leaf path
+        field = names[-1] if names else ""
+        if field in ("k", "v"):          # (L, B, C, KV, D)
+            if batch_ok:
+                spec[1] = axes
+            else:
+                spec[2] = "data"
+            if _div(shp[3], m):
+                spec[3] = "model"
+            elif _div(shp[4], m):
+                spec[4] = "model"
+        elif field in ("c_kv", "k_rope"):  # (L, B, S, r)
+            if batch_ok:
+                spec[1] = axes
+            else:
+                spec[2] = "data"
+        elif field == "h":               # (L, B, H, P, N)
+            if batch_ok:
+                spec[1] = axes
+            if _div(shp[2], m):
+                spec[2] = "model"
+        elif field in ("conv_x",):       # (L, B, w-1, di)
+            if batch_ok:
+                spec[1] = axes
+            if _div(shp[3], m):
+                spec[3] = "model"
+        elif field in ("conv_B", "conv_C"):
+            if batch_ok:
+                spec[1] = axes
+        return jax.sharding.NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, cache_shape_tree)

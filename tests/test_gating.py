@@ -1,0 +1,58 @@
+"""RL gate tests (paper §III-C): hybrid training runs, compute fraction
+drops below 1, gates stay accurate; static-depth policy extraction."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.paper_cnn import CNNConfig
+from repro.core import GateTrainConfig, train_gates, gate_depth_policy
+from repro.data import make_dataset, batches
+from repro.models import cnn
+
+CFG = CNNConfig(name="gate-test", in_channels=1, image_size=28,
+                stem_channels=8, stages=((16, 2), (32, 2)),
+                groupnorm_groups=4)
+
+
+@pytest.fixture(scope="module")
+def gated():
+    data = make_dataset("synthmnist", 1024, seed=0)
+    it = batches(data, 64, seed=0)
+    params = cnn.init_params(jax.random.PRNGKey(0), CFG)
+    tcfg = GateTrainConfig(warmup_steps=25, rl_steps=25, lr=2e-3,
+                           compute_penalty=0.15)
+    params, hist = train_gates(params, CFG, it, tcfg, seed=0)
+    return params, hist, data
+
+
+def test_gate_training_improves_accuracy(gated):
+    _, hist, _ = gated
+    assert hist[-1]["acc"] > hist[0]["acc"]
+
+
+def test_gates_skip_some_compute(gated):
+    params, hist, data = gated
+    batch = {"x": jnp.asarray(data["x"][:128])}
+    _, info = cnn.forward(params, CFG, batch["x"], gate_mode="hard")
+    assert 0.0 < float(info["compute_pct"]) <= 1.0
+
+
+def test_gate_depth_policy_extraction(gated):
+    params, _, data = gated
+    depth, rates = gate_depth_policy(params, CFG,
+                                     {"x": jnp.asarray(data["x"][:64])})
+    assert len(depth) == len(CFG.stages)
+    assert all(1 <= d <= b for d, (_, b) in zip(depth, CFG.stages))
+    assert len(rates) == CFG.n_blocks
+
+
+def test_gate_modes_all_run():
+    params = cnn.init_params(jax.random.PRNGKey(1), CFG)
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 28, 28, 1))
+    for mode in ("off", "soft", "hard"):
+        logits, info = cnn.forward(params, CFG, x, gate_mode=mode)
+        assert logits.shape == (4, 10)
+    logits, info = cnn.forward(params, CFG, x, gate_mode="sample",
+                               gate_key=jax.random.PRNGKey(3))
+    assert logits.shape == (4, 10)
+    assert info["log_prob"].shape == (4,)

@@ -1,0 +1,128 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU), with
+hypothesis shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import (elastic_matmul, flash_attention, ssd_scan, ref)
+from repro.models.ssm import ssd_chunked
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------------------
+# elastic matmul
+# ---------------------------------------------------------------------------
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.sampled_from([64, 128, 256]),
+    k=st.sampled_from([64, 128, 384]),
+    n=st.sampled_from([128, 256]),
+    frac=st.floats(0.0, 1.0),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_elastic_matmul_matches_ref(m, k, n, frac, dtype):
+    key = jax.random.PRNGKey(m * 7 + k + n)
+    x = jax.random.normal(key, (m, k), dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n), dtype)
+    ka = int(round(frac * n))
+    y = elastic_matmul(x, w, ka, bm=64, bn=64, bk=64)
+    yr = ref.elastic_matmul_ref(x, w, ka)
+    tol = 2e-4 * k if dtype == jnp.float32 else 2e-2 * k ** 0.5
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=tol)
+
+
+def test_elastic_matmul_masks_columns():
+    x = jnp.ones((64, 64))
+    w = jnp.ones((64, 128))
+    y = elastic_matmul(x, w, 37, bm=64, bn=64, bk=64)
+    assert bool(jnp.all(y[:, 37:] == 0))
+    assert bool(jnp.all(y[:, :37] == 64.0))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.sampled_from([1, 2]),
+    s=st.sampled_from([128, 256]),
+    h=st.sampled_from([2, 4]),
+    g=st.sampled_from([1, 2]),
+    d=st.sampled_from([32, 64]),
+    causal=st.booleans(),
+    window=st.sampled_from([None, 64]),
+    cap=st.sampled_from([None, 30.0]),
+)
+def test_flash_attention_matches_ref(b, s, h, g, d, causal, window, cap):
+    kv = h // g
+    key = jax.random.PRNGKey(b * 31 + s + h + d)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, d), jnp.float32)
+    y = flash_attention(q, k, v, causal=causal, window=window, cap=cap,
+                        bq=64, bk=64)
+    yr = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                 cap=cap)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 64), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 128, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 128, 2, 64), jnp.bfloat16)
+    y = flash_attention(q, k, v, causal=True, bq=64, bk=64)
+    yr = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.sampled_from([1, 2]),
+    s=st.sampled_from([64, 128]),
+    h=st.sampled_from([2, 4]),
+    g_div=st.sampled_from([1, 2]),
+    p=st.sampled_from([32, 64]),
+    n=st.sampled_from([16, 64]),
+    chunk=st.sampled_from([16, 32]),
+)
+def test_ssd_scan_matches_sequential(b, s, h, g_div, p, n, chunk):
+    g = max(1, h // g_div)
+    key = jax.random.PRNGKey(s + h + p + n)
+    ks = jax.random.split(key, 5)
+    xh = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (b, s, g, n), jnp.float32)
+    Cm = jax.random.normal(ks[4], (b, s, g, n), jnp.float32)
+    y = ssd_scan(xh, dt, A, Bm, Cm, chunk=chunk)
+    yr, _ = ref.ssd_ref(xh, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=3e-3, rtol=1e-3)
+
+
+def test_ssd_chunked_reference_matches_sequential():
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 5)
+    b, s, h, g, p, n = 2, 128, 4, 2, 32, 16
+    xh = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (b, s, g, n), jnp.float32)
+    Cm = jax.random.normal(ks[4], (b, s, g, n), jnp.float32)
+    y, hf = ssd_chunked(xh, dt, A, Bm, Cm, 32)
+    yr, hr = ref.ssd_ref(xh, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-3,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hr), atol=2e-3,
+                               rtol=1e-3)

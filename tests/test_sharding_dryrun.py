@@ -1,0 +1,94 @@
+"""Sharding rules + a miniature multi-device dry-run in a subprocess
+(8 host devices; verifies lower+compile, shard_map paths, roofline parse
+and the mesh factory — the production 512-chip sweep runs via
+`python -m repro.launch.dryrun --all`)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from repro.configs import ARCHS
+from repro.launch.steps import params_spec
+from repro.sharding.specs import param_spec
+import jax.tree_util as jtu
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+class _FakeMesh:
+    shape = {"data": 4, "model": 2}
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_specs_are_rank_valid(arch):
+    cfg = ARCHS[arch]
+    ps = params_spec(cfg)
+    mesh = _FakeMesh()
+
+    def check(path, leaf):
+        keys = tuple(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path)
+        spec = param_spec(cfg, mesh, keys, leaf)
+        assert len(spec) <= len(leaf.shape), (keys, spec, leaf.shape)
+        for ax, s in enumerate(spec):
+            if s == "model":
+                n = leaf.shape[ax]
+                assert n % 2 == 0 or n >= 16, (keys, spec, leaf.shape)
+    jtu.tree_map_with_path(check, ps)
+
+
+SUB = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, r"%s")
+import json
+import jax, jax.numpy as jnp
+from repro.configs import ARCHS, reduced
+from repro.launch.steps import (make_train_step, make_serve_step,
+                                params_spec, opt_state_spec, cache_spec)
+from repro.launch.roofline import parse_hlo
+from repro.sharding import params_shardings, input_shardings, \
+    opt_state_shardings, cache_shardings
+from repro.launch.mesh import make_host_mesh
+
+mesh = make_host_mesh(model=2)   # 4x2
+results = {}
+for arch in ["granite-3-8b", "granite-moe-1b-a400m", "mamba2-2.7b"]:
+    cfg = reduced(ARCHS[arch], n_layers=4)
+    ps = params_spec(cfg)
+    osd = opt_state_spec(cfg, ps)
+    bs = {"tokens": jax.ShapeDtypeStruct((8, 64), jnp.int32)}
+    step, _ = make_train_step(cfg)
+    p_sh = params_shardings(cfg, mesh, ps)
+    o_sh = opt_state_shardings(cfg, mesh, osd, ps)
+    b_sh = input_shardings(cfg, mesh, bs, 8)
+    with jax.set_mesh(mesh):
+        compiled = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh)).lower(
+            ps, osd, bs).compile()
+        stats = parse_hlo(compiled.as_text())
+    results[arch] = {"flops": stats.dot_flops,
+                     "wire": stats.wire_bytes,
+                     "mem": compiled.memory_analysis().temp_size_in_bytes}
+print("RESULT " + json.dumps(results))
+""" % os.path.abspath(os.path.join(REPO, "src"))
+
+
+@pytest.mark.slow
+def test_mini_dryrun_8_devices():
+    out = subprocess.run([sys.executable, "-c", SUB], capture_output=True,
+                         text=True, timeout=420)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")][0]
+    results = json.loads(line[len("RESULT "):])
+    for arch, r in results.items():
+        assert r["flops"] > 0, arch
+        assert r["wire"] > 0, arch
+
+
+def test_make_host_mesh():
+    m = jax.make_mesh((1, 1), ("data", "model"))
+    assert m.shape["data"] == 1
