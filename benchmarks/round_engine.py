@@ -1,0 +1,185 @@
+"""Round-engine bench: batched parent-space cohort engine vs the
+sequential extract→jit-per-spec→pad loop, at 8/32/128 heterogeneous
+clients.
+
+Regime: per-round **spec churn**. At fleet scale each round's cohort is a
+fresh sample of devices (millions of users), so the server sees a new mix
+of submodel configs every round — the sequential loop then pays one XLA
+compile per distinct (depth × width) config per round (train *and* eval
+programs), while the batched engine runs the same two compiled programs
+(fused train+eval, fused aggregate+apply) no matter what the specs are.
+The bench reproduces that by sampling feasible random specs per round with
+a fresh seed (the tiny fixed fleet would otherwise let the GA converge and
+hide the recompile cost that motivates the engine).
+
+Each (mode × cohort size) leg runs in its own subprocess so jit caches are
+cold, as they are for a real server process. Wall-clock per round covers
+local training + eval + aggregation, including any compiles it triggers;
+submodel search / predictor updates are identical in both modes and
+excluded.
+
+  PYTHONPATH=src python -m benchmarks.round_engine            # full sweep
+  PYTHONPATH=src python -m benchmarks.round_engine --single seq 32
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import random
+import subprocess
+import sys
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs.paper_cnn import CNNConfig
+
+ROUNDS = 3
+# smaller than BENCH_CNN (16px) but with the full 4-level width grid, so
+# the spec space is rich enough to exercise per-config recompiles
+ENGINE_CNN = CNNConfig(name="engine-bench", in_channels=1, image_size=16,
+                       stem_channels=8, stages=((16, 2), (32, 2)),
+                       groupnorm_groups=4,
+                       elastic_widths=(0.25, 0.5, 0.75, 1.0))
+
+def _measure_leg(mode: str, n_workers: int, seed: int = 0):
+    """Runs in a fresh subprocess: one server, ROUNDS rounds, per-round
+    wall-clock + compiled-program counts for the round-engine section.
+
+    'Programs' = compiled entry points: for the batched engine the fused
+    train+eval jit and the fused aggregate_apply jit (cache-size deltas);
+    for the sequential loop the per-submodel-config train-step and eval
+    caches — the ISSUE's 'one compile per distinct submodel config'."""
+    import importlib
+
+    import jax
+    # repro.core re-exports the `aggregate` *function*, shadowing the module
+    agg_mod = importlib.import_module("repro.core.aggregate")
+    from repro.core.search import random_spec
+    from repro.fl import client as client_mod
+    from repro.fl import CFLConfig
+    from repro.fl.rounds import build_population
+    from repro.fl.server import CFLServer
+    from repro.models import cnn
+
+    batched = mode == "batched"
+    fl = CFLConfig(n_workers=n_workers, local_epochs=1, batch_size=32,
+                   batched_rounds=batched, seed=seed)
+    clients, cdata, tdata = build_population(
+        ENGINE_CNN, kind="synthmnist", n_workers=n_workers,
+        n_samples=n_workers * 60, heterogeneity="both", seed=seed,
+        latency_bound_frac=fl.latency_bound_frac)
+    params = cnn.init_params(jax.random.PRNGKey(seed), ENGINE_CNN)
+    server = CFLServer(ENGINE_CNN, params, clients, cdata, tdata, fl)
+
+    def jit_cache_size(fn):
+        # _cache_size is private jax API; degrade to 0 rather than crash
+        # the whole leg if a jax release renames it
+        get = getattr(fn, "_cache_size", None)
+        return get() if callable(get) else 0
+
+    def n_programs():
+        if batched:
+            return (jit_cache_size(server.engine._train_eval) +
+                    jit_cache_size(agg_mod.aggregate_apply))
+        return (len(client_mod._TRAIN_STEP_CACHE) +
+                len(client_mod._EVAL_STEP_CACHE))
+
+    rounds = 2 if n_workers >= 128 else ROUNDS
+    walls, compiles, nspecs = [], [], []
+    for r in range(rounds):
+        # fresh cohort spec mix every round (feasibility-filtered randoms)
+        specs = []
+        for k, c in enumerate(clients):
+            rng = random.Random(seed * 7919 + r * 131 + k)
+            cand = [random_spec(ENGINE_CNN, rng) for _ in range(32)]
+            feas = [s for s in cand
+                    if server.latency.lookup(s, c.device) < c.latency_bound]
+            specs.append(feas[0] if feas else cand[0])
+        nspecs.append(len(set(specs)))
+        c0, t0 = n_programs(), time.perf_counter()
+        if batched:
+            server._train_round_batched(specs)
+        else:
+            server._train_round_sequential(specs)
+        walls.append(time.perf_counter() - t0)
+        compiles.append(n_programs() - c0)
+        server.round_idx += 1
+    return walls, compiles, nspecs
+
+
+def _run_leg_subprocess(mode: str, n_workers: int):
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.round_engine", "--single", mode,
+         str(n_workers)],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    if out.returncode != 0:
+        raise RuntimeError(f"{mode}/{n_workers}c leg failed:\n{out.stderr}")
+    for line in out.stdout.splitlines():
+        if line.startswith("LEG,"):
+            walls, compiles, nspecs = line[len("LEG,"):].split(";")
+            parse = lambda s: [float(v) for v in s.split(",") if v]
+            return parse(walls), parse(compiles), parse(nspecs)
+    raise RuntimeError(f"no LEG line in output:\n{out.stdout}")
+
+
+def run(seed: int = 0) -> List[Row]:
+    rows: List[Row] = []
+    summary = {}
+    for n_workers in (8, 32, 128):
+        for mode in ("seq", "batched"):
+            walls, compiles, nspecs = _run_leg_subprocess(mode, n_workers)
+            per_round = float(np.mean(walls))
+            summary[(n_workers, mode)] = (per_round, compiles)
+            rows.append((
+                f"round_engine_{mode}_{n_workers}c", per_round * 1e6,
+                f"compiles_per_round={np.mean(compiles):.1f};"
+                f"max_round_compiles={max(compiles):.0f};"
+                f"distinct_specs={max(nspecs):.0f}"))
+    for n_workers in (8, 32, 128):
+        sw, sc = summary[(n_workers, "seq")]
+        bw, bc = summary[(n_workers, "batched")]
+        rows.append((f"round_engine_speedup_{n_workers}c", 0.0,
+                     f"x={sw / bw:.2f};compiles_seq={np.mean(sc):.1f};"
+                     f"compiles_batched={np.mean(bc):.1f}"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--single", nargs=2, metavar=("MODE", "N"))
+    args = ap.parse_args()
+    if args.single:
+        mode, n = args.single[0], int(args.single[1])
+        if mode not in ("seq", "batched"):
+            ap.error(f"MODE must be 'seq' or 'batched', got {mode!r}")
+        walls, compiles, nspecs = _measure_leg(mode, n)
+        print("LEG," + ";".join(
+            ",".join(str(v) for v in xs)
+            for xs in (walls, compiles, nspecs)))
+        return
+
+    rows = run()
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    by = {r[0]: dict(kv.split("=") for kv in r[2].split(";")) for r in rows}
+    # acceptance: batched engine compiles <= 2 programs per round in every
+    # round regardless of spec diversity, and >= 2x faster per round at 32
+    # heterogeneous clients under per-round spec churn
+    for n_workers in (8, 32, 128):
+        d = by[f"round_engine_batched_{n_workers}c"]
+        assert float(d["max_round_compiles"]) <= 2, d
+    speedup = float(by["round_engine_speedup_32c"]["x"])
+    print(f"per-round speedup at 32 clients: {speedup:.2f}x")
+    assert speedup >= 2.0, speedup
+
+
+if __name__ == "__main__":
+    main()

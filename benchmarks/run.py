@@ -23,6 +23,7 @@ MODULES = {
     "ablation": "benchmarks.ablation_coverage",
     "micro": "benchmarks.micro",
     "roofline": "benchmarks.roofline_table",
+    "round_engine": "benchmarks.round_engine",
 }
 
 

@@ -1,10 +1,12 @@
 """CFL — the paper's contribution as a composable module."""
 from repro.core.submodel import (SubmodelSpec, TransformerSubSpec,
                                  extract_cnn, pad_cnn, sub_cnn_config,
-                                 coverage_cnn, full_spec,
+                                 coverage_cnn, full_spec, mask_cnn,
+                                 minimal_spec,
                                  extract_transformer, pad_transformer,
                                  full_transformer_spec)
-from repro.core.aggregate import (aggregate, aggregate_coverage,
+from repro.core.aggregate import (aggregate, aggregate_apply,
+                                  aggregate_coverage,
                                   apply_server_update, weighted_sum)
 from repro.core.search import (SearchConfig, search_submodel,
                                search_all_workers, random_spec)

@@ -14,6 +14,7 @@ sum — under `data`-axis sharding it lowers to reduce-scatter/all-reduce.
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable, List, Sequence, Tuple
 
 import jax
@@ -54,3 +55,38 @@ def apply_server_update(params, delta, server_lr: float = 1.0):
     convention (ω_0 − ω_E)."""
     return jax.tree.map(lambda p, d: (p - server_lr * d).astype(p.dtype),
                         params, delta)
+
+
+# ---------------------------------------------------------------------------
+# fused batched path (round engine): stacked client axis, one jitted program
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("coverage_norm",))
+def aggregate_apply(params, stacked_deltas, stacked_coverages, weights, *,
+                    coverage_norm: bool = False, eps: float = 1e-8):
+    """Fused Alg. 3 + Alg. 4 server step over a *stacked* cohort.
+
+    stacked_deltas / stacked_coverages: pytrees whose leaves carry a
+    leading client axis (K, ...) — the batched engine's native layout, so
+    aggregation + apply is a single compiled program instead of 2K
+    tree_maps. Weighted sums reduce in fp32 regardless of param dtype.
+    stacked_coverages may be None when coverage_norm is False (the paper
+    rule never reads it — don't pay the device transfer).
+    """
+    w = weights.astype(jnp.float32)
+
+    def plain(d):
+        wd = w.reshape((-1,) + (1,) * (d.ndim - 1))
+        return jnp.sum(d.astype(jnp.float32) * wd, 0) / jnp.sum(w)
+
+    def covnorm(d, c):
+        wd = w.reshape((-1,) + (1,) * (d.ndim - 1))
+        num = jnp.sum(d.astype(jnp.float32) * wd, 0)
+        den = jnp.sum(c.astype(jnp.float32) * wd, 0)
+        return num / jnp.maximum(den, eps)
+
+    if coverage_norm:
+        delta_t = jax.tree.map(covnorm, stacked_deltas, stacked_coverages)
+    else:
+        delta_t = jax.tree.map(plain, stacked_deltas)
+    return jax.tree.map(lambda p, d: (p - d).astype(p.dtype), params,
+                        delta_t)

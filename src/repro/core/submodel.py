@@ -44,6 +44,14 @@ def full_spec(cfg: CNNConfig) -> SubmodelSpec:
                         width=tuple(1.0 for _ in cfg.stages))
 
 
+def minimal_spec(cfg: CNNConfig) -> SubmodelSpec:
+    """The smallest expressible submodel — the deterministic fallback when a
+    latency bound admits nothing else."""
+    return SubmodelSpec(depth=tuple(1 for _ in cfg.stages),
+                        width=tuple(min(cfg.elastic_widths)
+                                    for _ in cfg.stages))
+
+
 def channels_of(cfg: CNNConfig, stage: int, frac: float) -> int:
     c = cfg.stages[stage][0]
     g = cfg.groupnorm_groups
@@ -125,6 +133,64 @@ def coverage_cnn(parent_template: Dict, cfg: CNNConfig,
     sub = extract_cnn(ones, cfg, spec)
     return pad_cnn(jax.tree.map(jnp.ones_like, sub), parent_template, cfg,
                    spec)
+
+
+def mask_cnn(cfg: CNNConfig, spec: SubmodelSpec) -> Dict:
+    """Parent-shaped 0/1 param mask for *parent-space* training — the same
+    coverage semantics as ``coverage_cnn`` (prefix channels, prefix depth,
+    k_active-style as in kernels/elastic_matmul.py) but built directly,
+    with no extract/pad round trip, so the batched round engine can stack
+    one mask per client without touching parent params. Leaves are host
+    numpy (the engine builds K of these per round; device transfer happens
+    once, at the stacked dispatch)."""
+    def ones(*shape):
+        return np.ones(shape, np.float32)
+
+    def zeros(*shape):
+        return np.zeros(shape, np.float32)
+
+    def ch_mask(n_active, n_total):
+        return (np.arange(n_total) < n_active).astype(np.float32)
+
+    out: Dict = {"stem": {"w": ones(3, 3, cfg.in_channels,
+                                    cfg.stem_channels),
+                          "b": ones(cfg.stem_channels)},
+                 "stages": [], "head": None}
+    cin_prev = cfg.stem_channels
+    m_prev = ch_mask(cin_prev, cin_prev)
+    for si, (cmax, n_blocks) in enumerate(cfg.stages):
+        c = channels_of(cfg, si, spec.width[si])
+        m = ch_mask(c, cmax)
+        stage = {"down": {"w": m_prev[None, None, :, None] *
+                          m[None, None, None, :] * ones(3, 3, cin_prev, cmax),
+                          "b": m},
+                 "blocks": []}
+        cc = m[None, None, :, None] * m[None, None, None, :]
+        for bi in range(n_blocks):
+            if bi < spec.depth[si]:
+                stage["blocks"].append({
+                    "conv1": {"w": cc * ones(3, 3, cmax, cmax), "b": m},
+                    "conv2": {"w": cc * ones(3, 3, cmax, cmax), "b": m},
+                    "gate": {"fc1": {"w": m[:, None] *
+                                     ones(cmax, cfg.gate_hidden),
+                                     "b": ones(cfg.gate_hidden)},
+                             "fc2": {"w": ones(cfg.gate_hidden, 1),
+                                     "b": ones(1)}},
+                })
+            else:   # depth expansion: block entirely uncovered (Fig. 2)
+                stage["blocks"].append({
+                    "conv1": {"w": zeros(3, 3, cmax, cmax), "b": zeros(cmax)},
+                    "conv2": {"w": zeros(3, 3, cmax, cmax), "b": zeros(cmax)},
+                    "gate": {"fc1": {"w": zeros(cmax, cfg.gate_hidden),
+                                     "b": zeros(cfg.gate_hidden)},
+                             "fc2": {"w": zeros(cfg.gate_hidden, 1),
+                                     "b": zeros(1)}},
+                })
+        out["stages"].append(stage)
+        cin_prev, m_prev = cmax, m
+    out["head"] = {"w": m_prev[:, None] * ones(cin_prev, cfg.n_classes),
+                   "b": ones(cfg.n_classes)}
+    return out
 
 
 # ===========================================================================

@@ -2,4 +2,4 @@ from repro.data.synth import make_dataset, train_test_split
 from repro.data.quality import (apply_quality, gaussian_blur,
                                 mixed_quality_dataset, sharpen, N_LEVELS)
 from repro.data.partition import iid_partition, noniid_partition, subset
-from repro.data.loader import batches, eval_batches
+from repro.data.loader import batches, eval_batches, index_batches

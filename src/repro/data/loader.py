@@ -6,10 +6,13 @@ from typing import Dict, Iterator
 import numpy as np
 
 
-def batches(data: Dict[str, np.ndarray], batch_size: int, *,
-            seed: int = 0, epochs: int = None,
-            drop_remainder: bool = True) -> Iterator[Dict]:
-    n = len(data["y"])
+def index_batches(n: int, batch_size: int, *, seed: int = 0,
+                  epochs: int = None,
+                  drop_remainder: bool = True) -> Iterator[np.ndarray]:
+    """Epoch-shuffled batch *indices*. ``batches`` is defined on top of
+    this, so consumers that want indices (e.g. the batched round engine,
+    which keeps one resident copy of the data and gathers per step) see
+    exactly the same permutation stream as consumers of ``batches``."""
     rng = np.random.RandomState(seed)
     epoch = 0
     while epochs is None or epoch < epochs:
@@ -18,9 +21,16 @@ def batches(data: Dict[str, np.ndarray], batch_size: int, *,
         if end == 0:
             end = n
         for i in range(0, end, batch_size):
-            idx = perm[i:i + batch_size]
-            yield {k: v[idx] for k, v in data.items()}
+            yield perm[i:i + batch_size]
         epoch += 1
+
+
+def batches(data: Dict[str, np.ndarray], batch_size: int, *,
+            seed: int = 0, epochs: int = None,
+            drop_remainder: bool = True) -> Iterator[Dict]:
+    for idx in index_batches(len(data["y"]), batch_size, seed=seed,
+                             epochs=epochs, drop_remainder=drop_remainder):
+        yield {k: v[idx] for k, v in data.items()}
 
 
 def eval_batches(data: Dict[str, np.ndarray],

@@ -1,5 +1,9 @@
 """Baselines the paper compares against: standard FedAvg (one global model
-for every client) and Independent Learning (IL — local training only)."""
+for every client) and Independent Learning (IL — local training only).
+
+Both ride the same batched parent-space engine as the CFL server when
+``fl_cfg.batched_rounds`` (every client's mask is the full-spec mask, so
+the cohort is one vmapped program); the sequential loops remain for A/B."""
 from __future__ import annotations
 
 import dataclasses
@@ -14,6 +18,7 @@ from repro.core.fairness import accuracy_fairness, round_time_fairness
 from repro.core.latency import LatencyTable, submodel_bytes
 from repro.core.submodel import full_spec
 from repro.fl.client import ClientInfo, evaluate, local_train
+from repro.fl.engine import BatchedRoundEngine
 
 
 class FedAvgServer:
@@ -33,27 +38,41 @@ class FedAvgServer:
             batch_size=fl_cfg.batch_size)
         self.round_idx = 0
         self.history: List[Dict] = []
+        self.engine = BatchedRoundEngine(cfg, lr=fl_cfg.lr,
+                                         momentum=fl_cfg.momentum) \
+            if getattr(fl_cfg, "batched_rounds", False) else None
 
     def run_round(self) -> Dict:
         spec = full_spec(self.cfg)
-        deltas, sizes, accs, times = [], [], [], []
-        for k, client in enumerate(self.clients):
-            delta, n_steps = local_train(
-                self.params, self.cfg, self.client_data[k],
-                epochs=self.fl.local_epochs, batch_size=self.fl.batch_size,
-                lr=self.fl.lr, momentum=self.fl.momentum,
-                seed=self.fl.seed * 7 + self.round_idx * 131 + k)
-            acc = evaluate(apply_server_update(self.params, delta), self.cfg,
-                           self.test_data[k])
-            deltas.append(delta)
-            sizes.append(client.n_samples)
-            accs.append(acc)
+        seeds = [self.fl.seed * 7 + self.round_idx * 131 + k
+                 for k in range(len(self.clients))]
+        sizes = [c.n_samples for c in self.clients]
+        if self.engine is not None:
+            self.params, accs, n_steps_all = self.engine.run_fl_round(
+                self.params, [spec] * len(self.clients), self.client_data,
+                self.test_data, sizes, batch_size=self.fl.batch_size,
+                epochs=self.fl.local_epochs, seeds=seeds)
+        else:
+            deltas, accs, n_steps_all = [], [], []
+            for k, client in enumerate(self.clients):
+                delta, n_steps = local_train(
+                    self.params, self.cfg, self.client_data[k],
+                    epochs=self.fl.local_epochs,
+                    batch_size=self.fl.batch_size,
+                    lr=self.fl.lr, momentum=self.fl.momentum, seed=seeds[k])
+                accs.append(evaluate(apply_server_update(self.params, delta),
+                                     self.cfg, self.test_data[k]))
+                deltas.append(delta)
+                n_steps_all.append(n_steps)
+            self.params = apply_server_update(self.params,
+                                              aggregate(deltas, sizes))
+
+        times = []
+        for client, n_steps in zip(self.clients, n_steps_all):
             prof = self.latency.fleet[client.device]
-            t = n_steps * self.latency.lookup(spec, client.device) + \
-                prof.comm_latency(2 * submodel_bytes(self.cfg, spec))
-            times.append(t)
-        self.params = apply_server_update(self.params, aggregate(deltas,
-                                                                 sizes))
+            times.append(
+                n_steps * self.latency.lookup(spec, client.device) +
+                prof.comm_latency(2 * submodel_bytes(self.cfg, spec)))
         rec = {"round": self.round_idx, "accs": accs,
                "fairness": accuracy_fairness(accs),
                "timing": round_time_fairness(times)}
@@ -69,7 +88,26 @@ def independent_learning(cfg: CNNConfig, init_params,
                          clients: List[ClientInfo], client_data: List[Dict],
                          test_data: List[Dict], *, rounds: int,
                          fl_cfg) -> List[float]:
-    """IL baseline (Table II): same local budget, no aggregation."""
+    """IL baseline (Table II): same local budget, no aggregation.
+
+    Note apply_server_update(p, ω_0 − ω_E) == ω_E, so a round is simply
+    'keep training from where you left off' — the batched path carries the
+    per-client trained params directly."""
+    spec = full_spec(cfg)
+    if getattr(fl_cfg, "batched_rounds", False):
+        engine = BatchedRoundEngine(cfg, lr=fl_cfg.lr,
+                                    momentum=fl_cfg.momentum)
+        specs = [spec] * len(clients)
+        thetas = engine.broadcast_params(init_params, len(clients))
+        for r in range(rounds):
+            seeds = [fl_cfg.seed + r * 31 + k for k in range(len(clients))]
+            res = engine.train_cohort(
+                thetas, specs, client_data, batch_size=fl_cfg.batch_size,
+                epochs=fl_cfg.local_epochs, seeds=seeds)
+            thetas = res.trained
+        return [float(a) for a in engine.eval_cohort(thetas, specs,
+                                                     test_data)]
+
     accs = []
     for k, client in enumerate(clients):
         p = init_params

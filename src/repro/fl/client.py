@@ -3,8 +3,8 @@ worker side). Train-step compilation is cached per submodel structure."""
 from __future__ import annotations
 
 import dataclasses
-from functools import lru_cache
-from typing import Dict, Optional, Tuple
+from collections import OrderedDict
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,12 +25,34 @@ class ClientInfo:
     latency_bound: float      # l_k in Alg. 1 (seconds per local step)
 
 
-_STEP_CACHE: Dict[Tuple, callable] = {}
+class _BoundedCache(OrderedDict):
+    """LRU-bounded compilation cache. One cache per value type — train
+    entries are (opt, step) pairs, eval entries bare callables — so the two
+    can't collide, and spec churn (the search helper emits new submodel
+    configs every round) can't grow host memory without bound. The batched
+    engine (fl.engine) avoids these caches entirely on the hot path."""
+
+    def __init__(self, maxsize: int = 64):
+        super().__init__()
+        self.maxsize = maxsize
+
+    def get_or_build(self, key, build: Callable):
+        if key in self:
+            self.move_to_end(key)
+            return self[key]
+        val = build()
+        self[key] = val
+        while len(self) > self.maxsize:
+            self.popitem(last=False)
+        return val
+
+
+_TRAIN_STEP_CACHE: _BoundedCache = _BoundedCache()
+_EVAL_STEP_CACHE: _BoundedCache = _BoundedCache()
 
 
 def _train_step(cfg_key, cfg: CNNConfig, lr: float, momentum: float):
-    key = ("cnn_train", cfg_key, lr, momentum)
-    if key not in _STEP_CACHE:
+    def build():
         opt = sgd(lr, momentum=momentum)
 
         @jax.jit
@@ -41,8 +63,9 @@ def _train_step(cfg_key, cfg: CNNConfig, lr: float, momentum: float):
             g, _ = clip_by_global_norm(g, 5.0)
             upd, opt_state = opt.update(g, opt_state, params)
             return apply_updates(params, upd), opt_state, l, m
-        _STEP_CACHE[key] = (opt, step)
-    return _STEP_CACHE[key]
+        return (opt, step)
+
+    return _TRAIN_STEP_CACHE.get_or_build((cfg_key, lr, momentum), build)
 
 
 def _cfg_key(cfg: CNNConfig):
@@ -67,14 +90,14 @@ def local_train(params, cfg: CNNConfig, data: Dict[str, np.ndarray], *,
 
 def evaluate(params, cfg: CNNConfig, data: Dict[str, np.ndarray],
              batch_size: int = 128, *, depth=None) -> float:
-    key = ("cnn_eval", _cfg_key(cfg), depth)
-    if key not in _STEP_CACHE:
+    def build():
         @jax.jit
         def fwd(p, x):
             logits, _ = cnn.forward(p, cfg, x, depth=depth)
             return jnp.argmax(logits, -1)
-        _STEP_CACHE[key] = fwd
-    fwd = _STEP_CACHE[key]
+        return fwd
+
+    fwd = _EVAL_STEP_CACHE.get_or_build((_cfg_key(cfg), depth), build)
     correct = total = 0
     for b in eval_batches(data, batch_size):
         pred = np.asarray(fwd(params, jnp.asarray(b["x"])))

@@ -1,0 +1,390 @@
+"""Batched parent-space FL round engine.
+
+The sequential round loop (extract → per-client jit → pad) compiles one
+program per *distinct submodel config* and re-runs Python orchestration per
+client. This engine instead trains every client in **parent coordinates**:
+each client gets a 0/1 mask pytree (``core.submodel.mask_cnn``, the same
+prefix-channel / prefix-depth semantics as ``kernels/elastic_matmul.py``'s
+``k_active`` tiles), and a single jitted ``vmap``-over-clients /
+``lax.scan``-over-steps program runs the whole cohort's local epochs —
+regardless of how many different specs the search helper emits.
+
+Exactness contract (verified in tests/test_fl_engine.py): for every spec,
+masked parent-space forward/backward computes the same math as the
+extract→train→pad path —
+
+* channels are masked after each conv (inactive input channels are zero, so
+  the full-width conv equals the sliced conv on active outputs);
+* groupnorm statistics are taken over *active channels only*, grouped the
+  way the submodel would group them (``_masked_groupnorm``);
+* depth-skipped blocks contribute through a 0/1 scalar: ``relu(x + d*h)``
+  with ``d=0`` is the identity because ``x ≥ 0`` post-ReLU;
+* gradients are masked, so momentum/updates on uncovered entries stay 0 and
+  ``Δ = mask * (ω_0 − ω_E)`` equals the zero-padded submodel update.
+
+Clients with fewer local steps than the cohort max are handled with step
+validity flags (invalid steps are no-ops on the carry), partial batches
+with sample validity weights — bitwise-faithful to the per-client loader.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_cnn import CNNConfig
+from repro.core.submodel import SubmodelSpec, channels_of, mask_cnn
+from repro.data.loader import index_batches
+from repro.models.layers import groupnorm
+from repro.optim import apply_updates, clip_by_global_norm, sgd
+
+
+# ---------------------------------------------------------------------------
+# masked parent-space model
+# ---------------------------------------------------------------------------
+def _conv(p, x, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"].astype(x.dtype)
+
+
+def _masked_groupnorm(x, A, eps=1e-5):
+    """GroupNorm over *active* channels with submodel group assignment.
+
+    x: (B, H, W, C) with inactive channels already zeroed.
+    A: (C, G) masked one-hot — A[c, g] = 1 iff channel c is active and the
+    submodel would place it in group g. Inactive channels have all-zero
+    rows, which both excludes them from the statistics and re-zeroes them
+    in the output (their per-channel mean/inv-std broadcast back as 0).
+    Matches models.layers.groupnorm numerics on the active prefix.
+    """
+    b, h, w, c = x.shape
+    x32 = x.astype(jnp.float32)
+    n = h * w * jnp.maximum(jnp.sum(A, 0), 1.0)          # (G,) samples/group
+    mu_g = jnp.einsum("bhwc,cg->bg", x32, A) / n
+    mu_c = jnp.einsum("cg,bg->bc", A, mu_g)
+    d = x32 - mu_c[:, None, None, :]
+    var_g = jnp.einsum("bhwc,cg->bg", d * d, A) / n
+    inv_c = jnp.einsum("cg,bg->bc", A, jax.lax.rsqrt(var_g + eps))
+    return (d * inv_c[:, None, None, :]).astype(x.dtype)
+
+
+def masked_forward(params, cfg: CNNConfig, x, ch_masks, gn_assign,
+                   depth_masks):
+    """Parent-shape forward equal to the extracted submodel's forward.
+
+    ch_masks[s]: (C_s,) 0/1 channel mask; gn_assign[s]: (C_s, G) masked
+    one-hot groupnorm assignment; depth_masks[s]: (n_blocks_s,) 0/1.
+    """
+    g = cfg.groupnorm_groups
+    x = jax.nn.relu(groupnorm(_conv(params["stem"], x), g))
+    for si, stage in enumerate(params["stages"]):
+        m = ch_masks[si].astype(x.dtype)
+        A = gn_assign[si]
+        x = _conv(stage["down"], x, stride=2) * m
+        x = jax.nn.relu(_masked_groupnorm(x, A))
+        for bi, bp in enumerate(stage["blocks"]):
+            d = depth_masks[si][bi].astype(x.dtype)
+            h = _conv(bp["conv1"], x) * m
+            h = jax.nn.relu(_masked_groupnorm(h, A))
+            h = _conv(bp["conv2"], h) * m
+            h = _masked_groupnorm(h, A)
+            # depth skip: x >= 0 post-ReLU, so relu(x + 0) == x exactly
+            x = jax.nn.relu(x + d * h)
+    feat = jnp.mean(x, axis=(1, 2))
+    return feat @ params["head"]["w"].astype(x.dtype) + \
+        params["head"]["b"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# host-side packing: masks + data
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class CohortMasks:
+    param_mask: Dict            # stacked (K, ...) pytree, mask_cnn per client
+    ch_masks: List[jax.Array]   # per stage (K, C_s)
+    gn_assign: List[jax.Array]  # per stage (K, C_s, G)
+    depth_masks: List[jax.Array]  # per stage (K, n_blocks_s)
+
+
+def build_cohort_masks(cfg: CNNConfig,
+                       specs: Sequence[SubmodelSpec]) -> CohortMasks:
+    g = cfg.groupnorm_groups
+    ch, gn, dm = [], [], []
+    for si, (cmax, n_blocks) in enumerate(cfg.stages):
+        cm = np.zeros((len(specs), cmax), np.float32)
+        A = np.zeros((len(specs), cmax, g), np.float32)
+        de = np.zeros((len(specs), n_blocks), np.float32)
+        for k, spec in enumerate(specs):
+            c = channels_of(cfg, si, spec.width[si])
+            cm[k, :c] = 1.0
+            gid = np.arange(c) // (c // g)       # submodel grouping
+            A[k, np.arange(c), gid] = 1.0
+            de[k, :spec.depth[si]] = 1.0
+        ch.append(jnp.asarray(cm))
+        gn.append(jnp.asarray(A))
+        dm.append(jnp.asarray(de))
+    per_spec: Dict[SubmodelSpec, Dict] = {}
+    trees = []
+    for spec in specs:
+        if spec not in per_spec:
+            per_spec[spec] = mask_cnn(cfg, spec)
+        trees.append(per_spec[spec])
+    # stack on host, then move to device once — cached CohortMasks hits
+    # (e.g. FedAvg's constant full-spec cohort) dispatch transfer-free
+    pmask = jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *trees)
+    return CohortMasks(pmask, ch, gn, dm)
+
+
+@dataclasses.dataclass
+class CohortBatches:
+    x: jax.Array            # (K, N, H, W, C) each client's data, once
+    y: jax.Array            # (K, N) int32
+    idx: jax.Array          # (K, S, B) int32 gather indices per step
+    sample_valid: jax.Array  # (K, S, B) float32
+    step_valid: jax.Array   # (K, S) bool
+    n_steps: np.ndarray     # (K,) host ints (timing model)
+
+
+def pack_cohort_data(datasets: Sequence[Dict[str, np.ndarray]]
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Stack every client's (round-invariant) data once: (K, N, ...)."""
+    K = len(datasets)
+    N = max(len(d["y"]) for d in datasets)
+    sample_shape = datasets[0]["x"].shape[1:]
+    x = np.zeros((K, N) + sample_shape, datasets[0]["x"].dtype)
+    y = np.zeros((K, N), np.int32)
+    for k, d in enumerate(datasets):
+        n = len(d["y"])
+        x[k, :n] = d["x"]
+        y[k, :n] = d["y"]
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def pack_cohort(datasets: Sequence[Dict[str, np.ndarray]], batch_size: int,
+                *, epochs: int, seeds: Sequence[int],
+                data: Optional[Tuple[jax.Array, jax.Array]] = None
+                ) -> CohortBatches:
+    """Pack every client's epoch-shuffled batch stream (same index stream
+    as the sequential loader) into one rectangular block. Each client's
+    data is resident exactly once — local epochs are an int32 index tensor
+    gathered per scan step, not extra data copies — and a cached
+    ``pack_cohort_data`` result can be reused across rounds (only the
+    index/validity tensors depend on the round seeds)."""
+    streams = [list(index_batches(len(d["y"]), batch_size, seed=s,
+                                  epochs=epochs))
+               for d, s in zip(datasets, seeds)]
+    K = len(streams)
+    S = max(len(st) for st in streams)
+    x, y = pack_cohort_data(datasets) if data is None else data
+    idx = np.zeros((K, S, batch_size), np.int32)
+    sv = np.zeros((K, S, batch_size), np.float32)
+    stv = np.zeros((K, S), bool)
+    for k, stream in enumerate(streams):
+        for t, b_idx in enumerate(stream):
+            idx[k, t, :len(b_idx)] = b_idx
+            sv[k, t, :len(b_idx)] = 1.0
+            stv[k, t] = True
+    return CohortBatches(x, y, jnp.asarray(idx), jnp.asarray(sv),
+                         jnp.asarray(stv),
+                         np.array([len(st) for st in streams]))
+
+
+@dataclasses.dataclass
+class EvalPack:
+    x: jax.Array        # (K, T, H, W, C)
+    y: jax.Array        # (K, T) int32
+    valid: jax.Array    # (K, T) float32
+
+
+def pack_eval(datasets: Sequence[Dict[str, np.ndarray]]) -> EvalPack:
+    K = len(datasets)
+    T = max(len(d["y"]) for d in datasets)
+    sample_shape = datasets[0]["x"].shape[1:]
+    x = np.zeros((K, T) + sample_shape, datasets[0]["x"].dtype)
+    y = np.zeros((K, T), np.int32)
+    v = np.zeros((K, T), np.float32)
+    for k, d in enumerate(datasets):
+        n = len(d["y"])
+        x[k, :n] = d["x"]
+        y[k, :n] = d["y"]
+        v[k, :n] = 1.0
+    return EvalPack(jnp.asarray(x), jnp.asarray(y), jnp.asarray(v))
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class CohortResult:
+    deltas: Dict            # stacked (K, ...) masked updates ω_0 − ω_E
+    trained: Dict           # stacked (K, ...) locally-trained parent params
+    masks: CohortMasks
+    n_steps: np.ndarray
+    accs: Optional[np.ndarray] = None   # fused local-eval accuracies
+
+
+class BatchedRoundEngine:
+    """One compiled train program + one eval program shared by every
+    submodel spec in the cohort (and across rounds, while shapes hold)."""
+
+    def __init__(self, cfg: CNNConfig, *, lr: float, momentum: float,
+                 grad_clip: float = 5.0):
+        self.cfg = cfg
+        self._opt = sgd(lr, momentum=momentum)
+        self._grad_clip = grad_clip
+        self._train = jax.jit(jax.vmap(self._client_train))
+        self._eval = jax.jit(jax.vmap(self._client_eval))
+        # fused local-train + local-eval: a full CFL round is two compiled
+        # programs total (this + aggregate_apply), whatever the spec mix
+        self._train_eval = jax.jit(jax.vmap(self._client_train_eval))
+        # bounded caches; data entries hold a strong ref to the keying
+        # datasets object so its id() cannot be recycled while cached
+        self._eval_cache: "OrderedDict[int, Tuple[object, EvalPack]]" = \
+            OrderedDict()
+        self._data_cache: "OrderedDict[int, Tuple[object, Tuple]]" = \
+            OrderedDict()
+        self._masks_cache: "OrderedDict[Tuple, CohortMasks]" = OrderedDict()
+
+    # -- single-client programs (vmapped over the cohort) ------------------
+    def _client_train(self, theta0, pmask, ch_masks, gn_assign, depth_masks,
+                      data_x, data_y, idx, svalid, stvalid):
+        opt_state = self._opt.init(theta0)
+
+        def step(carry, inp):
+            p, ostate = carry
+            ix, sv, valid = inp
+            x, yb = data_x[ix], data_y[ix]
+
+            def loss_fn(pp):
+                logits = masked_forward(pp, self.cfg, x, ch_masks,
+                                        gn_assign, depth_masks)
+                lp = jax.nn.log_softmax(logits)
+                ce_i = -jnp.take_along_axis(lp, yb[:, None], axis=-1)[:, 0]
+                return jnp.sum(ce_i * sv) / jnp.maximum(jnp.sum(sv), 1.0)
+
+            grad = jax.grad(loss_fn)(p)
+            grad = jax.tree.map(lambda gg, mm: gg * mm, grad, pmask)
+            grad, _ = clip_by_global_norm(grad, self._grad_clip)
+            upd, ostate2 = self._opt.update(grad, ostate, p)
+            new = (apply_updates(p, upd), ostate2)
+            # padded steps leave the carry untouched
+            carry2 = jax.tree.map(lambda a, b: jnp.where(valid, a, b),
+                                  new, carry)
+            return carry2, ()
+
+        (theta_e, _), _ = jax.lax.scan(step, (theta0, opt_state),
+                                       (idx, svalid, stvalid))
+        delta = jax.tree.map(lambda a, b, mm: (a - b) * mm, theta0, theta_e,
+                             pmask)
+        return delta, theta_e
+
+    def _client_eval(self, params, ch_masks, gn_assign, depth_masks, x, y,
+                     valid):
+        logits = masked_forward(params, self.cfg, x, ch_masks, gn_assign,
+                                depth_masks)
+        hit = (jnp.argmax(logits, -1) == y).astype(jnp.float32)
+        return jnp.sum(hit * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+    def _client_train_eval(self, theta0, pmask, ch_masks, gn_assign,
+                           depth_masks, data_x, data_y, idx, svalid,
+                           stvalid, ex, ey, evalid):
+        delta, theta_e = self._client_train(
+            theta0, pmask, ch_masks, gn_assign, depth_masks, data_x, data_y,
+            idx, svalid, stvalid)
+        acc = self._client_eval(theta_e, ch_masks, gn_assign, depth_masks,
+                                ex, ey, evalid)
+        return delta, theta_e, acc
+
+    # -- cohort API --------------------------------------------------------
+    def broadcast_params(self, params, n_clients: int):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_clients,) + a.shape), params)
+
+    def train_cohort(self, theta0_stacked, specs: Sequence[SubmodelSpec],
+                     datasets: Sequence[Dict], *, batch_size: int,
+                     epochs: int, seeds: Sequence[int],
+                     eval_datasets: Optional[Sequence[Dict]] = None
+                     ) -> CohortResult:
+        """Run every client's local epochs (and, when eval_datasets is
+        given, its local test pass) as one compiled program."""
+        masks = self._cohort_masks(specs)
+        cohort = pack_cohort(datasets, batch_size, epochs=epochs,
+                             seeds=seeds, data=self._cohort_data(datasets))
+        if eval_datasets is None:
+            deltas, trained = self._train(
+                theta0_stacked, masks.param_mask, masks.ch_masks,
+                masks.gn_assign, masks.depth_masks, cohort.x, cohort.y,
+                cohort.idx, cohort.sample_valid, cohort.step_valid)
+            return CohortResult(deltas, trained, masks, cohort.n_steps)
+        pack = self._eval_pack(eval_datasets)
+        deltas, trained, accs = self._train_eval(
+            theta0_stacked, masks.param_mask, masks.ch_masks,
+            masks.gn_assign, masks.depth_masks, cohort.x, cohort.y,
+            cohort.idx, cohort.sample_valid, cohort.step_valid, pack.x,
+            pack.y, pack.valid)
+        return CohortResult(deltas, trained, masks, cohort.n_steps,
+                            np.asarray(accs))
+
+    def _cohort_masks(self, specs: Sequence[SubmodelSpec]) -> CohortMasks:
+        key = tuple(specs)
+        masks = self._masks_cache.get(key)
+        if masks is None:
+            masks = build_cohort_masks(self.cfg, specs)
+            self._masks_cache[key] = masks
+            while len(self._masks_cache) > 8:
+                self._masks_cache.popitem(last=False)
+        return masks
+
+    def _eval_pack(self, datasets: Sequence[Dict]) -> EvalPack:
+        return self._cached(self._eval_cache, datasets, pack_eval)
+
+    def _cohort_data(self, datasets: Sequence[Dict]):
+        return self._cached(self._data_cache, datasets, pack_cohort_data)
+
+    @staticmethod
+    def _cached(cache: OrderedDict, datasets, build, bound: int = 4):
+        key = id(datasets)
+        hit = cache.get(key)
+        if hit is not None and hit[0] is datasets:
+            return hit[1]
+        val = build(datasets)
+        cache[key] = (datasets, val)
+        while len(cache) > bound:
+            cache.popitem(last=False)
+        return val
+
+    def run_fl_round(self, params, specs: Sequence[SubmodelSpec],
+                     datasets: Sequence[Dict], test_datasets: Sequence[Dict],
+                     sizes: Sequence[float], *, batch_size: int, epochs: int,
+                     seeds: Sequence[int], coverage_norm: bool = False):
+        """One full FL round — cohort local train + eval fused, then fused
+        aggregate+apply. The single dispatch contract shared by CFLServer
+        and FedAvgServer (FedAvg is specs=[full_spec]*K, coverage off).
+
+        Returns (new_params, accs, n_steps)."""
+        from repro.core.aggregate import aggregate_apply
+        theta0 = self.broadcast_params(params, len(specs))
+        res = self.train_cohort(theta0, specs, datasets,
+                                batch_size=batch_size, epochs=epochs,
+                                seeds=seeds, eval_datasets=test_datasets)
+        covs = res.masks.param_mask if coverage_norm else None
+        new_params = aggregate_apply(
+            params, res.deltas, covs, jnp.asarray(sizes, jnp.float32),
+            coverage_norm=coverage_norm)
+        return new_params, [float(a) for a in res.accs], res.n_steps
+
+    def eval_cohort(self, params_stacked, specs: Sequence[SubmodelSpec],
+                    datasets: Sequence[Dict],
+                    masks: Optional[CohortMasks] = None) -> np.ndarray:
+        if masks is None:
+            masks = self._cohort_masks(specs)
+        pack = self._eval_pack(datasets)
+        accs = self._eval(params_stacked, masks.ch_masks, masks.gn_assign,
+                          masks.depth_masks, pack.x, pack.y, pack.valid)
+        return np.asarray(accs)

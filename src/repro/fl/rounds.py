@@ -23,9 +23,16 @@ from repro.models import cnn
 
 
 def build_population(cfg: CNNConfig, *, kind: str, n_workers: int,
-                     n_samples: int, heterogeneity: str, seed: int = 0
+                     n_samples: int, heterogeneity: str, seed: int = 0,
+                     latency_bound_frac: float = 1.05
                      ) -> Tuple[List[ClientInfo], List[Dict], List[Dict]]:
-    """heterogeneity: 'quality' | 'distribution' | 'both' | 'none'."""
+    """heterogeneity: 'quality' | 'distribution' | 'both' | 'none'.
+
+    latency_bound_frac sets each client's budget
+    ``l_k = frac * min(own, fleet-median)`` full-model step latency
+    (CFLConfig.latency_bound_frac): weak devices get tight bounds, and
+    frac > 1 lets devices at/below the median train the full model.
+    """
     raw = make_dataset(kind, n_samples, seed=seed)
     train, test = train_test_split(raw, 0.25, seed)
     rng = np.random.RandomState(seed)
@@ -38,6 +45,11 @@ def build_population(cfg: CNNConfig, *, kind: str, n_workers: int,
         test_parts = iid_partition(len(test["y"]), n_workers, seed + 1)
 
     fleet = fleet_for_workers(n_workers)
+    # full-model latency is per device *type*, not per worker: compute the
+    # fleet median (and each profile's latency) once, outside the loop
+    full = full_spec(cfg)
+    full_lats = {p.name: train_step_latency(cfg, full, p) for p in set(fleet)}
+    med = float(np.median([full_lats[p.name] for p in fleet]))
     clients, cdata, tdata = [], [], []
     for k in range(n_workers):
         ctr = subset(train, parts[k])
@@ -48,11 +60,8 @@ def build_population(cfg: CNNConfig, *, kind: str, n_workers: int,
             ctr = dict(ctr, x=apply_quality(ctr["x"], q))
             cte = dict(cte, x=apply_quality(cte["x"], q))
         prof = fleet[k]
-        full_lat = train_step_latency(cfg, full_spec(cfg), prof)
         # heterogeneity in latency budgets: weak devices get tight bounds
-        med = np.median([train_step_latency(cfg, full_spec(cfg), p)
-                         for p in fleet])
-        bound = float(min(full_lat, med) * 1.05)
+        bound = float(min(full_lats[prof.name], med) * latency_bound_frac)
         clients.append(ClientInfo(cid=k, device=prof.name, quality=q,
                                   n_samples=len(ctr["y"]),
                                   latency_bound=bound))
@@ -67,7 +76,8 @@ def run_cfl(cfg: CNNConfig, *, kind="synthmnist", n_workers=8,
     fl_cfg = fl_cfg or CFLConfig(n_workers=n_workers, seed=seed)
     clients, cdata, tdata = build_population(
         cfg, kind=kind, n_workers=n_workers, n_samples=n_samples,
-        heterogeneity=heterogeneity, seed=seed)
+        heterogeneity=heterogeneity, seed=seed,
+        latency_bound_frac=fl_cfg.latency_bound_frac)
     params = cnn.init_params(jax.random.PRNGKey(seed), cfg)
     server = CFLServer(cfg, params, clients, cdata, tdata, fl_cfg)
     for _ in range(rounds):
@@ -81,7 +91,8 @@ def run_fedavg(cfg: CNNConfig, *, kind="synthmnist", n_workers=8,
     fl_cfg = fl_cfg or CFLConfig(n_workers=n_workers, seed=seed)
     clients, cdata, tdata = build_population(
         cfg, kind=kind, n_workers=n_workers, n_samples=n_samples,
-        heterogeneity=heterogeneity, seed=seed)
+        heterogeneity=heterogeneity, seed=seed,
+        latency_bound_frac=fl_cfg.latency_bound_frac)
     params = cnn.init_params(jax.random.PRNGKey(seed), cfg)
     server = FedAvgServer(cfg, params, clients, cdata, tdata, fl_cfg)
     for _ in range(rounds):
@@ -95,7 +106,8 @@ def run_il(cfg: CNNConfig, *, kind="synthmnist", n_workers=8,
     fl_cfg = fl_cfg or CFLConfig(n_workers=n_workers, seed=seed)
     clients, cdata, tdata = build_population(
         cfg, kind=kind, n_workers=n_workers, n_samples=n_samples,
-        heterogeneity=heterogeneity, seed=seed)
+        heterogeneity=heterogeneity, seed=seed,
+        latency_bound_frac=fl_cfg.latency_bound_frac)
     params = cnn.init_params(jax.random.PRNGKey(seed), cfg)
     return independent_learning(cfg, params, clients, cdata, tdata,
                                 rounds=rounds, fl_cfg=fl_cfg)

@@ -1,25 +1,37 @@
 """CFL server (Alg. 4): submodel sampling -> local training -> alignment +
 aggregation -> search-helper update, with per-round latency/fairness
-accounting from the device profiles."""
+accounting from the device profiles.
+
+Two round engines share the same algorithm:
+
+* **batched** (default) — every client trains in parent coordinates with a
+  per-client mask; one jitted vmap/scan program covers the whole cohort
+  regardless of spec diversity (fl.engine.BatchedRoundEngine).
+* **sequential** — the original extract → per-client jit → pad loop, kept
+  for A/B verification (one compile per distinct submodel config).
+"""
 from __future__ import annotations
 
 import dataclasses
+import random
 from typing import Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
 
 from repro.configs.paper_cnn import CNNConfig
-from repro.core.aggregate import aggregate, aggregate_coverage, \
-    apply_server_update
+from repro.core.aggregate import (aggregate, aggregate_coverage,
+                                  apply_server_update)
 from repro.core.latency import LatencyTable, fleet_for_workers
 from repro.core.predictor import AccuracyPredictor
 from repro.core.search import SearchConfig, search_all_workers, random_spec
 from repro.core.submodel import (SubmodelSpec, coverage_cnn, extract_cnn,
-                                 full_spec, pad_cnn, sub_cnn_config)
+                                 full_spec, minimal_spec, pad_cnn,
+                                 sub_cnn_config)
 from repro.core.fairness import accuracy_fairness, round_time_fairness
 from repro.core.latency import submodel_bytes
 from repro.fl.client import ClientInfo, evaluate, local_train
+from repro.fl.engine import BatchedRoundEngine
 
 
 @dataclasses.dataclass
@@ -31,7 +43,10 @@ class CFLConfig:
     momentum: float = 0.9
     search: SearchConfig = dataclasses.field(default_factory=SearchConfig)
     coverage_norm: bool = False     # beyond-paper aggregation variant
-    latency_bound_frac: float = 0.6  # l_k = frac * full-model latency
+    # l_k = frac * min(own, fleet-median) full-model step latency; >1 lets
+    # devices at/below the median train the full parent model.
+    latency_bound_frac: float = 1.05
+    batched_rounds: bool = True     # parent-space cohort engine vs seq loop
     seed: int = 0
 
 
@@ -53,6 +68,9 @@ class CFLServer:
         self.round_idx = 0
         self.history: List[Dict] = []
         self._rng = np.random.RandomState(fl_cfg.seed)
+        self.engine = BatchedRoundEngine(cfg, lr=fl_cfg.lr,
+                                         momentum=fl_cfg.momentum) \
+            if fl_cfg.batched_rounds else None
 
     # ------------------------------------------------------------------
     def sample_submodels(self) -> List[SubmodelSpec]:
@@ -60,17 +78,18 @@ class CFLServer:
         (predictor untrained)."""
         bounds = [c.latency_bound for c in self.clients]
         if self.round_idx == 0:
+            fallback = minimal_spec(self.cfg)
             specs = []
-            import random as _r
             for k, c in enumerate(self.clients):
-                rng = _r.Random(self.fl.seed * 131 + k)
+                rng = random.Random(self.fl.seed * 131 + k)
                 cand = [random_spec(self.cfg, rng) for _ in range(32)]
                 feas = [s for s in cand
                         if self.latency.lookup(s, c.device) < c.latency_bound]
-                specs.append(feas[0] if feas else SubmodelSpec(
-                    tuple(1 for _ in self.cfg.stages),
-                    tuple(min(self.cfg.elastic_widths)
-                          for _ in self.cfg.stages)))
+                # deterministic fallback: the minimal spec is the cheapest
+                # expressible submodel, so if even it is infeasible nothing
+                # else would be either — take it and let the timing model
+                # surface the violation.
+                specs.append(feas[0] if feas else fallback)
             return specs
         return search_all_workers(
             self.cfg, self.predictor, self.latency,
@@ -80,35 +99,25 @@ class CFLServer:
             seed=self.fl.seed + self.round_idx)
 
     # ------------------------------------------------------------------
+    def _client_seed(self, k: int) -> int:
+        return self.fl.seed * 7 + self.round_idx * 131 + k
+
+    def _simulated_times(self, specs, n_steps) -> List[float]:
+        """Simulated wall-clock per client: compute + update exchange."""
+        times = []
+        for client, spec, n in zip(self.clients, specs, n_steps):
+            prof = self.latency.fleet[client.device]
+            t = n * self.latency.lookup(spec, client.device) + \
+                prof.comm_latency(2 * submodel_bytes(self.cfg, spec))
+            times.append(float(t))
+        return times
+
     def run_round(self) -> Dict:
         specs = self.sample_submodels()
-        deltas, covs, sizes, accs, times = [], [], [], [], []
-        for k, (client, spec) in enumerate(zip(self.clients, specs)):
-            sub_cfg = sub_cnn_config(self.cfg, spec)
-            sub_params = extract_cnn(self.params, self.cfg, spec)
-            delta, n_steps = local_train(
-                sub_params, sub_cfg, self.client_data[k],
-                epochs=self.fl.local_epochs, batch_size=self.fl.batch_size,
-                lr=self.fl.lr, momentum=self.fl.momentum,
-                seed=self.fl.seed * 7 + self.round_idx * 131 + k)
-            acc = evaluate(apply_server_update(sub_params, delta), sub_cfg,
-                           self.test_data[k])
-            deltas.append(pad_cnn(delta, self.params, self.cfg, spec))
-            if self.fl.coverage_norm:
-                covs.append(coverage_cnn(self.params, self.cfg, spec))
-            sizes.append(client.n_samples)
-            accs.append(acc)
-            # simulated wall-clock: compute + update exchange
-            prof = self.latency.fleet[client.device]
-            t = n_steps * self.latency.lookup(spec, client.device) + \
-                prof.comm_latency(2 * submodel_bytes(self.cfg, spec))
-            times.append(t)
-
-        if self.fl.coverage_norm:
-            delta_t = aggregate_coverage(deltas, covs, sizes)
+        if self.fl.batched_rounds:
+            accs, times = self._train_round_batched(specs)
         else:
-            delta_t = aggregate(deltas, sizes)
-        self.params = apply_server_update(self.params, delta_t)
+            accs, times = self._train_round_sequential(specs)
 
         # search-helper update (Alg. 2)
         self.predictor.add_profiles(
@@ -127,6 +136,45 @@ class CFLServer:
         self.history.append(rec)
         self.round_idx += 1
         return rec
+
+    # ------------------------------------------------------------------
+    def _train_round_batched(self, specs):
+        """Whole cohort's local train + eval in one compiled program, then
+        one fused aggregate+apply program (fl.engine)."""
+        seeds = [self._client_seed(k) for k in range(len(self.clients))]
+        self.params, accs, n_steps = self.engine.run_fl_round(
+            self.params, specs, self.client_data, self.test_data,
+            [c.n_samples for c in self.clients],
+            batch_size=self.fl.batch_size, epochs=self.fl.local_epochs,
+            seeds=seeds, coverage_norm=self.fl.coverage_norm)
+        return accs, self._simulated_times(specs, n_steps)
+
+    def _train_round_sequential(self, specs):
+        """Original per-client loop (A/B reference)."""
+        deltas, covs, sizes, accs, n_steps_all = [], [], [], [], []
+        for k, (client, spec) in enumerate(zip(self.clients, specs)):
+            sub_cfg = sub_cnn_config(self.cfg, spec)
+            sub_params = extract_cnn(self.params, self.cfg, spec)
+            delta, n_steps = local_train(
+                sub_params, sub_cfg, self.client_data[k],
+                epochs=self.fl.local_epochs, batch_size=self.fl.batch_size,
+                lr=self.fl.lr, momentum=self.fl.momentum,
+                seed=self._client_seed(k))
+            acc = evaluate(apply_server_update(sub_params, delta), sub_cfg,
+                           self.test_data[k])
+            deltas.append(pad_cnn(delta, self.params, self.cfg, spec))
+            if self.fl.coverage_norm:
+                covs.append(coverage_cnn(self.params, self.cfg, spec))
+            sizes.append(client.n_samples)
+            accs.append(acc)
+            n_steps_all.append(n_steps)
+
+        if self.fl.coverage_norm:
+            delta_t = aggregate_coverage(deltas, covs, sizes)
+        else:
+            delta_t = aggregate(deltas, sizes)
+        self.params = apply_server_update(self.params, delta_t)
+        return accs, self._simulated_times(specs, n_steps_all)
 
     def global_accuracy(self, data: Dict) -> float:
         return evaluate(self.params, self.cfg, data)

@@ -20,6 +20,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across releases
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *, q):
     ci = pl.program_id(1)
@@ -93,7 +97,7 @@ def ssd_scan(xh, dt, A, Bm, Cm, chunk: int = 128, *, interpret: bool = True):
                                lambda bh, ci: (bh // H, ci, bh % H, 0)),
         out_shape=jax.ShapeDtypeStruct(xh.shape, xh.dtype),
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(xh, dt, A, Bm, Cm)

@@ -1,0 +1,86 @@
+"""Tiny fallback for `hypothesis` so property tests still run (as seeded
+random sweeps) in containers without the real package.
+
+Only the surface the test-suite uses is implemented: ``@given(**kwargs)``
+with strategies ``sampled_from / floats / integers / booleans / tuples``
+plus ``.map``, and a no-op ``@settings``. Draws are deterministic per test
+(seeded from the test name) so failures reproduce. The number of examples
+is ``min(max_examples, REPRO_COMPAT_MAX_EXAMPLES)`` (env var, default 5)
+to keep the fallback sweep cheap; installing `hypothesis` restores the
+full search.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import random
+import zlib
+
+_DEFAULT_CAP = int(os.environ.get("REPRO_COMPAT_MAX_EXAMPLES", "5"))
+
+
+class Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return Strategy(lambda rng: fn(self._draw(rng)))
+
+
+class _Strategies:
+    @staticmethod
+    def sampled_from(seq):
+        items = list(seq)
+        return Strategy(lambda rng: items[rng.randrange(len(items))])
+
+    @staticmethod
+    def floats(min_value, max_value, **_):
+        return Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    @staticmethod
+    def tuples(*strats):
+        return Strategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+    @staticmethod
+    def just(value):
+        return Strategy(lambda rng: value)
+
+
+strategies = _Strategies()
+
+
+def given(*args, **strats):
+    if args:
+        raise TypeError("fallback @given supports keyword strategies only")
+
+    def deco(test_fn):
+        @functools.wraps(test_fn)
+        def wrapper(*a, **kw):
+            n = min(getattr(wrapper, "_compat_max_examples", _DEFAULT_CAP),
+                    _DEFAULT_CAP)
+            rng = random.Random(zlib.adler32(test_fn.__name__.encode()))
+            for _ in range(max(n, 1)):
+                drawn = {k: s.draw(rng) for k, s in strats.items()}
+                test_fn(*a, **kw, **drawn)
+        # pytest must not see the strategy params as fixtures
+        del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = 10, deadline=None, **_):
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+    return deco

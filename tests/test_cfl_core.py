@@ -6,7 +6,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # container without hypothesis: seeded sweeps
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs.paper_cnn import CNNConfig
 from repro.core import (AccuracyPredictor, LatencyTable, SubmodelSpec,
