@@ -1,8 +1,10 @@
-"""Shared benchmark helpers: timing + the CPU-scale bench CNN config."""
+"""Shared benchmark helpers: timing, row emission (plain + JSON derived
+fields), and the CPU-scale bench CNN config."""
 from __future__ import annotations
 
+import json
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, Dict, List, Tuple
 
 from repro.configs.paper_cnn import CNNConfig
 
@@ -31,4 +33,18 @@ def timed(fn: Callable, *, repeat: int = 3, warmup: int = 1) -> float:
 
 def emit(rows: List[Row]):
     for name, us, derived in rows:
+        if "," in derived or '"' in derived:
+            # CSV-quote derived fields with embedded commas (JSON rows)
+            derived = '"' + derived.replace('"', '""') + '"'
         print(f"{name},{us:.1f},{derived}")
+
+
+def json_row(name: str, us: float, **fields) -> Row:
+    """Row whose derived column is a JSON object — the per-family engine
+    bench emits these so downstream tooling parses structured fields
+    instead of splitting `k=v;` strings."""
+    return (name, us, json.dumps(fields, sort_keys=True))
+
+
+def parse_json_rows(rows: List[Row]) -> Dict[str, Dict]:
+    return {name: json.loads(derived) for name, _, derived in rows}

@@ -1,6 +1,6 @@
 """Round-engine bench: batched parent-space cohort engine vs the
-sequential extract→jit-per-spec→pad loop, at 8/32/128 heterogeneous
-clients.
+sequential extract→jit-per-spec→pad loop, per elastic family (the paper
+CNN and a transformer zoo config) at heterogeneous cohort sizes.
 
 Regime: per-round **spec churn**. At fleet scale each round's cohort is a
 fresh sample of devices (millions of users), so the server sees a new mix
@@ -12,18 +12,19 @@ The bench reproduces that by sampling feasible random specs per round with
 a fresh seed (the tiny fixed fleet would otherwise let the GA converge and
 hide the recompile cost that motivates the engine).
 
-Each (mode × cohort size) leg runs in its own subprocess so jit caches are
-cold, as they are for a real server process. Wall-clock per round covers
-local training + eval + aggregation, including any compiles it triggers;
-submodel search / predictor updates are identical in both modes and
-excluded.
+Each (family × mode × cohort size) leg runs in its own subprocess so jit
+caches are cold, as they are for a real server process. Wall-clock per
+round covers local training + eval + aggregation, including any compiles
+it triggers; submodel search / predictor updates are identical in both
+modes and excluded. Rows carry JSON derived fields (benchmarks.common).
 
   PYTHONPATH=src python -m benchmarks.round_engine            # full sweep
-  PYTHONPATH=src python -m benchmarks.round_engine --single seq 32
+  PYTHONPATH=src python -m benchmarks.round_engine --single cnn seq 32
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import random
 import subprocess
@@ -33,7 +34,7 @@ from typing import List
 
 import numpy as np
 
-from benchmarks.common import Row
+from benchmarks.common import Row, json_row, parse_json_rows
 from repro.configs.paper_cnn import CNNConfig
 
 ROUNDS = 3
@@ -44,14 +45,24 @@ ENGINE_CNN = CNNConfig(name="engine-bench", in_channels=1, image_size=16,
                        groupnorm_groups=4,
                        elastic_widths=(0.25, 0.5, 0.75, 1.0))
 
-def _measure_leg(mode: str, n_workers: int, seed: int = 0):
-    """Runs in a fresh subprocess: one server, ROUNDS rounds, per-round
-    wall-clock + compiled-program counts for the round-engine section.
+# cohort sizes per family: the transformer seq leg compiles one LM train
+# program per distinct spec per round, so its sweep stays at the sizes the
+# acceptance targets (beating per-spec compilation at >= 8 clients)
+SWEEP = {"cnn": (8, 32, 128), "transformer": (8, 32)}
+
+
+def _engine_transformer_cfg():
+    from repro.configs import ARCHS, reduced
+    return reduced(ARCHS["granite-3-8b"], n_layers=4, d_model=64)
+
+
+def _measure_leg_cnn(mode: str, n_workers: int, seed: int = 0):
+    """One server, ROUNDS rounds of fresh-spec churn on the CNN parent.
 
     'Programs' = compiled entry points: for the batched engine the fused
     train+eval jit and the fused aggregate_apply jit (cache-size deltas);
     for the sequential loop the per-submodel-config train-step and eval
-    caches — the ISSUE's 'one compile per distinct submodel config'."""
+    caches — 'one compile per distinct submodel config'."""
     import importlib
 
     import jax
@@ -75,10 +86,15 @@ def _measure_leg(mode: str, n_workers: int, seed: int = 0):
     server = CFLServer(ENGINE_CNN, params, clients, cdata, tdata, fl)
 
     def jit_cache_size(fn):
-        # _cache_size is private jax API; degrade to 0 rather than crash
-        # the whole leg if a jax release renames it
+        # _cache_size is private jax API; if a jax release renames it the
+        # compile counter (and the <=2-programs acceptance assert) would
+        # pass vacuously at 0 — fail the leg loudly instead
         get = getattr(fn, "_cache_size", None)
-        return get() if callable(get) else 0
+        if not callable(get):
+            raise RuntimeError(
+                "jit._cache_size accessor unavailable on this jax version "
+                "- compile counting would be vacuous")
+        return get()
 
     def n_programs():
         if batched:
@@ -98,7 +114,7 @@ def _measure_leg(mode: str, n_workers: int, seed: int = 0):
             feas = [s for s in cand
                     if server.latency.lookup(s, c.device) < c.latency_bound]
             specs.append(feas[0] if feas else cand[0])
-        nspecs.append(len(set(specs)))
+        nspecs.append(len({s.genes() for s in specs}))
         c0, t0 = n_programs(), time.perf_counter()
         if batched:
             server._train_round_batched(specs)
@@ -110,75 +126,152 @@ def _measure_leg(mode: str, n_workers: int, seed: int = 0):
     return walls, compiles, nspecs
 
 
-def _run_leg_subprocess(mode: str, n_workers: int):
+def _measure_leg_transformer(mode: str, n_workers: int, seed: int = 0):
+    """Same churn regime on a transformer zoo parent: the batched leg runs
+    the family-agnostic BatchedRoundEngine, the sequential leg the
+    extract→jit-per-spec→pad SequentialFamilyTrainer."""
+    import importlib
+
+    import jax
+    agg_mod = importlib.import_module("repro.core.aggregate")
+    from repro.core import family_for
+    from repro.data import make_lm_dataset
+    from repro.fl.engine import BatchedRoundEngine, SequentialFamilyTrainer
+    from repro.models import transformer as T
+
+    cfg = _engine_transformer_cfg()
+    fam = family_for(cfg)
+    batched = mode == "batched"
+    datasets = [make_lm_dataset(48, 24, cfg.vocab_size, seed=seed * 31 + k)
+                for k in range(n_workers)]
+    tdata = [make_lm_dataset(16, 24, cfg.vocab_size, seed=977 + k)
+             for k in range(n_workers)]
+    sizes = [float(len(d["y"])) for d in datasets]
+    params = T.init_params(jax.random.PRNGKey(seed), cfg)
+    if batched:
+        runner = BatchedRoundEngine(cfg, lr=0.05, momentum=0.9)
+    else:
+        runner = SequentialFamilyTrainer(cfg, lr=0.05, momentum=0.9,
+                                         cache_size=4 * n_workers)
+
+    def jit_cache_size(fn):
+        # see _measure_leg_cnn: vacuous 0 would fake the acceptance assert
+        get = getattr(fn, "_cache_size", None)
+        if not callable(get):
+            raise RuntimeError(
+                "jit._cache_size accessor unavailable on this jax version "
+                "- compile counting would be vacuous")
+        return get()
+
+    def n_programs():
+        if batched:
+            return (jit_cache_size(runner._train_eval) +
+                    jit_cache_size(agg_mod.aggregate_apply))
+        return runner.n_programs()
+
+    walls, compiles, nspecs = [], [], []
+    for r in range(ROUNDS):
+        specs = [fam.random_spec(random.Random(seed * 7919 + r * 131 + k))
+                 for k in range(n_workers)]
+        nspecs.append(len({fam.genes(s) for s in specs}))
+        seeds = [seed * 7 + r * 131 + k for k in range(n_workers)]
+        c0, t0 = n_programs(), time.perf_counter()
+        params, _, _ = runner.run_fl_round(
+            params, specs, datasets, tdata, sizes, batch_size=16, epochs=1,
+            seeds=seeds)
+        walls.append(time.perf_counter() - t0)
+        compiles.append(n_programs() - c0)
+    return walls, compiles, nspecs
+
+
+MEASURE = {"cnn": _measure_leg_cnn, "transformer": _measure_leg_transformer}
+
+
+def _run_leg_subprocess(family: str, mode: str, n_workers: int):
     env = dict(os.environ)
     src = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "src")
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
     out = subprocess.run(
-        [sys.executable, "-m", "benchmarks.round_engine", "--single", mode,
-         str(n_workers)],
+        [sys.executable, "-m", "benchmarks.round_engine", "--single",
+         family, mode, str(n_workers)],
         capture_output=True, text=True, env=env,
         cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
     if out.returncode != 0:
-        raise RuntimeError(f"{mode}/{n_workers}c leg failed:\n{out.stderr}")
+        raise RuntimeError(
+            f"{family}/{mode}/{n_workers}c leg failed:\n{out.stderr}")
     for line in out.stdout.splitlines():
         if line.startswith("LEG,"):
-            walls, compiles, nspecs = line[len("LEG,"):].split(";")
-            parse = lambda s: [float(v) for v in s.split(",") if v]
-            return parse(walls), parse(compiles), parse(nspecs)
+            rec = json.loads(line[len("LEG,"):])
+            return rec["walls"], rec["compiles"], rec["nspecs"]
     raise RuntimeError(f"no LEG line in output:\n{out.stdout}")
 
 
 def run(seed: int = 0) -> List[Row]:
     rows: List[Row] = []
     summary = {}
-    for n_workers in (8, 32, 128):
-        for mode in ("seq", "batched"):
-            walls, compiles, nspecs = _run_leg_subprocess(mode, n_workers)
-            per_round = float(np.mean(walls))
-            summary[(n_workers, mode)] = (per_round, compiles)
-            rows.append((
-                f"round_engine_{mode}_{n_workers}c", per_round * 1e6,
-                f"compiles_per_round={np.mean(compiles):.1f};"
-                f"max_round_compiles={max(compiles):.0f};"
-                f"distinct_specs={max(nspecs):.0f}"))
-    for n_workers in (8, 32, 128):
-        sw, sc = summary[(n_workers, "seq")]
-        bw, bc = summary[(n_workers, "batched")]
-        rows.append((f"round_engine_speedup_{n_workers}c", 0.0,
-                     f"x={sw / bw:.2f};compiles_seq={np.mean(sc):.1f};"
-                     f"compiles_batched={np.mean(bc):.1f}"))
+    for family, sweep in SWEEP.items():
+        for n_workers in sweep:
+            for mode in ("seq", "batched"):
+                walls, compiles, nspecs = _run_leg_subprocess(
+                    family, mode, n_workers)
+                per_round = float(np.mean(walls))
+                summary[(family, n_workers, mode)] = (per_round, compiles)
+                rows.append(json_row(
+                    f"round_engine_{family}_{mode}_{n_workers}c",
+                    per_round * 1e6,
+                    family=family, mode=mode, n_workers=n_workers,
+                    compiles_per_round=float(np.mean(compiles)),
+                    max_round_compiles=float(max(compiles)),
+                    distinct_specs=float(max(nspecs))))
+        for n_workers in sweep:
+            sw, sc = summary[(family, n_workers, "seq")]
+            bw, bc = summary[(family, n_workers, "batched")]
+            rows.append(json_row(
+                f"round_engine_speedup_{family}_{n_workers}c", 0.0,
+                family=family, n_workers=n_workers, x=sw / bw,
+                compiles_seq=float(np.mean(sc)),
+                compiles_batched=float(np.mean(bc))))
     return rows
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--single", nargs=2, metavar=("MODE", "N"))
+    ap.add_argument("--single", nargs=3, metavar=("FAMILY", "MODE", "N"))
     args = ap.parse_args()
     if args.single:
-        mode, n = args.single[0], int(args.single[1])
+        family, mode, n = args.single[0], args.single[1], int(args.single[2])
+        if family not in MEASURE:
+            ap.error(f"FAMILY must be one of {sorted(MEASURE)}, got "
+                     f"{family!r}")
         if mode not in ("seq", "batched"):
             ap.error(f"MODE must be 'seq' or 'batched', got {mode!r}")
-        walls, compiles, nspecs = _measure_leg(mode, n)
-        print("LEG," + ";".join(
-            ",".join(str(v) for v in xs)
-            for xs in (walls, compiles, nspecs)))
+        walls, compiles, nspecs = MEASURE[family](mode, n)
+        print("LEG," + json.dumps({"walls": walls,
+                                   "compiles": [float(c) for c in compiles],
+                                   "nspecs": [float(s) for s in nspecs]}))
         return
 
     rows = run()
-    for name, us, derived in rows:
-        print(f"{name},{us:.1f},{derived}")
-    by = {r[0]: dict(kv.split("=") for kv in r[2].split(";")) for r in rows}
-    # acceptance: batched engine compiles <= 2 programs per round in every
-    # round regardless of spec diversity, and >= 2x faster per round at 32
-    # heterogeneous clients under per-round spec churn
-    for n_workers in (8, 32, 128):
-        d = by[f"round_engine_batched_{n_workers}c"]
-        assert float(d["max_round_compiles"]) <= 2, d
-    speedup = float(by["round_engine_speedup_32c"]["x"])
-    print(f"per-round speedup at 32 clients: {speedup:.2f}x")
-    assert speedup >= 2.0, speedup
+    from benchmarks.common import emit
+    emit(rows)
+    by = parse_json_rows(rows)
+    # acceptance: the batched engine compiles <= 2 programs per round in
+    # every round regardless of spec diversity (both families); >= 2x
+    # faster at 32 heterogeneous CNN clients; and beats per-spec
+    # compilation for the transformer family at >= 8 clients
+    for family, sweep in SWEEP.items():
+        for n_workers in sweep:
+            d = by[f"round_engine_{family}_batched_{n_workers}c"]
+            assert d["max_round_compiles"] <= 2, d
+    cnn_x = by["round_engine_speedup_cnn_32c"]["x"]
+    print(f"cnn per-round speedup at 32 clients: {cnn_x:.2f}x")
+    assert cnn_x >= 2.0, cnn_x
+    for n_workers in SWEEP["transformer"]:
+        tx = by[f"round_engine_speedup_transformer_{n_workers}c"]["x"]
+        print(f"transformer per-round speedup at {n_workers} clients: "
+              f"{tx:.2f}x")
+        assert tx > 1.0, tx
 
 
 if __name__ == "__main__":

@@ -3,7 +3,18 @@ the paper's Fig. 4 / Fig. 5 / Table II story in one run, plus the
 beyond-paper coverage-normalised aggregation variant.
 
   PYTHONPATH=src python examples/fl_heterogeneous.py
+
+Engine knobs (CFLConfig):
+  --engine batched   one jitted vmap/scan program per round for the whole
+                     cohort, whatever the submodel spec mix (default);
+  --engine seq       the original extract → jit-per-spec → pad loop (A/B);
+  --shards N         shard the engine's stacked client axis over N devices
+                     (CFLConfig.cohort_shards — a 1-D `cohort` mesh via
+                     repro.sharding.cohort; clamped to a divisor of the
+                     cohort and the available device count, so `--shards 4`
+                     on a 1-CPU host degrades gracefully to 1).
 """
+import argparse
 import sys
 sys.path.insert(0, "src")
 
@@ -13,10 +24,20 @@ import numpy as np
 from repro.configs.paper_cnn import CNNConfig
 from repro.fl import CFLConfig, run_cfl, run_fedavg, run_il
 
+ap = argparse.ArgumentParser()
+ap.add_argument("--engine", choices=("batched", "seq"), default="batched",
+                help="batched parent-space cohort engine vs sequential "
+                     "per-client loop")
+ap.add_argument("--shards", type=int, default=1,
+                help="cohort-axis shards (devices) for the batched engine")
+args = ap.parse_args()
+
 cfg = CNNConfig(name="hetero", in_channels=1, image_size=28,
                 stem_channels=8, stages=((16, 2), (32, 2)),
                 groupnorm_groups=4, elastic_widths=(0.5, 1.0))
-fl = CFLConfig(n_workers=6, local_epochs=2, batch_size=32, lr=0.08, seed=0)
+fl = CFLConfig(n_workers=6, local_epochs=2, batch_size=32, lr=0.08, seed=0,
+               batched_rounds=(args.engine == "batched"),
+               cohort_shards=args.shards)
 
 for het in ("quality", "distribution"):
     print(f"\n== heterogeneity: {het} ==")

@@ -50,8 +50,13 @@ class SSMConfig:
     d_conv: int = 4
     n_groups: int = 1
     chunk: int = 256        # SSD chunk length for the chunked train scan
+    # CFL elasticity: a submodel keeps a prefix of SSD heads, so its
+    # d_inner is no longer expand*d_model — extract_transformer pins it
+    d_inner_override: Optional[int] = None
 
     def d_inner(self, d_model: int) -> int:
+        if self.d_inner_override is not None:
+            return self.d_inner_override
         return self.expand * d_model
 
     def n_heads(self, d_model: int) -> int:

@@ -4,7 +4,12 @@ from repro.core.submodel import (SubmodelSpec, TransformerSubSpec,
                                  coverage_cnn, full_spec, mask_cnn,
                                  minimal_spec,
                                  extract_transformer, pad_transformer,
-                                 full_transformer_spec)
+                                 full_transformer_spec, transformer_ff,
+                                 transformer_experts, transformer_ssm_heads)
+from repro.core.elastic import (ElasticFamily, CNNElasticFamily,
+                                TransformerElasticFamily, family_for,
+                                SpecMasks, CohortMasks, build_cohort_masks,
+                                masked_forward)
 from repro.core.aggregate import (aggregate, aggregate_apply,
                                   aggregate_coverage,
                                   apply_server_update, weighted_sum)

@@ -1,0 +1,459 @@
+"""ElasticFamily — one parent-space mask algebra per model family.
+
+The batched round engine (``fl.engine.BatchedRoundEngine``) trains every
+client of a CFL cohort in *parent coordinates* under a per-client 0/1 mask,
+so one jitted program serves every submodel spec. This module is the
+family protocol that makes the engine model-agnostic:
+
+* ``spec_masks(spec)``   — 0/1 parent-shaped param mask + the family's
+  forward-mask pytree (norm-group assignments, width/depth gates), built
+  once per distinct ``genes()`` (bounded LRU — the spec table);
+* ``masked_loss`` / ``masked_metric`` — parent-shape forward equal to the
+  extracted submodel's (the engine's exactness contract);
+* ``extract`` / ``pad_delta`` / ``sub_loss`` / ``sub_metric`` — the
+  sequential extract → train → pad reference path the masked algebra is
+  verified against (A/B in tests/test_elastic_family.py).
+
+Two families:
+
+* **CNN** (the paper's parent, §III) — prefix channels + prefix depth with
+  masked groupnorm; moved verbatim from the PR-1 engine internals.
+* **Transformer/SSM** (the assigned zoo) — prefix d_ff (``mlp`` width
+  mask), prefix routed experts (router mask), prefix SSD heads (masked
+  gated rmsnorm), and per-segment depth gates scanned with the layer
+  params; the same prefix-slice semantics as ``kernels/elastic_matmul``'s
+  ``k_active`` tiles and ``core.submodel.extract_transformer``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.configs.paper_cnn import CNNConfig
+from repro.core.submodel import (SubmodelSpec, TransformerSubSpec,
+                                 channels_of, extract_cnn,
+                                 extract_transformer, full_spec,
+                                 full_transformer_spec, mask_cnn, pad_cnn,
+                                 pad_transformer, sub_cnn_config,
+                                 transformer_experts, transformer_ff,
+                                 transformer_ssm_heads)
+from repro.models import cnn
+from repro.models import transformer as T
+from repro.models.layers import groupnorm
+
+
+# ---------------------------------------------------------------------------
+# mask containers + the spec-table LRU
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class SpecMasks:
+    """Per-spec host-side masks: parent-shaped 0/1 ``param_mask`` pytree
+    (gradient/coverage semantics) + the family's forward-mask pytree."""
+    param_mask: Any
+    fwd: Any
+
+
+@dataclasses.dataclass
+class CohortMasks:
+    """Stacked (K, ...) device masks for one cohort."""
+    param_mask: Any
+    fwd: Any
+
+    # CNN-family accessors (kept for the PR-1 engine API / tests)
+    @property
+    def ch_masks(self):
+        return self.fwd["ch"]
+
+    @property
+    def gn_assign(self):
+        return self.fwd["gn"]
+
+    @property
+    def depth_masks(self):
+        return self.fwd["depth"]
+
+
+class SpecLRU(OrderedDict):
+    """Bounded LRU keyed by ``genes()`` — the same bounded-cache discipline
+    as ``fl.client``'s split train/eval compilation caches, applied to the
+    spec→mask tables so per-round mask construction stops rebuilding
+    identical pytrees under spec churn."""
+
+    def __init__(self, maxsize: int = 128):
+        super().__init__()
+        self.maxsize = maxsize
+
+    def get_or_build(self, key, build: Callable):
+        if key in self:
+            self.move_to_end(key)
+            return self[key]
+        val = build()
+        self[key] = val
+        while len(self) > self.maxsize:
+            self.popitem(last=False)
+        return val
+
+
+# ---------------------------------------------------------------------------
+# the protocol
+# ---------------------------------------------------------------------------
+class ElasticFamily:
+    """Family protocol: spec algebra + parent-space masked compute + the
+    sequential extract/pad reference. Subclasses implement the ``_build``
+    and compute hooks; spec→mask caching is shared."""
+
+    name: str = "abstract"
+
+    def __init__(self, cfg, spec_cache: int = 128):
+        self.cfg = cfg
+        self._spec_cache = SpecLRU(spec_cache)
+
+    # -- spec algebra ------------------------------------------------------
+    def full_spec(self):
+        raise NotImplementedError
+
+    def random_spec(self, rng):
+        raise NotImplementedError
+
+    def genes(self, spec) -> Tuple:
+        return spec.genes()
+
+    # -- masks (spec table, LRU by genes) ----------------------------------
+    def spec_masks(self, spec) -> SpecMasks:
+        return self._spec_cache.get_or_build(
+            self.genes(spec), lambda: self._build_spec_masks(spec))
+
+    def _build_spec_masks(self, spec) -> SpecMasks:
+        raise NotImplementedError
+
+    def cohort_masks(self, specs: Sequence) -> CohortMasks:
+        """Stack per-spec host masks along a new leading client axis and
+        move to device once (the stacked dispatch's single transfer)."""
+        per = [self.spec_masks(s) for s in specs]
+
+        def stack(*xs):
+            return jnp.asarray(np.stack([np.asarray(x) for x in xs]))
+
+        pmask = jax.tree.map(stack, *[p.param_mask for p in per])
+        fwd = jax.tree.map(stack, *[p.fwd for p in per])
+        return CohortMasks(pmask, fwd)
+
+    # -- parent-space masked compute (vmapped by the engine) ---------------
+    def masked_loss(self, params, fwd, x, y, sample_weight):
+        raise NotImplementedError
+
+    def masked_metric(self, params, fwd, x, y, valid):
+        raise NotImplementedError
+
+    # -- sequential extract → train → pad reference ------------------------
+    def extract(self, params, spec) -> Tuple[Any, Any]:
+        """Returns (sub_params, sub_ctx); sub_ctx is the submodel config."""
+        raise NotImplementedError
+
+    def pad_delta(self, delta, parent_template, spec):
+        raise NotImplementedError
+
+    def sub_loss(self, sub_params, sub_ctx, x, y, sample_weight):
+        raise NotImplementedError
+
+    def sub_metric(self, sub_params, sub_ctx, x, y, valid):
+        raise NotImplementedError
+
+
+def _weighted_mean(values, weights):
+    """Per-sample statistic → weighted scalar (0-weight-safe)."""
+    return jnp.sum(values * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+
+
+def _weighted_ce(logits, y, sample_weight):
+    lp = jax.nn.log_softmax(logits)
+    ce = -jnp.take_along_axis(lp, y[:, None], axis=-1)[:, 0]
+    return _weighted_mean(ce, sample_weight)
+
+
+def _weighted_acc(logits, y, valid):
+    hit = (jnp.argmax(logits, -1) == y).astype(jnp.float32)
+    return _weighted_mean(hit, valid)
+
+
+# ===========================================================================
+# CNN family (paper parent) — masked compute moved from fl/engine.py (PR 1)
+# ===========================================================================
+def _conv(p, x, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"].astype(x.dtype)
+
+
+def _masked_groupnorm(x, A, eps=1e-5):
+    """GroupNorm over *active* channels with submodel group assignment.
+
+    x: (B, H, W, C) with inactive channels already zeroed.
+    A: (C, G) masked one-hot — A[c, g] = 1 iff channel c is active and the
+    submodel would place it in group g. Inactive channels have all-zero
+    rows, which both excludes them from the statistics and re-zeroes them
+    in the output (their per-channel mean/inv-std broadcast back as 0).
+    Matches models.layers.groupnorm numerics on the active prefix.
+    """
+    b, h, w, c = x.shape
+    x32 = x.astype(jnp.float32)
+    n = h * w * jnp.maximum(jnp.sum(A, 0), 1.0)          # (G,) samples/group
+    mu_g = jnp.einsum("bhwc,cg->bg", x32, A) / n
+    mu_c = jnp.einsum("cg,bg->bc", A, mu_g)
+    d = x32 - mu_c[:, None, None, :]
+    var_g = jnp.einsum("bhwc,cg->bg", d * d, A) / n
+    inv_c = jnp.einsum("cg,bg->bc", A, jax.lax.rsqrt(var_g + eps))
+    return (d * inv_c[:, None, None, :]).astype(x.dtype)
+
+
+def masked_forward(params, cfg: CNNConfig, x, ch_masks, gn_assign,
+                   depth_masks):
+    """Parent-shape forward equal to the extracted submodel's forward.
+
+    ch_masks[s]: (C_s,) 0/1 channel mask; gn_assign[s]: (C_s, G) masked
+    one-hot groupnorm assignment; depth_masks[s]: (n_blocks_s,) 0/1.
+    """
+    g = cfg.groupnorm_groups
+    x = jax.nn.relu(groupnorm(_conv(params["stem"], x), g))
+    for si, stage in enumerate(params["stages"]):
+        m = ch_masks[si].astype(x.dtype)
+        A = gn_assign[si]
+        x = _conv(stage["down"], x, stride=2) * m
+        x = jax.nn.relu(_masked_groupnorm(x, A))
+        for bi, bp in enumerate(stage["blocks"]):
+            d = depth_masks[si][bi].astype(x.dtype)
+            h = _conv(bp["conv1"], x) * m
+            h = jax.nn.relu(_masked_groupnorm(h, A))
+            h = _conv(bp["conv2"], h) * m
+            h = _masked_groupnorm(h, A)
+            # depth skip: x >= 0 post-ReLU, so relu(x + 0) == x exactly
+            x = jax.nn.relu(x + d * h)
+    feat = jnp.mean(x, axis=(1, 2))
+    return feat @ params["head"]["w"].astype(x.dtype) + \
+        params["head"]["b"].astype(x.dtype)
+
+
+class CNNElasticFamily(ElasticFamily):
+    """The paper's elastic CNN: per-stage prefix channels + prefix depth."""
+
+    name = "cnn"
+
+    def full_spec(self) -> SubmodelSpec:
+        return full_spec(self.cfg)
+
+    def random_spec(self, rng) -> SubmodelSpec:
+        from repro.core.search import random_spec
+        return random_spec(self.cfg, rng)
+
+    def _build_spec_masks(self, spec: SubmodelSpec) -> SpecMasks:
+        cfg = self.cfg
+        g = cfg.groupnorm_groups
+        ch, gn, de = [], [], []
+        for si, (cmax, n_blocks) in enumerate(cfg.stages):
+            c = channels_of(cfg, si, spec.width[si])
+            cm = np.zeros((cmax,), np.float32)
+            cm[:c] = 1.0
+            A = np.zeros((cmax, g), np.float32)
+            gid = np.arange(c) // (c // g)       # submodel grouping
+            A[np.arange(c), gid] = 1.0
+            dm = np.zeros((n_blocks,), np.float32)
+            dm[:spec.depth[si]] = 1.0
+            ch.append(cm)
+            gn.append(A)
+            de.append(dm)
+        return SpecMasks(mask_cnn(cfg, spec),
+                         {"ch": ch, "gn": gn, "depth": de})
+
+    def masked_loss(self, params, fwd, x, y, sample_weight):
+        logits = masked_forward(params, self.cfg, x, fwd["ch"], fwd["gn"],
+                                fwd["depth"])
+        return _weighted_ce(logits, y, sample_weight)
+
+    def masked_metric(self, params, fwd, x, y, valid):
+        logits = masked_forward(params, self.cfg, x, fwd["ch"], fwd["gn"],
+                                fwd["depth"])
+        return _weighted_acc(logits, y, valid)
+
+    def extract(self, params, spec):
+        return (extract_cnn(params, self.cfg, spec),
+                sub_cnn_config(self.cfg, spec))
+
+    def pad_delta(self, delta, parent_template, spec):
+        return pad_cnn(delta, parent_template, self.cfg, spec)
+
+    def sub_loss(self, sub_params, sub_cfg, x, y, sample_weight):
+        logits, _ = cnn.forward(sub_params, sub_cfg, x)
+        return _weighted_ce(logits, y, sample_weight)
+
+    def sub_metric(self, sub_params, sub_cfg, x, y, valid):
+        logits, _ = cnn.forward(sub_params, sub_cfg, x)
+        return _weighted_acc(logits, y, valid)
+
+
+# ===========================================================================
+# Transformer/SSM family (the assigned zoo)
+# ===========================================================================
+def _lm_per_sample_ce(logits, tokens):
+    """Mean next-token CE per sequence. logits (B,S,V); tokens (B,S)."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    tgt = tokens[:, 1:]
+    ce = -jnp.take_along_axis(lp[:, :-1, :], tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(ce, axis=-1)                          # (B,)
+
+
+def _lm_per_sample_acc(logits, tokens):
+    pred = jnp.argmax(logits[:, :-1, :], axis=-1)
+    return jnp.mean((pred == tokens[:, 1:]).astype(jnp.float32), axis=-1)
+
+
+class TransformerElasticFamily(ElasticFamily):
+    """Parent-space CFL for the transformer/SSM zoo.
+
+    Elastic dims (all prefix slices, matching ``extract_transformer``):
+    d_ff (``ff_frac``), routed experts (``expert_frac``), SSD heads
+    (``ssm_head_frac``), and per-segment kept layers (depth gates scanned
+    with the stacked layer params — a gated residual block with gate 0 is
+    exactly the identity).
+
+    The local objective is per-sequence causal CE (no MoE aux terms —
+    identical in the masked and extracted paths, so batched == sequential
+    holds for MoE parents too, where parent-E-dependent aux coefficients
+    and capacity buffers would otherwise diverge). Frontend/encoder-only
+    archs (vlm/audio) are not cohort-packable token models and are
+    rejected at construction.
+    """
+
+    name = "transformer"
+
+    def __init__(self, cfg: ModelConfig, spec_cache: int = 128):
+        if cfg.frontend is not None or cfg.encoder_only:
+            raise ValueError(
+                f"{cfg.name}: frontend/encoder-only archs have no token "
+                "cohort packing — CFL engine supports decoder LMs")
+        super().__init__(cfg, spec_cache)
+
+    def _template(self):
+        """Parent-shaped all-ones tree for the coverage round trip. Built
+        per call and released after — the per-spec masks themselves are
+        LRU-cached by genes, so this runs once per distinct spec, and the
+        transient is no larger than the parent-sized param mask it
+        produces. (Direct per-leaf construction, mask_cnn-style, is the
+        ROADMAP follow-up for truly large parents.)"""
+        shapes = jax.eval_shape(
+            lambda: T.init_params(jax.random.PRNGKey(0), self.cfg))
+        return jax.tree.map(lambda s: np.ones(s.shape, np.float32), shapes)
+
+    # -- spec algebra ------------------------------------------------------
+    def full_spec(self) -> TransformerSubSpec:
+        return full_transformer_spec(self.cfg)
+
+    def random_spec(self, rng) -> TransformerSubSpec:
+        """Feasible random spec: ≥1 kept layer per segment, widths drawn
+        from the config's elastic grid."""
+        cfg = self.cfg
+        layers = []
+        for seg in cfg.segments:
+            k = rng.randint(1, seg.n_layers)
+            layers.append(tuple(sorted(rng.sample(range(seg.n_layers), k))))
+        widths = cfg.elastic_widths
+        return TransformerSubSpec(
+            layers=tuple(layers),
+            ff_frac=rng.choice(widths),
+            expert_frac=rng.choice(widths) if cfg.moe is not None else 1.0,
+            ssm_head_frac=rng.choice(widths) if cfg.ssm is not None else 1.0)
+
+    # -- masks -------------------------------------------------------------
+    def _build_spec_masks(self, spec: TransformerSubSpec) -> SpecMasks:
+        cfg = self.cfg
+        fwd: Dict[str, Any] = {}
+        ff = transformer_ff(cfg, spec.ff_frac)
+        if cfg.d_ff:
+            m = np.zeros((cfg.d_ff,), np.float32)
+            m[:ff] = 1.0
+            fwd["ff"] = m
+        if cfg.moe is not None:
+            n_exp = transformer_experts(cfg, spec.expert_frac)
+            m = np.zeros((cfg.moe.n_experts,), np.float32)
+            m[:n_exp] = 1.0
+            fwd["experts"] = m
+        if cfg.ssm is not None:
+            nh = cfg.ssm.n_heads(cfg.d_model)
+            # mirror extract_transformer's gate: frac == 1.0 keeps *all*
+            # heads even when nh is not a multiple of n_groups
+            nh_keep = (nh if spec.ssm_head_frac >= 1.0
+                       else transformer_ssm_heads(cfg, spec.ssm_head_frac))
+            m = np.zeros((nh,), np.float32)
+            m[:nh_keep] = 1.0
+            fwd["ssm_heads"] = m
+        depth = []
+        for seg, keep in zip(cfg.segments, spec.layers):
+            dm = np.zeros((seg.n_layers,), np.float32)
+            dm[np.asarray(keep, np.int32)] = 1.0
+            depth.append(dm)
+        fwd["depth"] = tuple(depth)
+        return SpecMasks(self._coverage(spec), fwd)
+
+    def _coverage(self, spec: TransformerSubSpec):
+        """Parent-shaped 0/1 param mask via the extract→pad round trip on
+        an all-ones template — coverage semantics equal to the sequential
+        path by construction (the transformer analogue of mask_cnn /
+        coverage_cnn)."""
+        template = self._template()
+        sub, _ = extract_transformer(template, self.cfg, spec)
+        ones = jax.tree.map(jnp.ones_like, sub)
+        cov = pad_transformer(ones, template, self.cfg, spec)
+        return jax.tree.map(lambda a: np.asarray(a, np.float32), cov)
+
+    # -- parent-space masked compute ---------------------------------------
+    def masked_loss(self, params, fwd, x, y, sample_weight):
+        del y                                   # targets come from tokens
+        logits, _ = T.forward(params, self.cfg, {"tokens": x}, masks=fwd)
+        return _weighted_mean(_lm_per_sample_ce(logits, x), sample_weight)
+
+    def masked_metric(self, params, fwd, x, y, valid):
+        del y
+        logits, _ = T.forward(params, self.cfg, {"tokens": x}, masks=fwd)
+        return _weighted_mean(_lm_per_sample_acc(logits, x), valid)
+
+    # -- sequential reference ----------------------------------------------
+    def extract(self, params, spec):
+        return extract_transformer(params, self.cfg, spec)
+
+    def pad_delta(self, delta, parent_template, spec):
+        return pad_transformer(delta, parent_template, self.cfg, spec)
+
+    def sub_loss(self, sub_params, sub_cfg, x, y, sample_weight):
+        del y
+        logits, _ = T.forward(sub_params, sub_cfg, {"tokens": x})
+        return _weighted_mean(_lm_per_sample_ce(logits, x), sample_weight)
+
+    def sub_metric(self, sub_params, sub_cfg, x, y, valid):
+        del y
+        logits, _ = T.forward(sub_params, sub_cfg, {"tokens": x})
+        return _weighted_mean(_lm_per_sample_acc(logits, x), valid)
+
+
+# ---------------------------------------------------------------------------
+# family resolution
+# ---------------------------------------------------------------------------
+def family_for(cfg) -> ElasticFamily:
+    """Resolve a model config to its ElasticFamily."""
+    if isinstance(cfg, ElasticFamily):
+        return cfg
+    if isinstance(cfg, CNNConfig):
+        return CNNElasticFamily(cfg)
+    if isinstance(cfg, ModelConfig):
+        return TransformerElasticFamily(cfg)
+    raise TypeError(f"no elastic family for {type(cfg).__name__}")
+
+
+def build_cohort_masks(cfg, specs: Sequence) -> CohortMasks:
+    """Stacked cohort masks for any family config (PR-1 API, now generic)."""
+    return family_for(cfg).cohort_masks(specs)

@@ -203,10 +203,19 @@ class TransformerSubSpec:
     layers[i]: tuple of kept layer indices (sorted) within segment i.
     ff_frac: fraction of d_ff kept (prefix).
     expert_frac: fraction of routed experts kept (prefix; MoE only).
+    ssm_head_frac: fraction of SSD heads kept (prefix; mamba blocks only).
     """
     layers: Tuple[Tuple[int, ...], ...]
     ff_frac: float = 1.0
     expert_frac: float = 1.0
+    ssm_head_frac: float = 1.0
+
+    def genes(self) -> Tuple:
+        """Hashable spec identity — the ElasticFamily spec-table key."""
+        return (tuple(tuple(k) for k in self.layers),
+                int(round(self.ff_frac * 100)),
+                int(round(self.expert_frac * 100)),
+                int(round(self.ssm_head_frac * 100)))
 
 
 def full_transformer_spec(cfg: ModelConfig) -> TransformerSubSpec:
@@ -218,20 +227,44 @@ def _round8(x: int) -> int:
     return max(8, (int(x) // 8) * 8)
 
 
+# -- elastic width resolution (shared by extract_* and the mask builders,
+#    so parent-space masks agree with slicing by construction) --------------
+def transformer_ff(cfg: ModelConfig, frac: float) -> int:
+    return _round8(int(cfg.d_ff * frac)) if cfg.d_ff else 0
+
+
+def transformer_experts(cfg: ModelConfig, frac: float) -> Optional[int]:
+    if cfg.moe is None:
+        return None
+    return max(cfg.moe.top_k, int(round(cfg.moe.n_experts * frac)))
+
+
+def transformer_ssm_heads(cfg: ModelConfig, frac: float) -> Optional[int]:
+    """Kept SSD heads: a multiple of n_groups (B/C group broadcast must
+    still tile the kept heads), at least one group's worth."""
+    if cfg.ssm is None:
+        return None
+    nh = cfg.ssm.n_heads(cfg.d_model)
+    ng = cfg.ssm.n_groups
+    return max(ng, (int(round(nh * frac)) // ng) * ng)
+
+
 def extract_transformer(params: Dict, cfg: ModelConfig,
                         spec: TransformerSubSpec):
     """Returns (sub_params, sub_cfg). Slices stacked per-layer arrays on the
-    leading axis (depth) and d_ff / expert axes (width)."""
-    ff = _round8(int(cfg.d_ff * spec.ff_frac)) if cfg.d_ff else 0
+    leading axis (depth) and d_ff / expert / SSD-head axes (width)."""
+    ff = transformer_ff(cfg, spec.ff_frac)
     n_exp = None
-    if cfg.moe is not None:
-        n_exp = max(cfg.moe.top_k,
-                    int(round(cfg.moe.n_experts * spec.expert_frac)))
+    if cfg.moe is not None and spec.expert_frac < 1.0:
+        n_exp = transformer_experts(cfg, spec.expert_frac)
+    nh_keep = None
+    if cfg.ssm is not None and spec.ssm_head_frac < 1.0:
+        nh_keep = transformer_ssm_heads(cfg, spec.ssm_head_frac)
 
     def slice_block(tree, keep_idx):
         idx = np.asarray(keep_idx, np.int32)
         sliced = jax.tree.map(lambda a: a[idx], tree)
-        return _slice_width(sliced, ff, n_exp, cfg)
+        return _slice_width(sliced, ff, n_exp, cfg, nh_keep)
 
     sub_segs = []
     new_cfg_segs = []
@@ -247,22 +280,28 @@ def extract_transformer(params: Dict, cfg: ModelConfig,
     sub = dict(params)
     sub["segments"] = sub_segs
     if "shared_attn" in params:
-        sub["shared_attn"] = _slice_width(params["shared_attn"], None, None,
-                                          cfg)
+        # the shared block is kept whole (its params are shared across
+        # segments; width-elastic dims do not apply to it)
+        sub["shared_attn"] = params["shared_attn"]
     moe = cfg.moe
     if moe is not None and n_exp is not None:
         moe = dataclasses.replace(moe, n_experts=n_exp)
+    ssm = cfg.ssm
+    if ssm is not None and nh_keep is not None:
+        ssm = dataclasses.replace(
+            ssm, d_inner_override=nh_keep * ssm.head_dim)
     sub_cfg = dataclasses.replace(
         cfg, name=cfg.name + "-sub", segments=tuple(new_cfg_segs),
         n_layers=sum(len(k) for k in spec.layers),
-        d_ff=ff or cfg.d_ff, moe=moe)
+        d_ff=ff or cfg.d_ff, moe=moe, ssm=ssm)
     return sub, sub_cfg
 
 
 def _slice_width(block_tree, ff: Optional[int], n_exp: Optional[int],
-                 cfg: ModelConfig):
-    """Width-slice mlp d_ff (wi/wg last axis, wo first-after-stack) and MoE
-    expert axis inside a (stacked or unstacked) block tree."""
+                 cfg: ModelConfig, nh_keep: Optional[int] = None):
+    """Width-slice mlp d_ff (wi/wg last axis, wo first-after-stack), MoE
+    expert axis, and mamba SSD-head dims inside a (stacked or unstacked)
+    block tree."""
     def walk(d):
         if not isinstance(d, dict):
             return d
@@ -273,6 +312,8 @@ def _slice_width(block_tree, ff: Optional[int], n_exp: Optional[int],
                           for kk, vv in v.items()}
             elif k == "moe" and n_exp is not None:
                 out[k] = _slice_moe(v, n_exp)
+            elif k == "mamba" and nh_keep is not None:
+                out[k] = _slice_mamba(v, nh_keep, cfg.ssm.head_dim)
             elif isinstance(v, dict):
                 out[k] = walk(v)
             else:
@@ -302,6 +343,35 @@ def _slice_moe(tree, n_exp):
         elif isinstance(v, dict):
             out[k] = v  # shared experts kept whole
         else:
+            out[k] = v
+    return out
+
+
+def _slice_mamba(tree, nh: int, head_dim: int):
+    """Prefix-slice a mamba block to its first ``nh`` SSD heads.
+
+    d_inner-sized dims keep the first nh*head_dim entries; per-head dims
+    keep the first nh. Group-width tensors (wB/wC/conv_B/conv_C) stay whole
+    — kept heads are a multiple of n_groups so the group broadcast still
+    tiles them. Leaves may carry a stacked leading layer axis; all sliced
+    axes are addressed from the back.
+    """
+    di = nh * head_dim
+    out = {}
+    for k, v in tree.items():
+        if k in ("wz", "wx"):                       # (L?, d, di)
+            out[k] = v[..., :di]
+        elif k == "wdt":                            # (L?, d, nh)
+            out[k] = v[..., :nh]
+        elif k in ("A_log", "D", "dt_bias"):        # (L?, nh)
+            out[k] = v[..., :nh]
+        elif k == "conv_x":                         # w: (L?, w, di)
+            out[k] = {"w": v["w"][..., :di], "b": v["b"][..., :di]}
+        elif k == "norm":                           # scale: (L?, di)
+            out[k] = {"scale": v["scale"][..., :di]}
+        elif k == "out_proj":                       # (L?, di, d)
+            out[k] = jax.lax.slice_in_dim(v, 0, di, axis=v.ndim - 2)
+        else:                                       # wB, wC, conv_B, conv_C
             out[k] = v
     return out
 

@@ -58,3 +58,23 @@ def train_test_split(data: Dict[str, np.ndarray], test_frac: float = 0.2,
     tr, te = perm[:k], perm[k:]
     return ({"x": data["x"][tr], "y": data["y"][tr]},
             {"x": data["x"][te], "y": data["y"][te]})
+
+
+def make_lm_dataset(n: int, seq_len: int, vocab: int,
+                    seed: int = 0) -> Dict[str, np.ndarray]:
+    """Synthetic token sequences for the transformer/SSM CFL engine.
+
+    A sparse Markov chain over the vocab (each token has 4 learnable
+    successors), so next-token prediction is genuinely learnable by a tiny
+    LM while staying fully offline. Layout matches the engine's generic
+    cohort packing: ``x`` (N, S) int32 token rows; ``y`` (N,) is a dummy
+    label column (causal-LM targets come from the tokens themselves).
+    """
+    rng = np.random.RandomState(seed)
+    nexts = rng.randint(0, vocab, size=(vocab, 4))
+    toks = np.zeros((n, seq_len), np.int32)
+    state = rng.randint(0, vocab, size=n)
+    for t in range(seq_len):
+        toks[:, t] = state
+        state = nexts[state, rng.randint(0, 4, size=n)]
+    return {"x": toks, "y": np.zeros((n,), np.int32)}

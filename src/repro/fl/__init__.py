@@ -1,6 +1,7 @@
 from repro.fl.client import ClientInfo, local_train, evaluate
 from repro.fl.engine import (BatchedRoundEngine, CohortResult,
-                             build_cohort_masks, masked_forward)
+                             SequentialFamilyTrainer, build_cohort_masks,
+                             masked_forward)
 from repro.fl.server import CFLConfig, CFLServer
 from repro.fl.baselines import FedAvgServer, independent_learning
 from repro.fl.rounds import build_population, run_cfl, run_fedavg, run_il

@@ -38,8 +38,9 @@ class FedAvgServer:
             batch_size=fl_cfg.batch_size)
         self.round_idx = 0
         self.history: List[Dict] = []
-        self.engine = BatchedRoundEngine(cfg, lr=fl_cfg.lr,
-                                         momentum=fl_cfg.momentum) \
+        self.engine = BatchedRoundEngine(
+            cfg, lr=fl_cfg.lr, momentum=fl_cfg.momentum,
+            cohort_shards=getattr(fl_cfg, "cohort_shards", 1)) \
             if getattr(fl_cfg, "batched_rounds", False) else None
 
     def run_round(self) -> Dict:
@@ -95,8 +96,9 @@ def independent_learning(cfg: CNNConfig, init_params,
     per-client trained params directly."""
     spec = full_spec(cfg)
     if getattr(fl_cfg, "batched_rounds", False):
-        engine = BatchedRoundEngine(cfg, lr=fl_cfg.lr,
-                                    momentum=fl_cfg.momentum)
+        engine = BatchedRoundEngine(
+            cfg, lr=fl_cfg.lr, momentum=fl_cfg.momentum,
+            cohort_shards=getattr(fl_cfg, "cohort_shards", 1))
         specs = [spec] * len(clients)
         thetas = engine.broadcast_params(init_params, len(clients))
         for r in range(rounds):

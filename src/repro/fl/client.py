@@ -3,8 +3,7 @@ worker side). Train-step compilation is cached per submodel structure."""
 from __future__ import annotations
 
 import dataclasses
-from collections import OrderedDict
-from typing import Callable, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,30 +24,16 @@ class ClientInfo:
     latency_bound: float      # l_k in Alg. 1 (seconds per local step)
 
 
-class _BoundedCache(OrderedDict):
-    """LRU-bounded compilation cache. One cache per value type — train
-    entries are (opt, step) pairs, eval entries bare callables — so the two
-    can't collide, and spec churn (the search helper emits new submodel
-    configs every round) can't grow host memory without bound. The batched
-    engine (fl.engine) avoids these caches entirely on the hot path."""
+# LRU-bounded compilation caches (core.elastic.SpecLRU — the same bounded
+# discipline as the engine's spec→mask tables). One cache per value type —
+# train entries are (opt, step) pairs, eval entries bare callables — so the
+# two can't collide, and spec churn (the search helper emits new submodel
+# configs every round) can't grow host memory without bound. The batched
+# engine (fl.engine) avoids these caches entirely on the hot path.
+from repro.core.elastic import SpecLRU
 
-    def __init__(self, maxsize: int = 64):
-        super().__init__()
-        self.maxsize = maxsize
-
-    def get_or_build(self, key, build: Callable):
-        if key in self:
-            self.move_to_end(key)
-            return self[key]
-        val = build()
-        self[key] = val
-        while len(self) > self.maxsize:
-            self.popitem(last=False)
-        return val
-
-
-_TRAIN_STEP_CACHE: _BoundedCache = _BoundedCache()
-_EVAL_STEP_CACHE: _BoundedCache = _BoundedCache()
+_TRAIN_STEP_CACHE: SpecLRU = SpecLRU(maxsize=64)
+_EVAL_STEP_CACHE: SpecLRU = SpecLRU(maxsize=64)
 
 
 def _train_step(cfg_key, cfg: CNNConfig, lr: float, momentum: float):

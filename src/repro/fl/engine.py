@@ -1,30 +1,31 @@
-"""Batched parent-space FL round engine.
+"""Batched parent-space FL round engine — family-agnostic.
 
 The sequential round loop (extract → per-client jit → pad) compiles one
 program per *distinct submodel config* and re-runs Python orchestration per
 client. This engine instead trains every client in **parent coordinates**:
-each client gets a 0/1 mask pytree (``core.submodel.mask_cnn``, the same
-prefix-channel / prefix-depth semantics as ``kernels/elastic_matmul.py``'s
-``k_active`` tiles), and a single jitted ``vmap``-over-clients /
-``lax.scan``-over-steps program runs the whole cohort's local epochs —
-regardless of how many different specs the search helper emits.
+each client gets a 0/1 mask bundle from its ``core.elastic.ElasticFamily``
+(the same prefix-channel / prefix-depth semantics as
+``kernels/elastic_matmul.py``'s ``k_active`` tiles), and a single jitted
+``vmap``-over-clients / ``lax.scan``-over-steps program runs the whole
+cohort's local epochs — regardless of how many different specs the search
+helper emits, and for the CNN parent *and* the transformer/SSM zoo alike.
 
-Exactness contract (verified in tests/test_fl_engine.py): for every spec,
-masked parent-space forward/backward computes the same math as the
-extract→train→pad path —
-
-* channels are masked after each conv (inactive input channels are zero, so
-  the full-width conv equals the sliced conv on active outputs);
-* groupnorm statistics are taken over *active channels only*, grouped the
-  way the submodel would group them (``_masked_groupnorm``);
-* depth-skipped blocks contribute through a 0/1 scalar: ``relu(x + d*h)``
-  with ``d=0`` is the identity because ``x ≥ 0`` post-ReLU;
-* gradients are masked, so momentum/updates on uncovered entries stay 0 and
-  ``Δ = mask * (ω_0 − ω_E)`` equals the zero-padded submodel update.
+Exactness contract (verified in tests/test_fl_engine.py and
+tests/test_elastic_family.py): for every spec, masked parent-space
+forward/backward computes the same math as the extract→train→pad path —
+see ``core.elastic`` for the per-family mask algebra. Gradients are
+masked, so momentum/updates on uncovered entries stay 0 and
+``Δ = mask * (ω_0 − ω_E)`` equals the zero-padded submodel update.
 
 Clients with fewer local steps than the cohort max are handled with step
 validity flags (invalid steps are no-ops on the carry), partial batches
 with sample validity weights — bitwise-faithful to the per-client loader.
+
+**Cohort sharding**: with ``cohort_shards > 1`` the stacked leading client
+axis is committed to a 1-D ``cohort`` mesh (``sharding.cohort``) before
+dispatch; jit propagates the layout so the whole round — local train, local
+eval, and the fused aggregate+apply reduction — scales across devices with
+one collective per round.
 """
 from __future__ import annotations
 
@@ -36,114 +37,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.paper_cnn import CNNConfig
-from repro.core.submodel import SubmodelSpec, channels_of, mask_cnn
+from repro.core.aggregate import (aggregate, aggregate_coverage,
+                                  apply_server_update)
+# re-exported for API compatibility with the PR-1 CNN-specific engine
+from repro.core.elastic import (CohortMasks, ElasticFamily, SpecLRU,
+                                build_cohort_masks, family_for,
+                                masked_forward)
 from repro.data.loader import index_batches
-from repro.models.layers import groupnorm
 from repro.optim import apply_updates, clip_by_global_norm, sgd
+from repro.sharding.cohort import (cohort_axis_sharding, cohort_mesh,
+                                   effective_cohort_shards, shard_cohort)
 
 
 # ---------------------------------------------------------------------------
-# masked parent-space model
+# host-side packing: data (family-agnostic — x is images or token rows)
 # ---------------------------------------------------------------------------
-def _conv(p, x, stride=1):
-    y = jax.lax.conv_general_dilated(
-        x, p["w"].astype(x.dtype), (stride, stride), "SAME",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    return y + p["b"].astype(x.dtype)
-
-
-def _masked_groupnorm(x, A, eps=1e-5):
-    """GroupNorm over *active* channels with submodel group assignment.
-
-    x: (B, H, W, C) with inactive channels already zeroed.
-    A: (C, G) masked one-hot — A[c, g] = 1 iff channel c is active and the
-    submodel would place it in group g. Inactive channels have all-zero
-    rows, which both excludes them from the statistics and re-zeroes them
-    in the output (their per-channel mean/inv-std broadcast back as 0).
-    Matches models.layers.groupnorm numerics on the active prefix.
-    """
-    b, h, w, c = x.shape
-    x32 = x.astype(jnp.float32)
-    n = h * w * jnp.maximum(jnp.sum(A, 0), 1.0)          # (G,) samples/group
-    mu_g = jnp.einsum("bhwc,cg->bg", x32, A) / n
-    mu_c = jnp.einsum("cg,bg->bc", A, mu_g)
-    d = x32 - mu_c[:, None, None, :]
-    var_g = jnp.einsum("bhwc,cg->bg", d * d, A) / n
-    inv_c = jnp.einsum("cg,bg->bc", A, jax.lax.rsqrt(var_g + eps))
-    return (d * inv_c[:, None, None, :]).astype(x.dtype)
-
-
-def masked_forward(params, cfg: CNNConfig, x, ch_masks, gn_assign,
-                   depth_masks):
-    """Parent-shape forward equal to the extracted submodel's forward.
-
-    ch_masks[s]: (C_s,) 0/1 channel mask; gn_assign[s]: (C_s, G) masked
-    one-hot groupnorm assignment; depth_masks[s]: (n_blocks_s,) 0/1.
-    """
-    g = cfg.groupnorm_groups
-    x = jax.nn.relu(groupnorm(_conv(params["stem"], x), g))
-    for si, stage in enumerate(params["stages"]):
-        m = ch_masks[si].astype(x.dtype)
-        A = gn_assign[si]
-        x = _conv(stage["down"], x, stride=2) * m
-        x = jax.nn.relu(_masked_groupnorm(x, A))
-        for bi, bp in enumerate(stage["blocks"]):
-            d = depth_masks[si][bi].astype(x.dtype)
-            h = _conv(bp["conv1"], x) * m
-            h = jax.nn.relu(_masked_groupnorm(h, A))
-            h = _conv(bp["conv2"], h) * m
-            h = _masked_groupnorm(h, A)
-            # depth skip: x >= 0 post-ReLU, so relu(x + 0) == x exactly
-            x = jax.nn.relu(x + d * h)
-    feat = jnp.mean(x, axis=(1, 2))
-    return feat @ params["head"]["w"].astype(x.dtype) + \
-        params["head"]["b"].astype(x.dtype)
-
-
-# ---------------------------------------------------------------------------
-# host-side packing: masks + data
-# ---------------------------------------------------------------------------
-@dataclasses.dataclass
-class CohortMasks:
-    param_mask: Dict            # stacked (K, ...) pytree, mask_cnn per client
-    ch_masks: List[jax.Array]   # per stage (K, C_s)
-    gn_assign: List[jax.Array]  # per stage (K, C_s, G)
-    depth_masks: List[jax.Array]  # per stage (K, n_blocks_s)
-
-
-def build_cohort_masks(cfg: CNNConfig,
-                       specs: Sequence[SubmodelSpec]) -> CohortMasks:
-    g = cfg.groupnorm_groups
-    ch, gn, dm = [], [], []
-    for si, (cmax, n_blocks) in enumerate(cfg.stages):
-        cm = np.zeros((len(specs), cmax), np.float32)
-        A = np.zeros((len(specs), cmax, g), np.float32)
-        de = np.zeros((len(specs), n_blocks), np.float32)
-        for k, spec in enumerate(specs):
-            c = channels_of(cfg, si, spec.width[si])
-            cm[k, :c] = 1.0
-            gid = np.arange(c) // (c // g)       # submodel grouping
-            A[k, np.arange(c), gid] = 1.0
-            de[k, :spec.depth[si]] = 1.0
-        ch.append(jnp.asarray(cm))
-        gn.append(jnp.asarray(A))
-        dm.append(jnp.asarray(de))
-    per_spec: Dict[SubmodelSpec, Dict] = {}
-    trees = []
-    for spec in specs:
-        if spec not in per_spec:
-            per_spec[spec] = mask_cnn(cfg, spec)
-        trees.append(per_spec[spec])
-    # stack on host, then move to device once — cached CohortMasks hits
-    # (e.g. FedAvg's constant full-spec cohort) dispatch transfer-free
-    pmask = jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *trees)
-    return CohortMasks(pmask, ch, gn, dm)
-
-
 @dataclasses.dataclass
 class CohortBatches:
-    x: jax.Array            # (K, N, H, W, C) each client's data, once
+    x: jax.Array            # (K, N, ...) each client's data, once
     y: jax.Array            # (K, N) int32
     idx: jax.Array          # (K, S, B) int32 gather indices per step
     sample_valid: jax.Array  # (K, S, B) float32
@@ -197,7 +108,7 @@ def pack_cohort(datasets: Sequence[Dict[str, np.ndarray]], batch_size: int,
 
 @dataclasses.dataclass
 class EvalPack:
-    x: jax.Array        # (K, T, H, W, C)
+    x: jax.Array        # (K, T, ...)
     y: jax.Array        # (K, T) int32
     valid: jax.Array    # (K, T) float32
 
@@ -231,11 +142,18 @@ class CohortResult:
 
 class BatchedRoundEngine:
     """One compiled train program + one eval program shared by every
-    submodel spec in the cohort (and across rounds, while shapes hold)."""
+    submodel spec in the cohort (and across rounds, while shapes hold).
 
-    def __init__(self, cfg: CNNConfig, *, lr: float, momentum: float,
-                 grad_clip: float = 5.0):
-        self.cfg = cfg
+    ``cfg`` may be a CNNConfig, a transformer-zoo ModelConfig, or an
+    ElasticFamily instance (``core.elastic.family_for`` resolves configs).
+    ``cohort_shards`` > 1 shards the stacked client axis over that many
+    devices (clamped to a divisor of the cohort / available devices).
+    """
+
+    def __init__(self, cfg, *, lr: float, momentum: float,
+                 grad_clip: float = 5.0, cohort_shards: int = 1):
+        self.family: ElasticFamily = family_for(cfg)
+        self.cfg = self.family.cfg
         self._opt = sgd(lr, momentum=momentum)
         self._grad_clip = grad_clip
         self._train = jax.jit(jax.vmap(self._client_train))
@@ -249,11 +167,26 @@ class BatchedRoundEngine:
             OrderedDict()
         self._data_cache: "OrderedDict[int, Tuple[object, Tuple]]" = \
             OrderedDict()
+        # stacked cohort masks, keyed by the spec-table genes of the mix
         self._masks_cache: "OrderedDict[Tuple, CohortMasks]" = OrderedDict()
+        self._requested_shards = int(cohort_shards)
+        self._cohort_meshes: Dict[int, jax.sharding.Mesh] = {}
+
+    # -- cohort sharding ---------------------------------------------------
+    def cohort_sharding(self, n_clients: int):
+        """NamedSharding for the stacked client axis, or None when the
+        engine runs unsharded (cohort_shards == 1)."""
+        if self._requested_shards <= 1:
+            return None
+        s = effective_cohort_shards(n_clients, self._requested_shards)
+        mesh = self._cohort_meshes.get(s)
+        if mesh is None:
+            mesh = self._cohort_meshes.setdefault(s, cohort_mesh(s))
+        return cohort_axis_sharding(mesh)
 
     # -- single-client programs (vmapped over the cohort) ------------------
-    def _client_train(self, theta0, pmask, ch_masks, gn_assign, depth_masks,
-                      data_x, data_y, idx, svalid, stvalid):
+    def _client_train(self, theta0, pmask, fwd, data_x, data_y, idx, svalid,
+                      stvalid):
         opt_state = self._opt.init(theta0)
 
         def step(carry, inp):
@@ -262,11 +195,7 @@ class BatchedRoundEngine:
             x, yb = data_x[ix], data_y[ix]
 
             def loss_fn(pp):
-                logits = masked_forward(pp, self.cfg, x, ch_masks,
-                                        gn_assign, depth_masks)
-                lp = jax.nn.log_softmax(logits)
-                ce_i = -jnp.take_along_axis(lp, yb[:, None], axis=-1)[:, 0]
-                return jnp.sum(ce_i * sv) / jnp.maximum(jnp.sum(sv), 1.0)
+                return self.family.masked_loss(pp, fwd, x, yb, sv)
 
             grad = jax.grad(loss_fn)(p)
             grad = jax.tree.map(lambda gg, mm: gg * mm, grad, pmask)
@@ -284,21 +213,14 @@ class BatchedRoundEngine:
                              pmask)
         return delta, theta_e
 
-    def _client_eval(self, params, ch_masks, gn_assign, depth_masks, x, y,
-                     valid):
-        logits = masked_forward(params, self.cfg, x, ch_masks, gn_assign,
-                                depth_masks)
-        hit = (jnp.argmax(logits, -1) == y).astype(jnp.float32)
-        return jnp.sum(hit * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+    def _client_eval(self, params, fwd, x, y, valid):
+        return self.family.masked_metric(params, fwd, x, y, valid)
 
-    def _client_train_eval(self, theta0, pmask, ch_masks, gn_assign,
-                           depth_masks, data_x, data_y, idx, svalid,
-                           stvalid, ex, ey, evalid):
+    def _client_train_eval(self, theta0, pmask, fwd, data_x, data_y, idx,
+                           svalid, stvalid, ex, ey, evalid):
         delta, theta_e = self._client_train(
-            theta0, pmask, ch_masks, gn_assign, depth_masks, data_x, data_y,
-            idx, svalid, stvalid)
-        acc = self._client_eval(theta_e, ch_masks, gn_assign, depth_masks,
-                                ex, ey, evalid)
+            theta0, pmask, fwd, data_x, data_y, idx, svalid, stvalid)
+        acc = self._client_eval(theta_e, fwd, ex, ey, evalid)
         return delta, theta_e, acc
 
     # -- cohort API --------------------------------------------------------
@@ -306,46 +228,60 @@ class BatchedRoundEngine:
         return jax.tree.map(
             lambda a: jnp.broadcast_to(a, (n_clients,) + a.shape), params)
 
-    def train_cohort(self, theta0_stacked, specs: Sequence[SubmodelSpec],
+    def train_cohort(self, theta0_stacked, specs: Sequence,
                      datasets: Sequence[Dict], *, batch_size: int,
                      epochs: int, seeds: Sequence[int],
                      eval_datasets: Optional[Sequence[Dict]] = None
                      ) -> CohortResult:
         """Run every client's local epochs (and, when eval_datasets is
         given, its local test pass) as one compiled program."""
+        sh = self.cohort_sharding(len(specs))
         masks = self._cohort_masks(specs)
         cohort = pack_cohort(datasets, batch_size, epochs=epochs,
                              seeds=seeds, data=self._cohort_data(datasets))
+        theta0_stacked = shard_cohort(theta0_stacked, sh)
+        stream = shard_cohort((cohort.idx, cohort.sample_valid,
+                               cohort.step_valid), sh)
         if eval_datasets is None:
             deltas, trained = self._train(
-                theta0_stacked, masks.param_mask, masks.ch_masks,
-                masks.gn_assign, masks.depth_masks, cohort.x, cohort.y,
-                cohort.idx, cohort.sample_valid, cohort.step_valid)
+                theta0_stacked, masks.param_mask, masks.fwd, cohort.x,
+                cohort.y, *stream)
             return CohortResult(deltas, trained, masks, cohort.n_steps)
         pack = self._eval_pack(eval_datasets)
         deltas, trained, accs = self._train_eval(
-            theta0_stacked, masks.param_mask, masks.ch_masks,
-            masks.gn_assign, masks.depth_masks, cohort.x, cohort.y,
-            cohort.idx, cohort.sample_valid, cohort.step_valid, pack.x,
-            pack.y, pack.valid)
+            theta0_stacked, masks.param_mask, masks.fwd, cohort.x, cohort.y,
+            *stream, pack.x, pack.y, pack.valid)
         return CohortResult(deltas, trained, masks, cohort.n_steps,
                             np.asarray(accs))
 
-    def _cohort_masks(self, specs: Sequence[SubmodelSpec]) -> CohortMasks:
-        key = tuple(specs)
+    def _cohort_masks(self, specs: Sequence) -> CohortMasks:
+        key = tuple(self.family.genes(s) for s in specs)
         masks = self._masks_cache.get(key)
         if masks is None:
-            masks = build_cohort_masks(self.cfg, specs)
+            masks = self.family.cohort_masks(specs)
+            sh = self.cohort_sharding(len(specs))
+            if sh is not None:
+                masks = CohortMasks(shard_cohort(masks.param_mask, sh),
+                                    shard_cohort(masks.fwd, sh))
             self._masks_cache[key] = masks
             while len(self._masks_cache) > 8:
                 self._masks_cache.popitem(last=False)
         return masks
 
     def _eval_pack(self, datasets: Sequence[Dict]) -> EvalPack:
-        return self._cached(self._eval_cache, datasets, pack_eval)
+        def build(d):
+            p = pack_eval(d)
+            sh = self.cohort_sharding(len(d))
+            if sh is not None:
+                p = EvalPack(*shard_cohort((p.x, p.y, p.valid), sh))
+            return p
+        return self._cached(self._eval_cache, datasets, build)
 
     def _cohort_data(self, datasets: Sequence[Dict]):
-        return self._cached(self._data_cache, datasets, pack_cohort_data)
+        def build(d):
+            return shard_cohort(pack_cohort_data(d),
+                                self.cohort_sharding(len(d)))
+        return self._cached(self._data_cache, datasets, build)
 
     @staticmethod
     def _cached(cache: OrderedDict, datasets, build, bound: int = 4):
@@ -359,7 +295,7 @@ class BatchedRoundEngine:
             cache.popitem(last=False)
         return val
 
-    def run_fl_round(self, params, specs: Sequence[SubmodelSpec],
+    def run_fl_round(self, params, specs: Sequence,
                      datasets: Sequence[Dict], test_datasets: Sequence[Dict],
                      sizes: Sequence[float], *, batch_size: int, epochs: int,
                      seeds: Sequence[int], coverage_norm: bool = False):
@@ -379,12 +315,103 @@ class BatchedRoundEngine:
             coverage_norm=coverage_norm)
         return new_params, [float(a) for a in res.accs], res.n_steps
 
-    def eval_cohort(self, params_stacked, specs: Sequence[SubmodelSpec],
+    def eval_cohort(self, params_stacked, specs: Sequence,
                     datasets: Sequence[Dict],
                     masks: Optional[CohortMasks] = None) -> np.ndarray:
         if masks is None:
             masks = self._cohort_masks(specs)
         pack = self._eval_pack(datasets)
-        accs = self._eval(params_stacked, masks.ch_masks, masks.gn_assign,
-                          masks.depth_masks, pack.x, pack.y, pack.valid)
+        accs = self._eval(params_stacked, masks.fwd, pack.x, pack.y,
+                          pack.valid)
         return np.asarray(accs)
+
+
+# ---------------------------------------------------------------------------
+# sequential reference: extract → jit-per-spec → pad, for any family
+# ---------------------------------------------------------------------------
+class SequentialFamilyTrainer:
+    """The original per-client loop, generalised over ElasticFamily — the
+    A/B reference the batched engine is verified against, and the baseline
+    the round-engine benchmark measures (one compiled train-step + eval
+    program per *distinct submodel config*; caches are split and bounded
+    exactly like ``fl.client``'s)."""
+
+    def __init__(self, cfg, *, lr: float, momentum: float,
+                 grad_clip: float = 5.0, cache_size: int = 64):
+        self.family: ElasticFamily = family_for(cfg)
+        self._opt = sgd(lr, momentum=momentum)
+        self._grad_clip = grad_clip
+        self._train_cache = SpecLRU(cache_size)
+        self._eval_cache = SpecLRU(cache_size)
+
+    def n_programs(self) -> int:
+        """Compiled entry points so far (the benchmark's compile counter)."""
+        return len(self._train_cache) + len(self._eval_cache)
+
+    def _train_step(self, spec, ctx):
+        def build():
+            @jax.jit
+            def step(p, o, x, yb, sw):
+                def loss(pp):
+                    return self.family.sub_loss(pp, ctx, x, yb, sw)
+                g = jax.grad(loss)(p)
+                g, _ = clip_by_global_norm(g, self._grad_clip)
+                upd, o2 = self._opt.update(g, o, p)
+                return apply_updates(p, upd), o2
+            return step
+        return self._train_cache.get_or_build(self.family.genes(spec), build)
+
+    def _eval_fn(self, spec, ctx):
+        def build():
+            @jax.jit
+            def ev(p, x, y, valid):
+                return self.family.sub_metric(p, ctx, x, y, valid)
+            return ev
+        return self._eval_cache.get_or_build(self.family.genes(spec), build)
+
+    def client_update(self, params, spec, data, *, batch_size: int,
+                      epochs: int, seed: int):
+        """E local epochs on the extracted submodel; returns
+        (delta, trained_sub, sub_ctx, n_steps) with delta in sub coords."""
+        sub0, ctx = self.family.extract(params, spec)
+        step = self._train_step(spec, ctx)
+        o = self._opt.init(sub0)
+        p = sub0
+        n_steps = 0
+        for b_idx in index_batches(len(data["y"]), batch_size, seed=seed,
+                                   epochs=epochs):
+            x = jnp.asarray(data["x"][b_idx])
+            yb = jnp.asarray(data["y"][b_idx])
+            sw = jnp.ones((len(b_idx),), jnp.float32)
+            p, o = step(p, o, x, yb, sw)
+            n_steps += 1
+        delta = jax.tree.map(lambda a, b: a - b, sub0, p)
+        return delta, p, ctx, n_steps
+
+    def run_fl_round(self, params, specs: Sequence,
+                     datasets: Sequence[Dict], test_datasets: Sequence[Dict],
+                     sizes: Sequence[float], *, batch_size: int, epochs: int,
+                     seeds: Sequence[int], coverage_norm: bool = False):
+        """Same contract as BatchedRoundEngine.run_fl_round."""
+        deltas, covs, accs, n_steps_all = [], [], [], []
+        for spec, data, tdata, seed in zip(specs, datasets, test_datasets,
+                                           seeds):
+            delta, trained, ctx, n = self.client_update(
+                params, spec, data, batch_size=batch_size, epochs=epochs,
+                seed=seed)
+            ev = self._eval_fn(spec, ctx)
+            acc = float(ev(trained, jnp.asarray(tdata["x"]),
+                           jnp.asarray(tdata["y"]),
+                           jnp.ones((len(tdata["y"]),), jnp.float32)))
+            deltas.append(self.family.pad_delta(delta, params, spec))
+            if coverage_norm:
+                covs.append(jax.tree.map(
+                    jnp.asarray, self.family.spec_masks(spec).param_mask))
+            accs.append(acc)
+            n_steps_all.append(n)
+        if coverage_norm:
+            delta_t = aggregate_coverage(deltas, covs, list(sizes))
+        else:
+            delta_t = aggregate(deltas, list(sizes))
+        params = apply_server_update(params, delta_t)
+        return params, accs, np.array(n_steps_all)

@@ -72,8 +72,13 @@ def build_population(cfg: CNNConfig, *, kind: str, n_workers: int,
 
 def run_cfl(cfg: CNNConfig, *, kind="synthmnist", n_workers=8,
             n_samples=4000, heterogeneity="quality", rounds=5,
-            fl_cfg: Optional[CFLConfig] = None, seed=0):
-    fl_cfg = fl_cfg or CFLConfig(n_workers=n_workers, seed=seed)
+            fl_cfg: Optional[CFLConfig] = None, seed=0,
+            cohort_shards: int = 1):
+    if fl_cfg is None:
+        fl_cfg = CFLConfig(n_workers=n_workers, seed=seed,
+                           cohort_shards=cohort_shards)
+    elif cohort_shards != 1:
+        fl_cfg = dataclasses.replace(fl_cfg, cohort_shards=cohort_shards)
     clients, cdata, tdata = build_population(
         cfg, kind=kind, n_workers=n_workers, n_samples=n_samples,
         heterogeneity=heterogeneity, seed=seed,
@@ -87,8 +92,13 @@ def run_cfl(cfg: CNNConfig, *, kind="synthmnist", n_workers=8,
 
 def run_fedavg(cfg: CNNConfig, *, kind="synthmnist", n_workers=8,
                n_samples=4000, heterogeneity="quality", rounds=5,
-               fl_cfg: Optional[CFLConfig] = None, seed=0):
-    fl_cfg = fl_cfg or CFLConfig(n_workers=n_workers, seed=seed)
+               fl_cfg: Optional[CFLConfig] = None, seed=0,
+               cohort_shards: int = 1):
+    if fl_cfg is None:
+        fl_cfg = CFLConfig(n_workers=n_workers, seed=seed,
+                           cohort_shards=cohort_shards)
+    elif cohort_shards != 1:
+        fl_cfg = dataclasses.replace(fl_cfg, cohort_shards=cohort_shards)
     clients, cdata, tdata = build_population(
         cfg, kind=kind, n_workers=n_workers, n_samples=n_samples,
         heterogeneity=heterogeneity, seed=seed,
@@ -102,8 +112,13 @@ def run_fedavg(cfg: CNNConfig, *, kind="synthmnist", n_workers=8,
 
 def run_il(cfg: CNNConfig, *, kind="synthmnist", n_workers=8,
            n_samples=4000, heterogeneity="quality", rounds=5,
-           fl_cfg: Optional[CFLConfig] = None, seed=0) -> List[float]:
-    fl_cfg = fl_cfg or CFLConfig(n_workers=n_workers, seed=seed)
+           fl_cfg: Optional[CFLConfig] = None, seed=0,
+           cohort_shards: int = 1) -> List[float]:
+    if fl_cfg is None:
+        fl_cfg = CFLConfig(n_workers=n_workers, seed=seed,
+                           cohort_shards=cohort_shards)
+    elif cohort_shards != 1:
+        fl_cfg = dataclasses.replace(fl_cfg, cohort_shards=cohort_shards)
     clients, cdata, tdata = build_population(
         cfg, kind=kind, n_workers=n_workers, n_samples=n_samples,
         heterogeneity=heterogeneity, seed=seed,

@@ -47,6 +47,9 @@ class CFLConfig:
     # devices at/below the median train the full parent model.
     latency_bound_frac: float = 1.05
     batched_rounds: bool = True     # parent-space cohort engine vs seq loop
+    # shard the engine's stacked client axis over this many devices
+    # (sharding.cohort; clamped to a divisor of the cohort / device count)
+    cohort_shards: int = 1
     seed: int = 0
 
 
@@ -68,8 +71,9 @@ class CFLServer:
         self.round_idx = 0
         self.history: List[Dict] = []
         self._rng = np.random.RandomState(fl_cfg.seed)
-        self.engine = BatchedRoundEngine(cfg, lr=fl_cfg.lr,
-                                         momentum=fl_cfg.momentum) \
+        self.engine = BatchedRoundEngine(
+            cfg, lr=fl_cfg.lr, momentum=fl_cfg.momentum,
+            cohort_shards=getattr(fl_cfg, "cohort_shards", 1)) \
             if fl_cfg.batched_rounds else None
 
     # ------------------------------------------------------------------

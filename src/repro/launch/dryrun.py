@@ -24,7 +24,7 @@ import jax.numpy as jnp
 
 from repro.configs import ARCHS, INPUT_SHAPES, get_config, supported_pairs
 from repro.launch import steps as S
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, activate_mesh
 from repro.launch.roofline import (build_roofline, model_flops_for,
                                    parse_collectives)
 from repro.sharding import (cache_shardings, input_shardings,
@@ -96,7 +96,7 @@ def run_combo(arch: str, shape_name: str, mesh_name: str,
     mesh = make_production_mesh(multi_pod=multi)
     chips = mesh.size
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with activate_mesh(mesh):
         cfg, shp, lowered = lower_combo(arch, shape_name, mesh, remat=remat)
         t_lower = time.time() - t0
         compiled = lowered.compile()

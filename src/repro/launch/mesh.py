@@ -2,7 +2,27 @@
 this module never touches jax device state."""
 from __future__ import annotations
 
+import contextlib
+
 import jax
+
+
+def activate_mesh(mesh):
+    """Version-compat ``jax.set_mesh``: make ``mesh`` the ambient mesh so
+    sharding-aware module paths (``get_abstract_mesh`` readers in
+    models/layers, models/moe, models/transformer) see its axis names
+    during trace. jax >= 0.5 exposes ``jax.set_mesh``; on 0.4.x only the
+    internal abstract-mesh context manager exists — fall back to it, and
+    to a null context when neither is available (the readers already
+    degrade to unsharded paths)."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    try:
+        from jax._src import mesh as _mesh_lib
+        return _mesh_lib.set_abstract_mesh(mesh.abstract_mesh)
+    except Exception:       # pragma: no cover — degrade, don't crash
+        return contextlib.nullcontext()
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -126,10 +126,16 @@ def moe_forward(p, x, moe_cfg, *, act="silu",
                  jnp.sum(gate_vals, -1, keepdims=True)).astype(x.dtype)
 
     # --- aux losses (load balance + router z) -----------------------------
+    # the balance coefficient counts *active* experts: under a CFL expert
+    # mask the masked experts contribute zero to me/ce, and the extracted
+    # submodel (n_exp experts) scales by n_exp — using parent E here would
+    # make the masked loss diverge from the sliced one
     me = jnp.mean(probs, axis=0)
     ce = jnp.mean(
         jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=1), axis=0)
-    aux_loss = moe_cfg.aux_loss * E * jnp.sum(me * ce)
+    n_active = (float(E) if expert_mask is None
+                else jnp.sum(expert_mask > 0).astype(jnp.float32))
+    aux_loss = moe_cfg.aux_loss * n_active * jnp.sum(me * ce)
     z_loss = moe_cfg.router_z_loss * jnp.mean(
         jnp.square(jax.nn.logsumexp(logits, axis=-1)))
 

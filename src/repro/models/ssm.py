@@ -115,8 +115,26 @@ def ssd_chunked(xh, dt, A, Bm, Cm, chunk):
 # ---------------------------------------------------------------------------
 # full block
 # ---------------------------------------------------------------------------
+def _masked_gated_rmsnorm(p, x, dim_mask, eps):
+    """RMSNorm whose statistics run over *active* d_inner dims only —
+    numerically equal to the extracted submodel's rmsnorm on the kept
+    prefix (inactive dims are zeroed and excluded from the variance)."""
+    m = dim_mask.astype(jnp.float32)
+    x32 = x.astype(jnp.float32) * m
+    n = jnp.maximum(jnp.sum(m), 1.0)
+    var = jnp.sum(jnp.square(x32), axis=-1, keepdims=True) / n
+    inv = jax.lax.rsqrt(var + eps)
+    y = (1.0 + p["scale"].astype(jnp.float32)) * x32 * inv
+    return (y * m).astype(x.dtype)
+
+
 def mamba_forward(p, x, ssm, *, norm_eps=1e-6, head_mask=None, kernel=None):
-    """Full-sequence Mamba2 block. x: (B,S,d) -> (B,S,d)."""
+    """Full-sequence Mamba2 block. x: (B,S,d) -> (B,S,d).
+
+    head_mask: (H,) 0/1 prefix mask over SSD heads (CFL elastic width) —
+    masked heads contribute zero and are excluded from the gated-norm
+    statistics, so the masked forward equals the head-sliced submodel's.
+    """
     B, S, d = x.shape
     di = ssm.d_inner(d)
     nh = ssm.n_heads(d)
@@ -139,9 +157,12 @@ def mamba_forward(p, x, ssm, *, norm_eps=1e-6, head_mask=None, kernel=None):
     if head_mask is not None:
         y = y * head_mask[None, None, :, None].astype(y.dtype)
     y = y.reshape(B, S, di)
-    y = rmsnorm(p["norm"],
-                y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
-                norm_eps)
+    gated = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    if head_mask is not None:
+        dim_mask = jnp.repeat(head_mask, ssm.head_dim)
+        y = _masked_gated_rmsnorm(p["norm"], gated, dim_mask, norm_eps)
+    else:
+        y = rmsnorm(p["norm"], gated, norm_eps)
     return y.astype(x.dtype) @ p["out_proj"].astype(x.dtype)
 
 

@@ -121,7 +121,11 @@ def _ckpt(fn):
 
 
 def _apply_attn_block(bp, x, positions, cfg: ModelConfig, window, use_moe,
-                      masks, kernels):
+                      masks, kernels, gate=None):
+    """``gate`` (scalar 0/1) multiplies the block's residual contributions —
+    the CFL depth-elastic dimension in parent coordinates: with gate=0 the
+    block is exactly the identity (pure additive residual), matching an
+    extracted submodel that dropped this layer."""
     h = _norm(cfg, bp["ln1"], x)
     head_mask = None if masks is None else masks.get("heads")
     if cfg.attn_type == "mla":
@@ -139,6 +143,8 @@ def _apply_attn_block(bp, x, positions, cfg: ModelConfig, window, use_moe,
             kernel=kern))(bp["attn"], h)
     if cfg.post_norms:
         a = _norm(cfg, bp["post_ln1"], a)
+    if gate is not None:
+        a = a * gate.astype(a.dtype)
     x = x + a
     h = _norm(cfg, bp["ln2"], x)
     aux = jnp.zeros((), jnp.float32)
@@ -154,42 +160,60 @@ def _apply_attn_block(bp, x, positions, cfg: ModelConfig, window, use_moe,
                                      width_mask=width_mask))(bp["mlp"], h)
     if cfg.post_norms:
         m = _norm(cfg, bp["post_ln2"], m)
+    if gate is not None:
+        m = m * gate.astype(m.dtype)
+        aux = aux * gate.astype(aux.dtype)
     return x + m, aux
 
 
-def _apply_ssm_block(bp, x, cfg: ModelConfig, masks, kernels):
+def _apply_ssm_block(bp, x, cfg: ModelConfig, masks, kernels, gate=None):
     h = _norm(cfg, bp["ln"], x)
     head_mask = None if masks is None else masks.get("ssm_heads")
     kern = None if kernels is None else kernels.get("ssd")
     y = _ckpt(lambda p_, h_: ssm_lib.mamba_forward(
         p_, h_, cfg.ssm, norm_eps=cfg.norm_eps, head_mask=head_mask,
         kernel=kern))(bp["mamba"], h)
+    if gate is not None:
+        y = y * gate.astype(y.dtype)
     return x + y, jnp.zeros((), jnp.float32)
 
 
 def _segment_forward(seg_p, seg: Segment, x, positions, cfg: ModelConfig,
-                     masks, kernels, remat: bool):
-    """Scan a segment over its stacked layer params."""
-    def attn_body(carry, layer_p):
+                     masks, kernels, remat: bool, depth_mask=None):
+    """Scan a segment over its stacked layer params.
+
+    depth_mask: optional (n_layers,) 0/1 per-layer gates (CFL depth
+    elasticity) — scanned alongside the layer params; when None the
+    original ungated program is emitted (production train path unchanged).
+    """
+    gated = depth_mask is not None
+
+    def split(inp):
+        return inp if gated else (inp, None)
+
+    def attn_body(carry, inp):
         x, aux = carry
+        layer_p, g = split(inp)
         window = seg.sliding_window or cfg.sliding_window
         x, a = _apply_attn_block(layer_p, x, positions, cfg, window,
-                                 seg.use_moe, masks, kernels)
+                                 seg.use_moe, masks, kernels, gate=g)
         return (x, aux + a), None
 
-    def pair_body(carry, layer_p):
+    def pair_body(carry, inp):
         x, aux = carry
+        layer_p, g = split(inp)
         lp, gp = layer_p["local"], layer_p["global"]
         x, a1 = _apply_attn_block(lp, x, positions, cfg,
                                   seg.pair_local_window, seg.use_moe, masks,
-                                  kernels)
+                                  kernels, gate=g)
         x, a2 = _apply_attn_block(gp, x, positions, cfg, None, seg.use_moe,
-                                  masks, kernels)
+                                  masks, kernels, gate=g)
         return (x, aux + a1 + a2), None
 
-    def ssm_body(carry, layer_p):
+    def ssm_body(carry, inp):
         x, aux = carry
-        x, a = _apply_ssm_block(layer_p, x, cfg, masks, kernels)
+        layer_p, g = split(inp)
+        x, a = _apply_ssm_block(layer_p, x, cfg, masks, kernels, gate=g)
         return (x, aux + a), None
 
     if seg.kind == "attn":
@@ -199,6 +223,8 @@ def _segment_forward(seg_p, seg: Segment, x, positions, cfg: ModelConfig,
                                "global": seg_p["global"]}
     else:
         body, xs = ssm_body, seg_p["blocks"]
+    if gated:
+        xs = (xs, depth_mask)
     carry0 = (x, jnp.zeros((), jnp.float32))
     n = seg.n_layers
     if remat:
@@ -273,14 +299,21 @@ def forward(params: Params, cfg: ModelConfig, batch: Dict[str, Any], *,
     B, S = x.shape[0], x.shape[1]
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     aux = jnp.zeros((), jnp.float32)
-    for seg_p, seg in zip(params["segments"], cfg.segments):
+    depth_masks = None if masks is None else masks.get("depth")
+    # the shared (hybrid) block is kept whole by every submodel: its d_ff
+    # differs from cfg.d_ff and its params are shared, so width/depth masks
+    # must not leak into it
+    shared_masks = None if masks is None else (
+        {k: v for k, v in masks.items() if k not in ("ff", "depth")} or None)
+    for si, (seg_p, seg) in enumerate(zip(params["segments"], cfg.segments)):
+        dm = None if depth_masks is None else depth_masks[si]
         x, a = _segment_forward(seg_p, seg, x, positions, cfg, masks,
-                                kernels, remat)
+                                kernels, remat, depth_mask=dm)
         aux = aux + a
         if seg.shared_attn_after:
             x, a2 = _apply_attn_block(params["shared_attn"], x, positions,
-                                      cfg, cfg.sliding_window, False, masks,
-                                      kernels)
+                                      cfg, cfg.sliding_window, False,
+                                      shared_masks, kernels)
             aux = aux + a2
     x = _norm(cfg, params["final_norm"], x)
     if return_hidden:

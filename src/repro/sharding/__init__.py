@@ -1,3 +1,5 @@
 from repro.sharding.specs import (param_spec, params_shardings,
                                   input_shardings, cache_shardings,
                                   opt_state_shardings, batch_axes)
+from repro.sharding.cohort import (cohort_mesh, cohort_axis_sharding,
+                                   effective_cohort_shards, shard_cohort)

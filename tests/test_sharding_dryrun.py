@@ -53,7 +53,7 @@ from repro.launch.steps import (make_train_step, make_serve_step,
 from repro.launch.roofline import parse_hlo
 from repro.sharding import params_shardings, input_shardings, \
     opt_state_shardings, cache_shardings
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, activate_mesh
 
 mesh = make_host_mesh(model=2)   # 4x2
 results = {}
@@ -66,7 +66,7 @@ for arch in ["granite-3-8b", "granite-moe-1b-a400m", "mamba2-2.7b"]:
     p_sh = params_shardings(cfg, mesh, ps)
     o_sh = opt_state_shardings(cfg, mesh, osd, ps)
     b_sh = input_shardings(cfg, mesh, bs, 8)
-    with jax.set_mesh(mesh):
+    with activate_mesh(mesh):
         compiled = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh)).lower(
             ps, osd, bs).compile()
         stats = parse_hlo(compiled.as_text())
