@@ -16,7 +16,10 @@ Each (family × mode × cohort size) leg runs in its own subprocess so jit
 caches are cold, as they are for a real server process. Wall-clock per
 round covers local training + eval + aggregation, including any compiles
 it triggers; submodel search / predictor updates are identical in both
-modes and excluded. Rows carry JSON derived fields (benchmarks.common).
+modes and excluded. Rows carry JSON derived fields (benchmarks.common)
+and the full sweep is recorded at the repo root as
+``BENCH_round_engine.json`` (both families + batched-vs-seq speedups),
+so the perf trajectory survives across PRs.
 
   PYTHONPATH=src python -m benchmarks.round_engine            # full sweep
   PYTHONPATH=src python -m benchmarks.round_engine --single cnn seq 32
@@ -69,7 +72,6 @@ def _measure_leg_cnn(mode: str, n_workers: int, seed: int = 0):
     # repro.core re-exports the `aggregate` *function*, shadowing the module
     agg_mod = importlib.import_module("repro.core.aggregate")
     from repro.core.search import random_spec
-    from repro.fl import client as client_mod
     from repro.fl import CFLConfig
     from repro.fl.rounds import build_population
     from repro.fl.server import CFLServer
@@ -100,8 +102,9 @@ def _measure_leg_cnn(mode: str, n_workers: int, seed: int = 0):
         if batched:
             return (jit_cache_size(server.engine._train_eval) +
                     jit_cache_size(agg_mod.aggregate_apply))
-        return (len(client_mod._TRAIN_STEP_CACHE) +
-                len(client_mod._EVAL_STEP_CACHE))
+        # sequential rounds now run on SequentialFamilyTrainer: one
+        # compiled train-step + eval program per distinct submodel config
+        return server._seq.n_programs()
 
     rounds = 2 if n_workers >= 128 else ROUNDS
     walls, compiles, nspecs = [], [], []
@@ -255,6 +258,15 @@ def main():
     rows = run()
     from benchmarks.common import emit
     emit(rows)
+    # record the perf trajectory at the repo root: one JSON row per leg
+    # (both families, batched + sequential, plus the speedup rows)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out_path = os.path.join(root, "BENCH_round_engine.json")
+    with open(out_path, "w") as f:
+        json.dump([dict(json.loads(derived), name=name, us=us)
+                   for name, us, derived in rows], f, indent=1)
+        f.write("\n")
+    print(f"wrote {out_path}")
     by = parse_json_rows(rows)
     # acceptance: the batched engine compiles <= 2 programs per round in
     # every round regardless of spec diversity (both families); >= 2x

@@ -1,13 +1,24 @@
 """CFL vs FedAvg vs Independent Learning under both heterogeneity kinds —
-the paper's Fig. 4 / Fig. 5 / Table II story in one run, plus the
-beyond-paper coverage-normalised aggregation variant.
+the paper's Fig. 4 / Fig. 5 / Table II story in one run, for **any elastic
+family** through the ``CFLSession`` control plane.
 
-  PYTHONPATH=src python examples/fl_heterogeneous.py
+  PYTHONPATH=src python examples/fl_heterogeneous.py                   # CNN
+  PYTHONPATH=src python examples/fl_heterogeneous.py --family transformer
+
+Family knob:
+  --family cnn          the paper's elastic CNN on synthetic MNIST
+                        (quality = blur/sharpen, distribution = non-IID
+                        labels);
+  --family transformer  a reduced transformer-zoo parent on the synthetic
+                        Markov LM scenario (quality = token corruption,
+                        distribution = per-client chains), with genetic
+                        search over (d_ff, experts, SSD heads, depth-gate)
+                        genes under the two-term latency cost model.
 
 Engine knobs (CFLConfig):
   --engine batched   one jitted vmap/scan program per round for the whole
                      cohort, whatever the submodel spec mix (default);
-  --engine seq       the original extract → jit-per-spec → pad loop (A/B);
+  --engine seq       the extract → jit-per-spec → pad loop (A/B);
   --shards N         shard the engine's stacked client axis over N devices
                      (CFLConfig.cohort_shards — a 1-D `cohort` mesh via
                      repro.sharding.cohort; clamped to a divisor of the
@@ -21,44 +32,67 @@ sys.path.insert(0, "src")
 import dataclasses
 import numpy as np
 
-from repro.configs.paper_cnn import CNNConfig
-from repro.fl import CFLConfig, run_cfl, run_fedavg, run_il
+from repro.fl import CFLConfig, CFLSession
 
 ap = argparse.ArgumentParser()
+ap.add_argument("--family", choices=("cnn", "transformer"), default="cnn",
+                help="elastic family: the paper CNN or a transformer-zoo "
+                     "parent (synthetic LM scenario)")
 ap.add_argument("--engine", choices=("batched", "seq"), default="batched",
                 help="batched parent-space cohort engine vs sequential "
                      "per-client loop")
 ap.add_argument("--shards", type=int, default=1,
                 help="cohort-axis shards (devices) for the batched engine")
+ap.add_argument("--rounds", type=int, default=5)
 args = ap.parse_args()
 
-cfg = CNNConfig(name="hetero", in_channels=1, image_size=28,
-                stem_channels=8, stages=((16, 2), (32, 2)),
-                groupnorm_groups=4, elastic_widths=(0.5, 1.0))
-fl = CFLConfig(n_workers=6, local_epochs=2, batch_size=32, lr=0.08, seed=0,
-               batched_rounds=(args.engine == "batched"),
+if args.family == "cnn":
+    from repro.configs.paper_cnn import CNNConfig
+    family = CNNConfig(name="hetero", in_channels=1, image_size=28,
+                       stem_channels=8, stages=((16, 2), (32, 2)),
+                       groupnorm_groups=4, elastic_widths=(0.5, 1.0))
+    n_workers, n_samples, epochs, bs, lr = 6, 2400, 2, 32, 0.08
+else:
+    from repro.configs import ARCHS, reduced
+    from repro.core import TransformerElasticFamily
+    family = TransformerElasticFamily(
+        reduced(ARCHS["granite-3-8b"], n_layers=4, d_model=64), seq_len=24)
+    n_workers, n_samples, epochs, bs, lr = 4, 320, 2, 8, 0.05
+
+fl = CFLConfig(n_workers=n_workers, local_epochs=epochs, batch_size=bs,
+               lr=lr, seed=0, batched_rounds=(args.engine == "batched"),
                cohort_shards=args.shards)
 
+
+def session(algorithm, het, fl_cfg=fl):
+    return CFLSession.from_synthetic(
+        family, n_workers=n_workers, n_samples=n_samples,
+        heterogeneity=het, fl_cfg=fl_cfg, algorithm=algorithm)
+
+
 for het in ("quality", "distribution"):
-    print(f"\n== heterogeneity: {het} ==")
-    cfl = run_cfl(cfg, kind="synthmnist", n_workers=6, n_samples=2400,
-                  heterogeneity=het, rounds=5, fl_cfg=fl)
-    fed = run_fedavg(cfg, kind="synthmnist", n_workers=6, n_samples=2400,
-                     heterogeneity=het, rounds=5, fl_cfg=fl)
-    il = run_il(cfg, kind="synthmnist", n_workers=6, n_samples=2400,
-                heterogeneity=het, rounds=5, fl_cfg=fl)
-    covfl = dataclasses.replace(fl, coverage_norm=True)
-    cov = run_cfl(cfg, kind="synthmnist", n_workers=6, n_samples=2400,
-                  heterogeneity=het, rounds=5, fl_cfg=covfl)
+    print(f"\n== family: {args.family} · heterogeneity: {het} ==")
+    cfl = session("cfl", het)
+    for rec in cfl.run(args.rounds):
+        print(f"  round {rec['round']}: mean acc "
+              f"{rec['fairness']['mean']:.3f}  worst "
+              f"{rec['fairness']['min']:.3f}  jain "
+              f"{rec['fairness']['jain_index']:.3f}  round time "
+              f"{rec['timing']['round_time']:.2f}s  straggler gap "
+              f"{rec['timing']['straggler_gap']:.2f}s")
+    fed = session("fedavg", het)
+    fed.run(args.rounds)
+    il = session("il", het)
+    il.run(args.rounds)
+    cov = session("cfl", het,
+                  fl_cfg=dataclasses.replace(fl, coverage_norm=True))
+    cov.run(args.rounds)
 
     rows = [
-        ("CFL (paper)", cfl.history[-1]["fairness"],
-         cfl.history[-1]["timing"]),
-        ("CFL+coverage-norm", cov.history[-1]["fairness"],
-         cov.history[-1]["timing"]),
-        ("FedAvg", fed.history[-1]["fairness"], fed.history[-1]["timing"]),
-        ("IL", {"mean": float(np.mean(il)), "std": float(np.std(il)),
-                "min": float(np.min(il))}, None),
+        ("CFL (paper)", cfl.fairness(), cfl.history[-1]["timing"]),
+        ("CFL+coverage-norm", cov.fairness(), cov.history[-1]["timing"]),
+        ("FedAvg", fed.fairness(), fed.history[-1]["timing"]),
+        ("IL", il.fairness(), None),
     ]
     print(f"{'method':>18} {'mean acc':>9} {'std':>6} {'worst':>6} "
           f"{'round time':>10}")

@@ -2,9 +2,10 @@
 from repro.core.submodel import (SubmodelSpec, TransformerSubSpec,
                                  extract_cnn, pad_cnn, sub_cnn_config,
                                  coverage_cnn, full_spec, mask_cnn,
-                                 minimal_spec,
+                                 minimal_spec, minimal_transformer_spec,
                                  extract_transformer, pad_transformer,
-                                 full_transformer_spec, transformer_ff,
+                                 full_transformer_spec,
+                                 sub_transformer_config, transformer_ff,
                                  transformer_experts, transformer_ssm_heads)
 from repro.core.elastic import (ElasticFamily, CNNElasticFamily,
                                 TransformerElasticFamily, family_for,
@@ -15,7 +16,7 @@ from repro.core.aggregate import (aggregate, aggregate_apply,
                                   apply_server_update, weighted_sum)
 from repro.core.search import (SearchConfig, search_submodel,
                                search_all_workers, random_spec)
-from repro.core.predictor import AccuracyPredictor, featurize
+from repro.core.predictor import AccuracyPredictor, featurize, feature_dim
 from repro.core.latency import (DeviceProfile, EDGE_FLEET, LatencyTable,
                                 fleet_for_workers, train_step_latency)
 from repro.core.gating import GateTrainConfig, train_gates, gate_depth_policy

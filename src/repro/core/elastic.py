@@ -27,22 +27,26 @@ Two families:
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from collections import OrderedDict
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, \
+    Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, flops_per_token
 from repro.configs.paper_cnn import CNNConfig
 from repro.core.submodel import (SubmodelSpec, TransformerSubSpec,
                                  channels_of, extract_cnn,
                                  extract_transformer, full_spec,
-                                 full_transformer_spec, mask_cnn, pad_cnn,
-                                 pad_transformer, sub_cnn_config,
-                                 transformer_experts, transformer_ff,
-                                 transformer_ssm_heads)
+                                 full_transformer_spec, mask_cnn,
+                                 minimal_spec, minimal_transformer_spec,
+                                 pad_cnn, pad_transformer, sub_cnn_config,
+                                 sub_transformer_config, transformer_experts,
+                                 transformer_ff, transformer_ssm_heads)
+from repro.data.loader import eval_batches
 from repro.models import cnn
 from repro.models import transformer as T
 from repro.models.layers import groupnorm
@@ -105,17 +109,31 @@ class SpecLRU(OrderedDict):
 # ---------------------------------------------------------------------------
 class ElasticFamily:
     """Family protocol: spec algebra + parent-space masked compute + the
-    sequential extract/pad reference. Subclasses implement the ``_build``
-    and compute hooks; spec→mask caching is shared."""
+    sequential extract/pad reference + the **spec-space surface** the CFL
+    control plane (Alg. 1–4) runs on. Subclasses implement the ``_build``
+    and compute hooks; spec→mask caching is shared.
+
+    The spec-space surface is what makes ``core.search`` (genetic mutate/
+    crossover), ``core.predictor`` (featurize), and ``core.latency``
+    (flops/param_bytes cost model) family-agnostic: they consume only this
+    protocol and ``genes()``-keyed specs, never a concrete config class.
+    """
 
     name: str = "abstract"
 
     def __init__(self, cfg, spec_cache: int = 128):
         self.cfg = cfg
         self._spec_cache = SpecLRU(spec_cache)
+        self._full_eval_fn = None
+        self._full_flops: Optional[float] = None
 
     # -- spec algebra ------------------------------------------------------
     def full_spec(self):
+        raise NotImplementedError
+
+    def minimal_spec(self):
+        """Smallest expressible submodel — the deterministic fallback when
+        a latency bound admits nothing else."""
         raise NotImplementedError
 
     def random_spec(self, rng):
@@ -123,6 +141,78 @@ class ElasticFamily:
 
     def genes(self, spec) -> Tuple:
         return spec.genes()
+
+    # -- spec-space surface: genetic search (Alg. 1) -----------------------
+    def mutate(self, spec, rng, p: float):
+        """Independently resample each gene with probability ``p``."""
+        raise NotImplementedError
+
+    def crossover(self, a, b, rng):
+        """Uniform per-gene crossover of two specs."""
+        raise NotImplementedError
+
+    # -- spec-space surface: predictor features (Alg. 2) -------------------
+    def featurize(self, spec) -> np.ndarray:
+        """Structure features in [0,1]-ish (depth/width fractions + a FLOPs
+        ratio); length == ``feature_dim``. Quality features are appended by
+        the predictor, not the family."""
+        raise NotImplementedError
+
+    @property
+    def feature_dim(self) -> int:
+        raise NotImplementedError
+
+    # -- spec-space surface: cost model (latency LUT input) ----------------
+    def flops(self, spec) -> float:
+        """Analytic forward FLOPs per sample for the spec's submodel."""
+        raise NotImplementedError
+
+    def param_bytes(self, spec, bytes_per_param: int = 4) -> float:
+        """Submodel parameter bytes (memory + FL update-exchange cost)."""
+        raise NotImplementedError
+
+    def flops_fraction(self, spec) -> float:
+        """spec FLOPs / full-parent FLOPs (cached denominator)."""
+        if self._full_flops is None:
+            self._full_flops = self.flops(self.full_spec())
+        return self.flops(spec) / self._full_flops
+
+    def lut_specs(self, depth_choices=None) -> Iterable:
+        """Specs to pre-tabulate in the offline latency LUT. Families with
+        an enumerable gene space (the CNN's depth × width grid) yield it
+        here; families with a combinatorial space (zoo layer subsets) yield
+        nothing and the LUT memoises lazily on lookup."""
+        del depth_choices
+        return ()
+
+    # -- parent-model lifecycle --------------------------------------------
+    def init_params(self, key):
+        raise NotImplementedError
+
+    def full_ctx(self):
+        """Submodel ctx under which full-parent params evaluate (== the
+        parent config for both shipped families)."""
+        return self.cfg
+
+    def evaluate(self, params, data: Dict, batch_size: int = 128) -> float:
+        """Full-parent accuracy on one dataset (the server's global / IL
+        metric), batched through the family's submodel metric."""
+        if self._full_eval_fn is None:
+            ctx = self.full_ctx()
+
+            @jax.jit
+            def fn(p, x, y, valid):
+                return self.sub_metric(p, ctx, x, y, valid)
+            self._full_eval_fn = fn
+        num = den = 0.0
+        for b in eval_batches(data, batch_size):
+            n = len(b["y"])
+            acc = float(self._full_eval_fn(
+                params, jnp.asarray(b["x"]), jnp.asarray(b["y"]),
+                jnp.ones((n,), jnp.float32)))
+            num += acc * n
+            den += n
+        return num / max(den, 1.0)
 
     # -- masks (spec table, LRU by genes) ----------------------------------
     def spec_masks(self, spec) -> SpecMasks:
@@ -248,9 +338,73 @@ class CNNElasticFamily(ElasticFamily):
     def full_spec(self) -> SubmodelSpec:
         return full_spec(self.cfg)
 
+    def minimal_spec(self) -> SubmodelSpec:
+        return minimal_spec(self.cfg)
+
     def random_spec(self, rng) -> SubmodelSpec:
-        from repro.core.search import random_spec
-        return random_spec(self.cfg, rng)
+        depth = tuple(rng.randint(1, b) for _, b in self.cfg.stages)
+        width = tuple(rng.choice(self.cfg.elastic_widths)
+                      for _ in self.cfg.stages)
+        return SubmodelSpec(depth=depth, width=width)
+
+    # -- spec-space surface ------------------------------------------------
+    def mutate(self, spec: SubmodelSpec, rng, p: float) -> SubmodelSpec:
+        depth = list(spec.depth)
+        width = list(spec.width)
+        for s, (_, bmax) in enumerate(self.cfg.stages):
+            if rng.random() < p:
+                depth[s] = rng.randint(1, bmax)
+            if rng.random() < p:
+                width[s] = rng.choice(self.cfg.elastic_widths)
+        return SubmodelSpec(tuple(depth), tuple(width))
+
+    def crossover(self, a: SubmodelSpec, b: SubmodelSpec,
+                  rng) -> SubmodelSpec:
+        depth = tuple(rng.choice([x, y]) for x, y in zip(a.depth, b.depth))
+        width = tuple(rng.choice([x, y]) for x, y in zip(a.width, b.width))
+        return SubmodelSpec(depth, width)
+
+    def featurize(self, spec: SubmodelSpec) -> np.ndarray:
+        cfg = self.cfg
+        depth_f = [spec.depth[s] / cfg.stages[s][1]
+                   for s in range(len(cfg.stages))]
+        width_f = list(spec.width)
+        return np.asarray(depth_f + width_f + [self.flops_fraction(spec)],
+                          np.float32)
+
+    @property
+    def feature_dim(self) -> int:
+        return 2 * len(self.cfg.stages) + 1
+
+    def flops(self, spec: SubmodelSpec) -> float:
+        return cnn.flops(self.cfg, depth=spec.depth, widths=spec.width)
+
+    def param_bytes(self, spec: SubmodelSpec,
+                    bytes_per_param: int = 4) -> float:
+        cfg = self.cfg
+        total = 9 * cfg.in_channels * cfg.stem_channels
+        cin = cfg.stem_channels
+        for si, (cmax, _) in enumerate(cfg.stages):
+            c = channels_of(cfg, si, spec.width[si])
+            total += 9 * cin * c
+            total += spec.depth[si] * 2 * 9 * c * c
+            cin = c
+        total += cin * cfg.n_classes
+        return float(total * bytes_per_param)
+
+    def lut_specs(self, depth_choices=None) -> Iterable[SubmodelSpec]:
+        cfg = self.cfg
+        if depth_choices is not None:
+            ranges = [tuple(depth_choices)] * len(cfg.stages)
+        else:
+            ranges = [tuple(range(1, b + 1)) for _, b in cfg.stages]
+        for depth in itertools.product(*ranges):
+            for width in itertools.product(cfg.elastic_widths,
+                                           repeat=len(cfg.stages)):
+                yield SubmodelSpec(depth=depth, width=width)
+
+    def init_params(self, key):
+        return cnn.init_params(key, self.cfg)
 
     def _build_spec_masks(self, spec: SubmodelSpec) -> SpecMasks:
         cfg = self.cfg
@@ -332,12 +486,16 @@ class TransformerElasticFamily(ElasticFamily):
 
     name = "transformer"
 
-    def __init__(self, cfg: ModelConfig, spec_cache: int = 128):
+    def __init__(self, cfg: ModelConfig, spec_cache: int = 128,
+                 seq_len: int = 32):
         if cfg.frontend is not None or cfg.encoder_only:
             raise ValueError(
                 f"{cfg.name}: frontend/encoder-only archs have no token "
                 "cohort packing — CFL engine supports decoder LMs")
         super().__init__(cfg, spec_cache)
+        # tokens per sample in the latency cost model (and the synthetic LM
+        # scenario's sequence length)
+        self.seq_len = seq_len
 
     def _template(self):
         """Parent-shaped all-ones tree for the coverage round trip. Built
@@ -354,6 +512,9 @@ class TransformerElasticFamily(ElasticFamily):
     def full_spec(self) -> TransformerSubSpec:
         return full_transformer_spec(self.cfg)
 
+    def minimal_spec(self) -> TransformerSubSpec:
+        return minimal_transformer_spec(self.cfg)
+
     def random_spec(self, rng) -> TransformerSubSpec:
         """Feasible random spec: ≥1 kept layer per segment, widths drawn
         from the config's elastic grid."""
@@ -368,6 +529,59 @@ class TransformerElasticFamily(ElasticFamily):
             ff_frac=rng.choice(widths),
             expert_frac=rng.choice(widths) if cfg.moe is not None else 1.0,
             ssm_head_frac=rng.choice(widths) if cfg.ssm is not None else 1.0)
+
+    # -- spec-space surface ------------------------------------------------
+    def mutate(self, spec: TransformerSubSpec, rng,
+               p: float) -> TransformerSubSpec:
+        cfg = self.cfg
+        layers = list(spec.layers)
+        for i, seg in enumerate(cfg.segments):
+            if rng.random() < p:
+                k = rng.randint(1, seg.n_layers)
+                layers[i] = tuple(sorted(rng.sample(range(seg.n_layers), k)))
+        widths = cfg.elastic_widths
+        ff = rng.choice(widths) if rng.random() < p else spec.ff_frac
+        ex = spec.expert_frac
+        if cfg.moe is not None and rng.random() < p:
+            ex = rng.choice(widths)
+        sh = spec.ssm_head_frac
+        if cfg.ssm is not None and rng.random() < p:
+            sh = rng.choice(widths)
+        return TransformerSubSpec(tuple(layers), ff, ex, sh)
+
+    def crossover(self, a: TransformerSubSpec, b: TransformerSubSpec,
+                  rng) -> TransformerSubSpec:
+        layers = tuple(rng.choice([x, y])
+                       for x, y in zip(a.layers, b.layers))
+        return TransformerSubSpec(
+            layers,
+            ff_frac=rng.choice([a.ff_frac, b.ff_frac]),
+            expert_frac=rng.choice([a.expert_frac, b.expert_frac]),
+            ssm_head_frac=rng.choice([a.ssm_head_frac, b.ssm_head_frac]))
+
+    def featurize(self, spec: TransformerSubSpec) -> np.ndarray:
+        cfg = self.cfg
+        depth_f = [len(keep) / seg.n_layers
+                   for seg, keep in zip(cfg.segments, spec.layers)]
+        width_f = [spec.ff_frac, spec.expert_frac, spec.ssm_head_frac]
+        return np.asarray(depth_f + width_f + [self.flops_fraction(spec)],
+                          np.float32)
+
+    @property
+    def feature_dim(self) -> int:
+        return len(self.cfg.segments) + 4
+
+    def flops(self, spec: TransformerSubSpec) -> float:
+        sub_cfg = sub_transformer_config(self.cfg, spec)
+        return float(flops_per_token(sub_cfg, self.seq_len) * self.seq_len)
+
+    def param_bytes(self, spec: TransformerSubSpec,
+                    bytes_per_param: int = 4) -> float:
+        sub_cfg = sub_transformer_config(self.cfg, spec)
+        return float(sub_cfg.param_count() * bytes_per_param)
+
+    def init_params(self, key):
+        return T.init_params(key, self.cfg)
 
     # -- masks -------------------------------------------------------------
     def _build_spec_masks(self, spec: TransformerSubSpec) -> SpecMasks:

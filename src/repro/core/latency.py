@@ -4,17 +4,21 @@ The paper uses an offline-measured latency LUT per device type. Without
 edge hardware we use the standard two-term cost model per device —
 ``latency = FLOPs/throughput + bytes/mem_bw + fixed`` — and *tabulate* it
 over the submodel gene space, which is exactly the artifact the search
-helper consumes (`g(ω, p_k) < l_k` in Alg. 1).
+helper consumes (``g(ω, p_k) < l_k`` in Alg. 1).
+
+Family-agnostic: FLOPs and parameter bytes come from the
+``ElasticFamily`` spec-space surface (``flops`` / ``param_bytes``), so the
+same LUT machinery prices the paper CNN's depth × width grid and the
+transformer/SSM zoo's (d_ff, experts, SSD heads, depth-gate) genes.
+Families with an enumerable gene space pre-tabulate (``lut_specs``);
+combinatorial spaces fill the memo lazily on lookup.
 """
 from __future__ import annotations
 
 import dataclasses
-import itertools
 from typing import Dict, Sequence, Tuple
 
-from repro.configs.paper_cnn import CNNConfig
-from repro.core.submodel import SubmodelSpec, channels_of
-from repro.models.cnn import flops as cnn_flops
+from repro.core.elastic import ElasticFamily, family_for
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,52 +54,48 @@ def fleet_for_workers(n_workers: int,
     return tuple(fleet[i % len(fleet)] for i in range(n_workers))
 
 
-def submodel_bytes(cfg: CNNConfig, spec: SubmodelSpec,
-                   bytes_per_param: int = 4) -> float:
-    total = 9 * cfg.in_channels * cfg.stem_channels
-    cin = cfg.stem_channels
-    for si, (cmax, _) in enumerate(cfg.stages):
-        c = channels_of(cfg, si, spec.width[si])
-        total += 9 * cin * c
-        total += spec.depth[si] * 2 * 9 * c * c
-        cin = c
-    total += cin * cfg.n_classes
-    return float(total * bytes_per_param)
+def submodel_bytes(cfg, spec, bytes_per_param: int = 4) -> float:
+    """Submodel parameter bytes for any family config (back-compat shim —
+    delegates to the family's ``param_bytes``)."""
+    return family_for(cfg).param_bytes(spec, bytes_per_param)
 
 
-def train_step_latency(cfg: CNNConfig, spec: SubmodelSpec,
-                       profile: DeviceProfile, batch_size: int = 32) -> float:
-    f = cnn_flops(cfg, depth=spec.depth, widths=spec.width)
+def train_step_latency(cfg, spec, profile: DeviceProfile,
+                       batch_size: int = 32) -> float:
+    """Two-term cost model for one local training step of ``spec``'s
+    submodel on ``profile`` (any family config or ElasticFamily)."""
+    fam = family_for(cfg)
     # fwd + bwd ~ 3x fwd; activations ~ 2 bytes-touched per FLOP/8
-    return profile.step_latency(3.0 * f * batch_size,
-                                submodel_bytes(cfg, spec) * 3)
+    return profile.step_latency(3.0 * fam.flops(spec) * batch_size,
+                                fam.param_bytes(spec) * 3)
 
 
 class LatencyTable:
-    """Offline LUT: (gene, device) -> seconds (Alg. 1's `g`)."""
+    """Offline LUT: (gene, device) -> seconds (Alg. 1's `g`).
 
-    def __init__(self, cfg: CNNConfig,
-                 fleet: Sequence[DeviceProfile] = EDGE_FLEET,
-                 depth_choices: Sequence[int] = (1, 2, 3),
-                 batch_size: int = 32):
-        self.cfg = cfg
+    ``cfg`` may be any family config or an ElasticFamily instance.
+    ``depth_choices`` narrows the pre-tabulated depth grid for families
+    that enumerate one (the CNN); families with combinatorial gene spaces
+    skip pre-tabulation and memoise on lookup.
+    """
+
+    def __init__(self, cfg, fleet: Sequence[DeviceProfile] = EDGE_FLEET,
+                 depth_choices: Sequence[int] = None, batch_size: int = 32):
+        self.family: ElasticFamily = family_for(cfg)
+        self.cfg = self.family.cfg
         self.fleet = {p.name: p for p in fleet}
         self.batch_size = batch_size
         self._table: Dict[Tuple, float] = {}
-        widths = cfg.elastic_widths
-        n_stages = len(cfg.stages)
-        for depth in itertools.product(depth_choices, repeat=n_stages):
-            for width in itertools.product(widths, repeat=n_stages):
-                spec = SubmodelSpec(depth=depth, width=width)
-                for p in fleet:
-                    self._table[(spec.genes(), p.name)] = \
-                        train_step_latency(cfg, spec, p, batch_size)
+        for spec in self.family.lut_specs(depth_choices):
+            for p in fleet:
+                self._table[(self.family.genes(spec), p.name)] = \
+                    train_step_latency(self.family, spec, p, batch_size)
 
-    def lookup(self, spec: SubmodelSpec, device: str) -> float:
-        key = (spec.genes(), device)
+    def lookup(self, spec, device: str) -> float:
+        key = (self.family.genes(spec), device)
         if key not in self._table:
             self._table[key] = train_step_latency(
-                self.cfg, spec, self.fleet[device], self.batch_size)
+                self.family, spec, self.fleet[device], self.batch_size)
         return self._table[key]
 
     def __len__(self):

@@ -5,45 +5,48 @@ A four-layer MLP (exactly as the paper states) mapping
 online on the (x_k=(q_k, ω_k^t), y_k=acc_k^t) profiles the clients upload
 each round; training stops once the predictor converges (paper: "one or
 two CFL rounds of samples suffice").
+
+Family-agnostic: submodel structure features come from the
+``ElasticFamily`` spec-space surface (``featurize`` / ``feature_dim``), so
+one predictor class serves the paper CNN's (depth, width) genes and the
+transformer/SSM zoo's (d_ff, experts, SSD heads, depth-gate) genes alike;
+the predictor itself only appends the data-quality one-hot.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.paper_cnn import CNNConfig
-from repro.core.submodel import SubmodelSpec
-from repro.models.cnn import flops as cnn_flops
+from repro.core.elastic import ElasticFamily, family_for
 from repro.optim import adamw, apply_updates
 
 N_QUALITY_LEVELS = 5
 
 
-def featurize(cfg: CNNConfig, spec: SubmodelSpec, quality: int) -> np.ndarray:
-    """Structure + quality features; bounded [0,1]-ish."""
-    depth_f = [spec.depth[s] / cfg.stages[s][1] for s in range(len(cfg.stages))]
-    width_f = list(spec.width)
-    q = np.zeros(N_QUALITY_LEVELS)
+def featurize(cfg, spec, quality: int) -> np.ndarray:
+    """Structure + quality features; bounded [0,1]-ish. ``cfg`` may be any
+    family config or an ElasticFamily instance."""
+    fam = family_for(cfg)
+    q = np.zeros(N_QUALITY_LEVELS, np.float32)
     q[int(quality)] = 1.0
-    fl = cnn_flops(cfg, spec.depth, spec.width) / cnn_flops(cfg)
-    return np.asarray(depth_f + width_f + list(q) + [fl], np.float32)
+    return np.concatenate([fam.featurize(spec), q]).astype(np.float32)
 
 
-def feature_dim(cfg: CNNConfig) -> int:
-    return 2 * len(cfg.stages) + N_QUALITY_LEVELS + 1
+def feature_dim(cfg) -> int:
+    return family_for(cfg).feature_dim + N_QUALITY_LEVELS
 
 
 class AccuracyPredictor:
     """4-layer MLP, sigmoid head (accuracy in [0,1])."""
 
-    def __init__(self, cfg: CNNConfig, hidden: int = 64, lr: float = 3e-3,
+    def __init__(self, cfg, hidden: int = 64, lr: float = 3e-3,
                  seed: int = 0, converge_mae: float = 0.03):
-        self.cfg = cfg
-        d = feature_dim(cfg)
+        self.family: ElasticFamily = family_for(cfg)
+        self.cfg = self.family.cfg
+        d = feature_dim(self.family)
         key = jax.random.PRNGKey(seed)
         ks = jax.random.split(key, 4)
         dims = [d, hidden, hidden, hidden, 1]
@@ -81,10 +84,10 @@ class AccuracyPredictor:
         self._train_step = train_step
 
     # -- Alg. 2 ------------------------------------------------------------
-    def add_profiles(self, samples: Sequence[Tuple[SubmodelSpec, int, float]]):
+    def add_profiles(self, samples: Sequence[Tuple]):
         """samples: (spec, quality_level, observed_accuracy)."""
         for spec, q, acc in samples:
-            self.buffer_x.append(featurize(self.cfg, spec, q))
+            self.buffer_x.append(featurize(self.family, spec, q))
             self.buffer_y.append(float(acc))
 
     def train_round(self, epochs: int = 1):
@@ -104,12 +107,11 @@ class AccuracyPredictor:
         return self.last_mae
 
     # -- Alg. 1's `f_t` ------------------------------------------------------
-    def predict(self, spec: SubmodelSpec, quality: int) -> float:
-        x = jnp.asarray(featurize(self.cfg, spec, quality))[None]
+    def predict(self, spec, quality: int) -> float:
+        x = jnp.asarray(featurize(self.family, spec, quality))[None]
         return float(self._net(self.params, x)[0])
 
-    def predict_batch(self, specs: Sequence[SubmodelSpec],
-                      quality: int) -> np.ndarray:
-        x = jnp.asarray(np.stack([featurize(self.cfg, s, quality)
+    def predict_batch(self, specs: Sequence, quality: int) -> np.ndarray:
+        x = jnp.asarray(np.stack([featurize(self.family, s, quality)
                                   for s in specs]))
         return np.asarray(self._net(self.params, x))

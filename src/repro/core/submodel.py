@@ -223,6 +223,18 @@ def full_transformer_spec(cfg: ModelConfig) -> TransformerSubSpec:
         layers=tuple(tuple(range(s.n_layers)) for s in cfg.segments))
 
 
+def minimal_transformer_spec(cfg: ModelConfig) -> TransformerSubSpec:
+    """Smallest expressible zoo submodel — one kept layer per segment,
+    minimum width fraction on every applicable elastic dim (the
+    deterministic fallback when a latency bound admits nothing else)."""
+    w = min(cfg.elastic_widths)
+    return TransformerSubSpec(
+        layers=tuple((0,) for _ in cfg.segments),
+        ff_frac=w,
+        expert_frac=w if cfg.moe is not None else 1.0,
+        ssm_head_frac=w if cfg.ssm is not None else 1.0)
+
+
 def _round8(x: int) -> int:
     return max(8, (int(x) // 8) * 8)
 
@@ -249,10 +261,10 @@ def transformer_ssm_heads(cfg: ModelConfig, frac: float) -> Optional[int]:
     return max(ng, (int(round(nh * frac)) // ng) * ng)
 
 
-def extract_transformer(params: Dict, cfg: ModelConfig,
-                        spec: TransformerSubSpec):
-    """Returns (sub_params, sub_cfg). Slices stacked per-layer arrays on the
-    leading axis (depth) and d_ff / expert / SSD-head axes (width)."""
+def _elastic_dims(cfg: ModelConfig, spec: TransformerSubSpec):
+    """Resolved (ff, n_exp, nh_keep) for a spec; None where the dim is
+    inapplicable or kept whole (frac == 1.0 keeps every entry even when the
+    parent count doesn't divide the grid)."""
     ff = transformer_ff(cfg, spec.ff_frac)
     n_exp = None
     if cfg.moe is not None and spec.expert_frac < 1.0:
@@ -260,29 +272,19 @@ def extract_transformer(params: Dict, cfg: ModelConfig,
     nh_keep = None
     if cfg.ssm is not None and spec.ssm_head_frac < 1.0:
         nh_keep = transformer_ssm_heads(cfg, spec.ssm_head_frac)
+    return ff, n_exp, nh_keep
 
-    def slice_block(tree, keep_idx):
-        idx = np.asarray(keep_idx, np.int32)
-        sliced = jax.tree.map(lambda a: a[idx], tree)
-        return _slice_width(sliced, ff, n_exp, cfg, nh_keep)
 
-    sub_segs = []
-    new_cfg_segs = []
-    for seg_p, seg, keep in zip(params["segments"], cfg.segments,
-                                spec.layers):
-        if seg.kind == "attn_pair":
-            sub_segs.append({"local": slice_block(seg_p["local"], keep),
-                             "global": slice_block(seg_p["global"], keep)})
-        else:
-            sub_segs.append({"blocks": slice_block(seg_p["blocks"], keep)})
-        new_cfg_segs.append(dataclasses.replace(seg, n_layers=len(keep)))
-
-    sub = dict(params)
-    sub["segments"] = sub_segs
-    if "shared_attn" in params:
-        # the shared block is kept whole (its params are shared across
-        # segments; width-elastic dims do not apply to it)
-        sub["shared_attn"] = params["shared_attn"]
+def sub_transformer_config(cfg: ModelConfig,
+                           spec: TransformerSubSpec) -> ModelConfig:
+    """Submodel config for a spec, computed analytically (no params) — the
+    transformer analogue of ``sub_cnn_config``. ``extract_transformer``
+    produces exactly this config, so analytic FLOPs / param counts
+    (``configs.base.flops_per_token`` / ``param_count``) of the submodel
+    the latency model prices agree with the one the engine trains."""
+    ff, n_exp, nh_keep = _elastic_dims(cfg, spec)
+    segs = tuple(dataclasses.replace(seg, n_layers=len(keep))
+                 for seg, keep in zip(cfg.segments, spec.layers))
     moe = cfg.moe
     if moe is not None and n_exp is not None:
         moe = dataclasses.replace(moe, n_experts=n_exp)
@@ -290,11 +292,39 @@ def extract_transformer(params: Dict, cfg: ModelConfig,
     if ssm is not None and nh_keep is not None:
         ssm = dataclasses.replace(
             ssm, d_inner_override=nh_keep * ssm.head_dim)
-    sub_cfg = dataclasses.replace(
-        cfg, name=cfg.name + "-sub", segments=tuple(new_cfg_segs),
+    return dataclasses.replace(
+        cfg, name=cfg.name + "-sub", segments=segs,
         n_layers=sum(len(k) for k in spec.layers),
         d_ff=ff or cfg.d_ff, moe=moe, ssm=ssm)
-    return sub, sub_cfg
+
+
+def extract_transformer(params: Dict, cfg: ModelConfig,
+                        spec: TransformerSubSpec):
+    """Returns (sub_params, sub_cfg). Slices stacked per-layer arrays on the
+    leading axis (depth) and d_ff / expert / SSD-head axes (width)."""
+    ff, n_exp, nh_keep = _elastic_dims(cfg, spec)
+
+    def slice_block(tree, keep_idx):
+        idx = np.asarray(keep_idx, np.int32)
+        sliced = jax.tree.map(lambda a: a[idx], tree)
+        return _slice_width(sliced, ff, n_exp, cfg, nh_keep)
+
+    sub_segs = []
+    for seg_p, seg, keep in zip(params["segments"], cfg.segments,
+                                spec.layers):
+        if seg.kind == "attn_pair":
+            sub_segs.append({"local": slice_block(seg_p["local"], keep),
+                             "global": slice_block(seg_p["global"], keep)})
+        else:
+            sub_segs.append({"blocks": slice_block(seg_p["blocks"], keep)})
+
+    sub = dict(params)
+    sub["segments"] = sub_segs
+    if "shared_attn" in params:
+        # the shared block is kept whole (its params are shared across
+        # segments; width-elastic dims do not apply to it)
+        sub["shared_attn"] = params["shared_attn"]
+    return sub, sub_transformer_config(cfg, spec)
 
 
 def _slice_width(block_tree, ff: Optional[int], n_exp: Optional[int],

@@ -1,6 +1,7 @@
 from repro.data.synth import (make_dataset, make_lm_dataset,
                               train_test_split)
-from repro.data.quality import (apply_quality, gaussian_blur,
-                                mixed_quality_dataset, sharpen, N_LEVELS)
+from repro.data.quality import (apply_quality, apply_token_quality,
+                                gaussian_blur, mixed_quality_dataset,
+                                sharpen, N_LEVELS)
 from repro.data.partition import iid_partition, noniid_partition, subset
 from repro.data.loader import batches, eval_batches, index_batches

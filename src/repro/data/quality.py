@@ -55,6 +55,24 @@ def apply_quality(x: np.ndarray, level: int) -> np.ndarray:
     raise ValueError(f"quality level {level}")
 
 
+TOKEN_NOISE_FRACS = {0: 0.0, 1: 0.05, 2: 0.10, 3: 0.15, 4: 0.20}
+
+
+def apply_token_quality(tokens: np.ndarray, level: int, vocab: int,
+                        seed: int = 0) -> np.ndarray:
+    """LM analogue of ``apply_quality``: level-l data has a fraction of its
+    tokens replaced with uniform-random vocab draws (corrupted edge text).
+    Level 0 = clean; deterministic given ``seed``."""
+    frac = TOKEN_NOISE_FRACS[int(level)]
+    if frac == 0.0:
+        return tokens
+    rng = np.random.RandomState(seed)
+    out = tokens.copy()
+    mask = rng.random_sample(tokens.shape) < frac
+    out[mask] = rng.randint(0, vocab, size=int(mask.sum()))
+    return out
+
+
 def mixed_quality_dataset(data: Dict[str, np.ndarray],
                           seed: int = 0) -> Dict[str, np.ndarray]:
     """IID-split into 5 groups, one quality level each, re-mixed

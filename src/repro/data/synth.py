@@ -60,8 +60,8 @@ def train_test_split(data: Dict[str, np.ndarray], test_frac: float = 0.2,
             {"x": data["x"][te], "y": data["y"][te]})
 
 
-def make_lm_dataset(n: int, seq_len: int, vocab: int,
-                    seed: int = 0) -> Dict[str, np.ndarray]:
+def make_lm_dataset(n: int, seq_len: int, vocab: int, seed: int = 0,
+                    chain_seed: int = None) -> Dict[str, np.ndarray]:
     """Synthetic token sequences for the transformer/SSM CFL engine.
 
     A sparse Markov chain over the vocab (each token has 4 learnable
@@ -69,9 +69,14 @@ def make_lm_dataset(n: int, seq_len: int, vocab: int,
     LM while staying fully offline. Layout matches the engine's generic
     cohort packing: ``x`` (N, S) int32 token rows; ``y`` (N,) is a dummy
     label column (causal-LM targets come from the tokens themselves).
+
+    ``chain_seed`` decouples the chain (the *distribution*) from the
+    sampling seed, so an FL population can share one chain across clients
+    (IID) or draw one chain per client (distribution heterogeneity).
     """
     rng = np.random.RandomState(seed)
-    nexts = rng.randint(0, vocab, size=(vocab, 4))
+    crng = rng if chain_seed is None else np.random.RandomState(chain_seed)
+    nexts = crng.randint(0, vocab, size=(vocab, 4))
     toks = np.zeros((n, seq_len), np.int32)
     state = rng.randint(0, vocab, size=n)
     for t in range(seq_len):

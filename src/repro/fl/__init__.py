@@ -4,4 +4,5 @@ from repro.fl.engine import (BatchedRoundEngine, CohortResult,
                              masked_forward)
 from repro.fl.server import CFLConfig, CFLServer
 from repro.fl.baselines import FedAvgServer, independent_learning
+from repro.fl.session import CFLSession
 from repro.fl.rounds import build_population, run_cfl, run_fedavg, run_il

@@ -1,79 +1,64 @@
 """Baselines the paper compares against: standard FedAvg (one global model
 for every client) and Independent Learning (IL — local training only).
 
-Both ride the same batched parent-space engine as the CFL server when
-``fl_cfg.batched_rounds`` (every client's mask is the full-spec mask, so
-the cohort is one vmapped program); the sequential loops remain for A/B."""
+Family-agnostic like the CFL server: both baselines consume only the
+``ElasticFamily`` protocol and ride the same batched parent-space engine
+when ``fl_cfg.batched_rounds`` (every client's mask is the full-spec mask,
+so the cohort is one vmapped program); the sequential
+``SequentialFamilyTrainer`` loop remains for A/B."""
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, List
 
-import jax
-import numpy as np
-
-from repro.configs.paper_cnn import CNNConfig
-from repro.core.aggregate import aggregate, apply_server_update
+from repro.core.elastic import family_for
 from repro.core.fairness import accuracy_fairness, round_time_fairness
-from repro.core.latency import LatencyTable, submodel_bytes
-from repro.core.submodel import full_spec
-from repro.fl.client import ClientInfo, evaluate, local_train
-from repro.fl.engine import BatchedRoundEngine
+from repro.core.latency import LatencyTable
+from repro.fl.client import ClientInfo
+from repro.fl.engine import BatchedRoundEngine, SequentialFamilyTrainer
 
 
 class FedAvgServer:
     """Standard FL [40]: every client trains the full parent model."""
 
-    def __init__(self, cfg: CNNConfig, params, clients: List[ClientInfo],
+    def __init__(self, cfg, params, clients: List[ClientInfo],
                  client_data: List[Dict], test_data: List[Dict], fl_cfg):
-        self.cfg = cfg
+        self.family = family_for(cfg)
+        self.cfg = self.family.cfg
         self.params = params
         self.clients = clients
         self.client_data = client_data
         self.test_data = test_data
         self.fl = fl_cfg
-        self.latency = LatencyTable(
-            cfg, depth_choices=tuple(
-                range(1, max(b for _, b in cfg.stages) + 1)),
-            batch_size=fl_cfg.batch_size)
+        self.latency = LatencyTable(self.family,
+                                    batch_size=fl_cfg.batch_size)
         self.round_idx = 0
         self.history: List[Dict] = []
-        self.engine = BatchedRoundEngine(
-            cfg, lr=fl_cfg.lr, momentum=fl_cfg.momentum,
-            cohort_shards=getattr(fl_cfg, "cohort_shards", 1)) \
-            if getattr(fl_cfg, "batched_rounds", False) else None
+        if fl_cfg.batched_rounds:
+            self._runner = BatchedRoundEngine(
+                self.family, lr=fl_cfg.lr, momentum=fl_cfg.momentum,
+                cohort_shards=fl_cfg.cohort_shards)
+        else:
+            self._runner = SequentialFamilyTrainer(
+                self.family, lr=fl_cfg.lr, momentum=fl_cfg.momentum)
+        # back-compat alias (None when running the sequential loop)
+        self.engine = self._runner if fl_cfg.batched_rounds else None
 
     def run_round(self) -> Dict:
-        spec = full_spec(self.cfg)
+        spec = self.family.full_spec()
         seeds = [self.fl.seed * 7 + self.round_idx * 131 + k
                  for k in range(len(self.clients))]
         sizes = [c.n_samples for c in self.clients]
-        if self.engine is not None:
-            self.params, accs, n_steps_all = self.engine.run_fl_round(
-                self.params, [spec] * len(self.clients), self.client_data,
-                self.test_data, sizes, batch_size=self.fl.batch_size,
-                epochs=self.fl.local_epochs, seeds=seeds)
-        else:
-            deltas, accs, n_steps_all = [], [], []
-            for k, client in enumerate(self.clients):
-                delta, n_steps = local_train(
-                    self.params, self.cfg, self.client_data[k],
-                    epochs=self.fl.local_epochs,
-                    batch_size=self.fl.batch_size,
-                    lr=self.fl.lr, momentum=self.fl.momentum, seed=seeds[k])
-                accs.append(evaluate(apply_server_update(self.params, delta),
-                                     self.cfg, self.test_data[k]))
-                deltas.append(delta)
-                n_steps_all.append(n_steps)
-            self.params = apply_server_update(self.params,
-                                              aggregate(deltas, sizes))
+        self.params, accs, n_steps_all = self._runner.run_fl_round(
+            self.params, [spec] * len(self.clients), self.client_data,
+            self.test_data, sizes, batch_size=self.fl.batch_size,
+            epochs=self.fl.local_epochs, seeds=seeds)
 
         times = []
         for client, n_steps in zip(self.clients, n_steps_all):
             prof = self.latency.fleet[client.device]
             times.append(
                 n_steps * self.latency.lookup(spec, client.device) +
-                prof.comm_latency(2 * submodel_bytes(self.cfg, spec)))
+                prof.comm_latency(2 * self.family.param_bytes(spec)))
         rec = {"round": self.round_idx, "accs": accs,
                "fairness": accuracy_fairness(accs),
                "timing": round_time_fairness(times)}
@@ -82,10 +67,10 @@ class FedAvgServer:
         return rec
 
     def global_accuracy(self, data: Dict) -> float:
-        return evaluate(self.params, self.cfg, data)
+        return self.family.evaluate(self.params, data)
 
 
-def independent_learning(cfg: CNNConfig, init_params,
+def independent_learning(cfg, init_params,
                          clients: List[ClientInfo], client_data: List[Dict],
                          test_data: List[Dict], *, rounds: int,
                          fl_cfg) -> List[float]:
@@ -94,11 +79,12 @@ def independent_learning(cfg: CNNConfig, init_params,
     Note apply_server_update(p, ω_0 − ω_E) == ω_E, so a round is simply
     'keep training from where you left off' — the batched path carries the
     per-client trained params directly."""
-    spec = full_spec(cfg)
-    if getattr(fl_cfg, "batched_rounds", False):
+    family = family_for(cfg)
+    spec = family.full_spec()
+    if fl_cfg.batched_rounds:
         engine = BatchedRoundEngine(
-            cfg, lr=fl_cfg.lr, momentum=fl_cfg.momentum,
-            cohort_shards=getattr(fl_cfg, "cohort_shards", 1))
+            family, lr=fl_cfg.lr, momentum=fl_cfg.momentum,
+            cohort_shards=fl_cfg.cohort_shards)
         specs = [spec] * len(clients)
         thetas = engine.broadcast_params(init_params, len(clients))
         for r in range(rounds):
@@ -110,14 +96,15 @@ def independent_learning(cfg: CNNConfig, init_params,
         return [float(a) for a in engine.eval_cohort(thetas, specs,
                                                      test_data)]
 
+    seq = SequentialFamilyTrainer(family, lr=fl_cfg.lr,
+                                  momentum=fl_cfg.momentum)
     accs = []
     for k, client in enumerate(clients):
         p = init_params
         for r in range(rounds):
-            delta, _ = local_train(
-                p, cfg, client_data[k], epochs=fl_cfg.local_epochs,
-                batch_size=fl_cfg.batch_size, lr=fl_cfg.lr,
-                momentum=fl_cfg.momentum, seed=fl_cfg.seed + r * 31 + k)
-            p = apply_server_update(p, delta)
-        accs.append(evaluate(p, cfg, test_data[k]))
+            # full spec: extract is the identity, trained sub == parent
+            _, p, _, _ = seq.client_update(
+                p, spec, client_data[k], batch_size=fl_cfg.batch_size,
+                epochs=fl_cfg.local_epochs, seed=fl_cfg.seed + r * 31 + k)
+        accs.append(family.evaluate(p, test_data[k]))
     return accs

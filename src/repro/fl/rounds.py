@@ -1,38 +1,38 @@
 """Experiment drivers: build a heterogeneous FL population (devices ×
-quality × distribution) and run CFL / FedAvg / IL under identical budgets.
+quality × distribution) for any elastic family and run CFL / FedAvg / IL
+under identical budgets.
+
+``build_population`` serves two scenarios from one fleet/latency-budget
+path:
+
+* image classification (the paper's CIFAR/MNIST stand-ins) for the CNN
+  parent — quality = blur/sharpen levels, distribution = non-IID labels;
+* the synthetic Markov LM scenario (``kind="synthlm"``) for the
+  transformer/SSM zoo — quality = token-corruption levels, distribution =
+  per-client Markov chains.
+
+``run_cfl`` / ``run_fedavg`` / ``run_il`` are thin shims over
+``fl.session.CFLSession`` kept for existing call sites.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, List, Optional, Tuple
 
-import jax
 import numpy as np
 
-from repro.configs.paper_cnn import CNNConfig
-from repro.core.latency import (EDGE_FLEET, LatencyTable, fleet_for_workers,
-                                train_step_latency)
-from repro.core.submodel import full_spec
-from repro.data import (make_dataset, mixed_quality_dataset, apply_quality,
-                        iid_partition, noniid_partition, subset,
-                        train_test_split)
+from repro.core.elastic import ElasticFamily, family_for
+from repro.core.latency import fleet_for_workers, train_step_latency
+from repro.data import (make_dataset, make_lm_dataset, apply_quality,
+                        apply_token_quality, iid_partition, noniid_partition,
+                        subset, train_test_split)
 from repro.fl.client import ClientInfo
-from repro.fl.server import CFLConfig, CFLServer
-from repro.fl.baselines import FedAvgServer, independent_learning
-from repro.models import cnn
+from repro.fl.server import CFLConfig, CFLServer          # noqa: F401 (re-export)
+from repro.fl.baselines import FedAvgServer, independent_learning  # noqa: F401
+from repro.fl.session import CFLSession
 
 
-def build_population(cfg: CNNConfig, *, kind: str, n_workers: int,
-                     n_samples: int, heterogeneity: str, seed: int = 0,
-                     latency_bound_frac: float = 1.05
-                     ) -> Tuple[List[ClientInfo], List[Dict], List[Dict]]:
-    """heterogeneity: 'quality' | 'distribution' | 'both' | 'none'.
-
-    latency_bound_frac sets each client's budget
-    ``l_k = frac * min(own, fleet-median)`` full-model step latency
-    (CFLConfig.latency_bound_frac): weak devices get tight bounds, and
-    frac > 1 lets devices at/below the median train the full model.
-    """
+def _image_population(family: ElasticFamily, kind: str, n_workers: int,
+                      n_samples: int, heterogeneity: str, seed: int):
     raw = make_dataset(kind, n_samples, seed=seed)
     train, test = train_test_split(raw, 0.25, seed)
     rng = np.random.RandomState(seed)
@@ -44,13 +44,7 @@ def build_population(cfg: CNNConfig, *, kind: str, n_workers: int,
         parts = iid_partition(len(train["y"]), n_workers, seed)
         test_parts = iid_partition(len(test["y"]), n_workers, seed + 1)
 
-    fleet = fleet_for_workers(n_workers)
-    # full-model latency is per device *type*, not per worker: compute the
-    # fleet median (and each profile's latency) once, outside the loop
-    full = full_spec(cfg)
-    full_lats = {p.name: train_step_latency(cfg, full, p) for p in set(fleet)}
-    med = float(np.median([full_lats[p.name] for p in fleet]))
-    clients, cdata, tdata = [], [], []
+    cdata, tdata, quals = [], [], []
     for k in range(n_workers):
         ctr = subset(train, parts[k])
         cte = subset(test, test_parts[k])
@@ -59,70 +53,119 @@ def build_population(cfg: CNNConfig, *, kind: str, n_workers: int,
             q = int(rng.randint(0, 5))
             ctr = dict(ctr, x=apply_quality(ctr["x"], q))
             cte = dict(cte, x=apply_quality(cte["x"], q))
+        cdata.append(ctr)
+        tdata.append(cte)
+        quals.append(q)
+    return cdata, tdata, quals
+
+
+def _lm_population(family: ElasticFamily, n_workers: int, n_samples: int,
+                   heterogeneity: str, seed: int):
+    """Markov-LM heterogeneous population: distribution heterogeneity =
+    one Markov chain per client (vs a shared chain), quality = token
+    corruption levels (data.quality.apply_token_quality)."""
+    cfg = family.cfg
+    seq_len = getattr(family, "seq_len", 32)
+    vocab = cfg.vocab_size
+    rng = np.random.RandomState(seed)
+    n_tr = max(8, n_samples // n_workers)
+    n_te = max(8, n_tr // 4)
+    cdata, tdata, quals = [], [], []
+    for k in range(n_workers):
+        chain = seed * 31 + (k if heterogeneity in ("distribution", "both")
+                             else 0)
+        ctr = make_lm_dataset(n_tr, seq_len, vocab, seed=seed * 7 + 2 * k,
+                              chain_seed=chain)
+        cte = make_lm_dataset(n_te, seq_len, vocab,
+                              seed=seed * 7 + 2 * k + 1, chain_seed=chain)
+        q = 0
+        if heterogeneity in ("quality", "both"):
+            q = int(rng.randint(0, 5))
+            ctr = dict(ctr, x=apply_token_quality(ctr["x"], q, vocab,
+                                                  seed=seed + k))
+            cte = dict(cte, x=apply_token_quality(cte["x"], q, vocab,
+                                                  seed=seed + 100 + k))
+        cdata.append(ctr)
+        tdata.append(cte)
+        quals.append(q)
+    return cdata, tdata, quals
+
+
+def build_population(cfg, *, kind: Optional[str] = None, n_workers: int,
+                     n_samples: int, heterogeneity: str, seed: int = 0,
+                     latency_bound_frac: float = 1.05
+                     ) -> Tuple[List[ClientInfo], List[Dict], List[Dict]]:
+    """heterogeneity: 'quality' | 'distribution' | 'both' | 'none'.
+
+    ``cfg`` may be any family config or an ElasticFamily; ``kind`` is an
+    image kind ('synthmnist'/'synthcifar'), 'synthlm', or None for the
+    family default. latency_bound_frac sets each client's budget
+    ``l_k = frac * min(own, fleet-median)`` full-model step latency
+    (CFLConfig.latency_bound_frac): weak devices get tight bounds, and
+    frac > 1 lets devices at/below the median train the full model.
+    """
+    family = family_for(cfg)
+    if kind is None:
+        kind = "synthlm" if family.name == "transformer" else "synthmnist"
+    if kind == "synthlm":
+        cdata, tdata, quals = _lm_population(
+            family, n_workers, n_samples, heterogeneity, seed)
+    else:
+        cdata, tdata, quals = _image_population(
+            family, kind, n_workers, n_samples, heterogeneity, seed)
+
+    fleet = fleet_for_workers(n_workers)
+    # full-model latency is per device *type*, not per worker: compute the
+    # fleet median (and each profile's latency) once, outside the loop
+    full = family.full_spec()
+    full_lats = {p.name: train_step_latency(family, full, p)
+                 for p in set(fleet)}
+    med = float(np.median([full_lats[p.name] for p in fleet]))
+    clients = []
+    for k in range(n_workers):
         prof = fleet[k]
         # heterogeneity in latency budgets: weak devices get tight bounds
         bound = float(min(full_lats[prof.name], med) * latency_bound_frac)
-        clients.append(ClientInfo(cid=k, device=prof.name, quality=q,
-                                  n_samples=len(ctr["y"]),
+        clients.append(ClientInfo(cid=k, device=prof.name, quality=quals[k],
+                                  n_samples=len(cdata[k]["y"]),
                                   latency_bound=bound))
-        cdata.append(ctr)
-        tdata.append(cte)
     return clients, cdata, tdata
 
 
-def run_cfl(cfg: CNNConfig, *, kind="synthmnist", n_workers=8,
-            n_samples=4000, heterogeneity="quality", rounds=5,
+# ---------------------------------------------------------------------------
+# back-compat experiment drivers (thin shims over CFLSession)
+# ---------------------------------------------------------------------------
+def run_cfl(cfg, *, kind=None, n_workers=8, n_samples=4000,
+            heterogeneity="quality", rounds=5,
             fl_cfg: Optional[CFLConfig] = None, seed=0,
             cohort_shards: int = 1):
-    if fl_cfg is None:
-        fl_cfg = CFLConfig(n_workers=n_workers, seed=seed,
-                           cohort_shards=cohort_shards)
-    elif cohort_shards != 1:
-        fl_cfg = dataclasses.replace(fl_cfg, cohort_shards=cohort_shards)
-    clients, cdata, tdata = build_population(
+    sess = CFLSession.from_synthetic(
         cfg, kind=kind, n_workers=n_workers, n_samples=n_samples,
-        heterogeneity=heterogeneity, seed=seed,
-        latency_bound_frac=fl_cfg.latency_bound_frac)
-    params = cnn.init_params(jax.random.PRNGKey(seed), cfg)
-    server = CFLServer(cfg, params, clients, cdata, tdata, fl_cfg)
-    for _ in range(rounds):
-        server.run_round()
-    return server
+        heterogeneity=heterogeneity, fl_cfg=fl_cfg, algorithm="cfl",
+        seed=seed, cohort_shards=cohort_shards)
+    sess.run(rounds)
+    return sess.server
 
 
-def run_fedavg(cfg: CNNConfig, *, kind="synthmnist", n_workers=8,
-               n_samples=4000, heterogeneity="quality", rounds=5,
+def run_fedavg(cfg, *, kind=None, n_workers=8, n_samples=4000,
+               heterogeneity="quality", rounds=5,
                fl_cfg: Optional[CFLConfig] = None, seed=0,
                cohort_shards: int = 1):
-    if fl_cfg is None:
-        fl_cfg = CFLConfig(n_workers=n_workers, seed=seed,
-                           cohort_shards=cohort_shards)
-    elif cohort_shards != 1:
-        fl_cfg = dataclasses.replace(fl_cfg, cohort_shards=cohort_shards)
-    clients, cdata, tdata = build_population(
+    sess = CFLSession.from_synthetic(
         cfg, kind=kind, n_workers=n_workers, n_samples=n_samples,
-        heterogeneity=heterogeneity, seed=seed,
-        latency_bound_frac=fl_cfg.latency_bound_frac)
-    params = cnn.init_params(jax.random.PRNGKey(seed), cfg)
-    server = FedAvgServer(cfg, params, clients, cdata, tdata, fl_cfg)
-    for _ in range(rounds):
-        server.run_round()
-    return server
+        heterogeneity=heterogeneity, fl_cfg=fl_cfg, algorithm="fedavg",
+        seed=seed, cohort_shards=cohort_shards)
+    sess.run(rounds)
+    return sess.server
 
 
-def run_il(cfg: CNNConfig, *, kind="synthmnist", n_workers=8,
-           n_samples=4000, heterogeneity="quality", rounds=5,
+def run_il(cfg, *, kind=None, n_workers=8, n_samples=4000,
+           heterogeneity="quality", rounds=5,
            fl_cfg: Optional[CFLConfig] = None, seed=0,
            cohort_shards: int = 1) -> List[float]:
-    if fl_cfg is None:
-        fl_cfg = CFLConfig(n_workers=n_workers, seed=seed,
-                           cohort_shards=cohort_shards)
-    elif cohort_shards != 1:
-        fl_cfg = dataclasses.replace(fl_cfg, cohort_shards=cohort_shards)
-    clients, cdata, tdata = build_population(
+    sess = CFLSession.from_synthetic(
         cfg, kind=kind, n_workers=n_workers, n_samples=n_samples,
-        heterogeneity=heterogeneity, seed=seed,
-        latency_bound_frac=fl_cfg.latency_bound_frac)
-    params = cnn.init_params(jax.random.PRNGKey(seed), cfg)
-    return independent_learning(cfg, params, clients, cdata, tdata,
-                                rounds=rounds, fl_cfg=fl_cfg)
+        heterogeneity=heterogeneity, fl_cfg=fl_cfg, algorithm="il",
+        seed=seed, cohort_shards=cohort_shards)
+    sess.run(rounds)
+    return sess.il_accs

@@ -2,36 +2,33 @@
 aggregation -> search-helper update, with per-round latency/fairness
 accounting from the device profiles.
 
+Family-agnostic: the server consumes only the ``ElasticFamily`` protocol
+(spec-space surface for Alg. 1–2, mask algebra for the batched engine, the
+extract/pad reference for the sequential loop), so one ``CFLServer`` runs
+the paper CNN and every transformer/SSM zoo parent alike.
+
 Two round engines share the same algorithm:
 
 * **batched** (default) — every client trains in parent coordinates with a
   per-client mask; one jitted vmap/scan program covers the whole cohort
   regardless of spec diversity (fl.engine.BatchedRoundEngine).
-* **sequential** — the original extract → per-client jit → pad loop, kept
-  for A/B verification (one compile per distinct submodel config).
+* **sequential** — the extract → per-client jit → pad loop
+  (fl.engine.SequentialFamilyTrainer), kept for A/B verification (one
+  compile per distinct submodel config).
 """
 from __future__ import annotations
 
 import dataclasses
 import random
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List
 
-import jax
-import numpy as np
-
-from repro.configs.paper_cnn import CNNConfig
-from repro.core.aggregate import (aggregate, aggregate_coverage,
-                                  apply_server_update)
-from repro.core.latency import LatencyTable, fleet_for_workers
-from repro.core.predictor import AccuracyPredictor
-from repro.core.search import SearchConfig, search_all_workers, random_spec
-from repro.core.submodel import (SubmodelSpec, coverage_cnn, extract_cnn,
-                                 full_spec, minimal_spec, pad_cnn,
-                                 sub_cnn_config)
+from repro.core.elastic import ElasticFamily, family_for
 from repro.core.fairness import accuracy_fairness, round_time_fairness
-from repro.core.latency import submodel_bytes
-from repro.fl.client import ClientInfo, evaluate, local_train
-from repro.fl.engine import BatchedRoundEngine
+from repro.core.latency import LatencyTable
+from repro.core.predictor import AccuracyPredictor
+from repro.core.search import SearchConfig, search_all_workers
+from repro.fl.client import ClientInfo
+from repro.fl.engine import BatchedRoundEngine, SequentialFamilyTrainer
 
 
 @dataclasses.dataclass
@@ -54,39 +51,46 @@ class CFLConfig:
 
 
 class CFLServer:
-    def __init__(self, cfg: CNNConfig, params, clients: List[ClientInfo],
+    """One CFL control plane for any elastic family. ``cfg`` may be a
+    family config (CNNConfig / zoo ModelConfig) or an ElasticFamily
+    instance — existing CNN call sites work unchanged."""
+
+    def __init__(self, cfg, params, clients: List[ClientInfo],
                  client_data: List[Dict], test_data: List[Dict],
                  fl_cfg: CFLConfig):
-        self.cfg = cfg
+        self.family: ElasticFamily = family_for(cfg)
+        self.cfg = self.family.cfg
         self.params = params
         self.clients = clients
         self.client_data = client_data
         self.test_data = test_data
         self.fl = fl_cfg
-        self.predictor = AccuracyPredictor(cfg, seed=fl_cfg.seed)
-        self.latency = LatencyTable(
-            cfg, depth_choices=tuple(
-                range(1, max(b for _, b in cfg.stages) + 1)),
-            batch_size=fl_cfg.batch_size)
+        self.predictor = AccuracyPredictor(self.family, seed=fl_cfg.seed)
+        self.latency = LatencyTable(self.family,
+                                    batch_size=fl_cfg.batch_size)
         self.round_idx = 0
         self.history: List[Dict] = []
-        self._rng = np.random.RandomState(fl_cfg.seed)
-        self.engine = BatchedRoundEngine(
-            cfg, lr=fl_cfg.lr, momentum=fl_cfg.momentum,
-            cohort_shards=getattr(fl_cfg, "cohort_shards", 1)) \
-            if fl_cfg.batched_rounds else None
+        if fl_cfg.batched_rounds:
+            self.engine = BatchedRoundEngine(
+                self.family, lr=fl_cfg.lr, momentum=fl_cfg.momentum,
+                cohort_shards=fl_cfg.cohort_shards)
+            self._seq = None
+        else:
+            self.engine = None
+            self._seq = SequentialFamilyTrainer(
+                self.family, lr=fl_cfg.lr, momentum=fl_cfg.momentum)
 
     # ------------------------------------------------------------------
-    def sample_submodels(self) -> List[SubmodelSpec]:
+    def sample_submodels(self) -> List:
         """Alg. 1 + helper filtering; round 0 uses random feasible specs
         (predictor untrained)."""
         bounds = [c.latency_bound for c in self.clients]
         if self.round_idx == 0:
-            fallback = minimal_spec(self.cfg)
+            fallback = self.family.minimal_spec()
             specs = []
             for k, c in enumerate(self.clients):
                 rng = random.Random(self.fl.seed * 131 + k)
-                cand = [random_spec(self.cfg, rng) for _ in range(32)]
+                cand = [self.family.random_spec(rng) for _ in range(32)]
                 feas = [s for s in cand
                         if self.latency.lookup(s, c.device) < c.latency_bound]
                 # deterministic fallback: the minimal spec is the cheapest
@@ -96,7 +100,7 @@ class CFLServer:
                 specs.append(feas[0] if feas else fallback)
             return specs
         return search_all_workers(
-            self.cfg, self.predictor, self.latency,
+            self.family, self.predictor, self.latency,
             devices=[c.device for c in self.clients],
             qualities=[c.quality for c in self.clients],
             latency_bounds=bounds, search_cfg=self.fl.search,
@@ -112,7 +116,7 @@ class CFLServer:
         for client, spec, n in zip(self.clients, specs, n_steps):
             prof = self.latency.fleet[client.device]
             t = n * self.latency.lookup(spec, client.device) + \
-                prof.comm_latency(2 * submodel_bytes(self.cfg, spec))
+                prof.comm_latency(2 * self.family.param_bytes(spec))
             times.append(float(t))
         return times
 
@@ -131,7 +135,7 @@ class CFLServer:
 
         rec = {
             "round": self.round_idx,
-            "specs": [s.genes() for s in specs],
+            "specs": [self.family.genes(s) for s in specs],
             "accs": accs,
             "fairness": accuracy_fairness(accs),
             "timing": round_time_fairness(times),
@@ -154,31 +158,15 @@ class CFLServer:
         return accs, self._simulated_times(specs, n_steps)
 
     def _train_round_sequential(self, specs):
-        """Original per-client loop (A/B reference)."""
-        deltas, covs, sizes, accs, n_steps_all = [], [], [], [], []
-        for k, (client, spec) in enumerate(zip(self.clients, specs)):
-            sub_cfg = sub_cnn_config(self.cfg, spec)
-            sub_params = extract_cnn(self.params, self.cfg, spec)
-            delta, n_steps = local_train(
-                sub_params, sub_cfg, self.client_data[k],
-                epochs=self.fl.local_epochs, batch_size=self.fl.batch_size,
-                lr=self.fl.lr, momentum=self.fl.momentum,
-                seed=self._client_seed(k))
-            acc = evaluate(apply_server_update(sub_params, delta), sub_cfg,
-                           self.test_data[k])
-            deltas.append(pad_cnn(delta, self.params, self.cfg, spec))
-            if self.fl.coverage_norm:
-                covs.append(coverage_cnn(self.params, self.cfg, spec))
-            sizes.append(client.n_samples)
-            accs.append(acc)
-            n_steps_all.append(n_steps)
-
-        if self.fl.coverage_norm:
-            delta_t = aggregate_coverage(deltas, covs, sizes)
-        else:
-            delta_t = aggregate(deltas, sizes)
-        self.params = apply_server_update(self.params, delta_t)
-        return accs, self._simulated_times(specs, n_steps_all)
+        """Per-client extract → train → pad loop (A/B reference) via the
+        family-agnostic SequentialFamilyTrainer."""
+        seeds = [self._client_seed(k) for k in range(len(self.clients))]
+        self.params, accs, n_steps = self._seq.run_fl_round(
+            self.params, specs, self.client_data, self.test_data,
+            [c.n_samples for c in self.clients],
+            batch_size=self.fl.batch_size, epochs=self.fl.local_epochs,
+            seeds=seeds, coverage_norm=self.fl.coverage_norm)
+        return accs, self._simulated_times(specs, n_steps)
 
     def global_accuracy(self, data: Dict) -> float:
-        return evaluate(self.params, self.cfg, data)
+        return self.family.evaluate(self.params, data)

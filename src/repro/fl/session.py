@@ -1,0 +1,150 @@
+"""CFLSession — the CFL control plane's single entry point.
+
+One API runs the paper's whole system (Alg. 1–4) for **any**
+``ElasticFamily``: genetic submodel search bounded by the per-device
+latency LUT (Alg. 1), the online accuracy predictor (Alg. 2), and
+coverage-aware alignment/aggregation (Alg. 3–4) — family + fleet + data
+in, per-round history with fairness/latency accounting out.
+
+    family = family_for(cfg)                  # CNNConfig or zoo ModelConfig
+    sess = CFLSession(family, clients, client_data, test_data, fl_cfg)
+    sess.run(rounds=5)
+    sess.fairness()                           # last-round accuracy fairness
+
+or, for the synthetic heterogeneous populations the experiments use:
+
+    sess = CFLSession.from_synthetic(cfg, n_workers=8,
+                                     heterogeneity="quality")
+
+``algorithm`` selects CFL (default) or the paper's comparison baselines
+("fedavg", "il") under the identical budget/fleet, so every Table II /
+Fig. 4–5 experiment is the same three-line program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+
+from repro.core.elastic import ElasticFamily, family_for
+from repro.core.fairness import accuracy_fairness
+from repro.fl.baselines import FedAvgServer, independent_learning
+from repro.fl.client import ClientInfo
+from repro.fl.server import CFLConfig, CFLServer
+
+ALGORITHMS = ("cfl", "fedavg", "il")
+
+
+class CFLSession:
+    """Family + fleet + data in; history/fairness out."""
+
+    def __init__(self, cfg, clients: List[ClientInfo],
+                 client_data: List[Dict], test_data: List[Dict],
+                 fl_cfg: Optional[CFLConfig] = None, *,
+                 params=None, algorithm: str = "cfl"):
+        if algorithm not in ALGORITHMS:
+            raise ValueError(f"algorithm must be one of {ALGORITHMS}, "
+                             f"got {algorithm!r}")
+        self.family: ElasticFamily = family_for(cfg)
+        self.fl = fl_cfg if fl_cfg is not None else \
+            CFLConfig(n_workers=len(clients))
+        self.algorithm = algorithm
+        self.clients = clients
+        self.client_data = client_data
+        self.test_data = test_data
+        if params is None:
+            params = self.family.init_params(
+                jax.random.PRNGKey(self.fl.seed))
+        self._init_params = params
+        self._il_history: List[Dict] = []
+        self.il_accs: Optional[List[float]] = None
+        if algorithm == "cfl":
+            self.server = CFLServer(self.family, params, clients,
+                                    client_data, test_data, self.fl)
+        elif algorithm == "fedavg":
+            self.server = FedAvgServer(self.family, params, clients,
+                                       client_data, test_data, self.fl)
+        else:                       # il: no server, no aggregation
+            self.server = None
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_synthetic(cls, cfg, *, kind: Optional[str] = None,
+                       n_workers: int = 8, n_samples: int = 4000,
+                       heterogeneity: str = "quality",
+                       fl_cfg: Optional[CFLConfig] = None,
+                       algorithm: str = "cfl", seed: int = 0,
+                       cohort_shards: int = 1) -> "CFLSession":
+        """Build the paper's synthetic heterogeneous population (devices ×
+        quality × distribution) for any family and wrap it in a session.
+        ``kind`` defaults per family: image classification for the CNN,
+        the Markov LM scenario ("synthlm") for the transformer zoo."""
+        from repro.fl.rounds import build_population
+        if fl_cfg is None:
+            fl_cfg = CFLConfig(n_workers=n_workers, seed=seed,
+                               cohort_shards=cohort_shards)
+        elif cohort_shards != 1:
+            fl_cfg = dataclasses.replace(fl_cfg,
+                                         cohort_shards=cohort_shards)
+        family = family_for(cfg)
+        clients, cdata, tdata = build_population(
+            family, kind=kind, n_workers=n_workers, n_samples=n_samples,
+            heterogeneity=heterogeneity, seed=seed,
+            latency_bound_frac=fl_cfg.latency_bound_frac)
+        # parent init keyed by the population seed (not fl_cfg.seed), as
+        # the pre-session experiment drivers did
+        params = family.init_params(jax.random.PRNGKey(seed))
+        return cls(family, clients, cdata, tdata, fl_cfg, params=params,
+                   algorithm=algorithm)
+
+    # ------------------------------------------------------------------
+    def run(self, rounds: int) -> List[Dict]:
+        """Run ``rounds`` FL rounds (IL: the same local budget with no
+        aggregation, recorded as one history entry). Returns history."""
+        if self.algorithm == "il":
+            if self._il_history:
+                # IL trains each client from the initial parent for the
+                # whole budget in one shot — a second run() would silently
+                # restart from scratch, not continue like cfl/fedavg does
+                raise RuntimeError(
+                    "an IL session is single-shot: run(rounds) consumes "
+                    "the whole local budget; build a new session (or use "
+                    "algorithm='cfl'/'fedavg') to train further")
+            accs = independent_learning(
+                self.family, self._init_params, self.clients,
+                self.client_data, self.test_data, rounds=rounds,
+                fl_cfg=self.fl)
+            self.il_accs = accs
+            self._il_history.append({
+                "round": 0, "accs": accs,
+                "fairness": accuracy_fairness(accs)})
+            return self.history
+        for _ in range(rounds):
+            self.server.run_round()
+        return self.history
+
+    # ------------------------------------------------------------------
+    @property
+    def history(self) -> List[Dict]:
+        return self._il_history if self.server is None \
+            else self.server.history
+
+    @property
+    def params(self):
+        """The aggregated parent params (cfl/fedavg). IL keeps per-client
+        models and aggregates nothing, so there is no parent to return."""
+        if self.server is None:
+            raise RuntimeError(
+                "IL trains per-client models only — there is no "
+                "aggregated parent; use il_accs / history for its results")
+        return self.server.params
+
+    def fairness(self) -> Dict[str, float]:
+        """Last-round accuracy-fairness summary (mean/std/min/Jain)."""
+        if not self.history:
+            raise RuntimeError("no rounds run yet")
+        return self.history[-1]["fairness"]
+
+    def global_accuracy(self, data: Dict) -> float:
+        return self.family.evaluate(self.params, data)
