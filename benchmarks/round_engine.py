@@ -21,8 +21,15 @@ and the full sweep is recorded at the repo root as
 ``BENCH_round_engine.json`` (both families + batched-vs-seq speedups),
 so the perf trajectory survives across PRs.
 
+Rows carry a ``kernel_path`` column ('dense-masked' | 'tile-skipping') so
+BENCH JSONs distinguish the engine's masked-compute paths; the
+tile-skipping leg (CFLConfig.elastic_kernels) runs via ``--single <fam>
+kernels <n>`` — it is interpret-mode Pallas on CPU hosts, so it is not in
+the default sweep.
+
   PYTHONPATH=src python -m benchmarks.round_engine            # full sweep
   PYTHONPATH=src python -m benchmarks.round_engine --single cnn seq 32
+  PYTHONPATH=src python -m benchmarks.round_engine --single cnn kernels 8
 """
 from __future__ import annotations
 
@@ -65,7 +72,11 @@ def _measure_leg_cnn(mode: str, n_workers: int, seed: int = 0):
     'Programs' = compiled entry points: for the batched engine the fused
     train+eval jit and the fused aggregate_apply jit (cache-size deltas);
     for the sequential loop the per-submodel-config train-step and eval
-    caches — 'one compile per distinct submodel config'."""
+    caches — 'one compile per distinct submodel config'.
+
+    mode 'kernels' = the batched engine on the tile-skipping kernel path
+    (CFLConfig.elastic_kernels; interpret-mode Pallas on CPU hosts, so it
+    is not part of the default sweep — run it via --single)."""
     import importlib
 
     import jax
@@ -77,9 +88,10 @@ def _measure_leg_cnn(mode: str, n_workers: int, seed: int = 0):
     from repro.fl.server import CFLServer
     from repro.models import cnn
 
-    batched = mode == "batched"
+    batched = mode in ("batched", "kernels")
     fl = CFLConfig(n_workers=n_workers, local_epochs=1, batch_size=32,
-                   batched_rounds=batched, seed=seed)
+                   batched_rounds=batched, seed=seed,
+                   elastic_kernels=(mode == "kernels"))
     clients, cdata, tdata = build_population(
         ENGINE_CNN, kind="synthmnist", n_workers=n_workers,
         n_samples=n_workers * 60, heterogeneity="both", seed=seed,
@@ -126,7 +138,8 @@ def _measure_leg_cnn(mode: str, n_workers: int, seed: int = 0):
         walls.append(time.perf_counter() - t0)
         compiles.append(n_programs() - c0)
         server.round_idx += 1
-    return walls, compiles, nspecs
+    kp = server.engine.kernel_path if batched else "dense-masked"
+    return walls, compiles, nspecs, kp
 
 
 def _measure_leg_transformer(mode: str, n_workers: int, seed: int = 0):
@@ -144,7 +157,7 @@ def _measure_leg_transformer(mode: str, n_workers: int, seed: int = 0):
 
     cfg = _engine_transformer_cfg()
     fam = family_for(cfg)
-    batched = mode == "batched"
+    batched = mode in ("batched", "kernels")
     datasets = [make_lm_dataset(48, 24, cfg.vocab_size, seed=seed * 31 + k)
                 for k in range(n_workers)]
     tdata = [make_lm_dataset(16, 24, cfg.vocab_size, seed=977 + k)
@@ -152,7 +165,8 @@ def _measure_leg_transformer(mode: str, n_workers: int, seed: int = 0):
     sizes = [float(len(d["y"])) for d in datasets]
     params = T.init_params(jax.random.PRNGKey(seed), cfg)
     if batched:
-        runner = BatchedRoundEngine(cfg, lr=0.05, momentum=0.9)
+        runner = BatchedRoundEngine(cfg, lr=0.05, momentum=0.9,
+                                    elastic_kernels=(mode == "kernels"))
     else:
         runner = SequentialFamilyTrainer(cfg, lr=0.05, momentum=0.9,
                                          cache_size=4 * n_workers)
@@ -184,7 +198,8 @@ def _measure_leg_transformer(mode: str, n_workers: int, seed: int = 0):
             seeds=seeds)
         walls.append(time.perf_counter() - t0)
         compiles.append(n_programs() - c0)
-    return walls, compiles, nspecs
+    kp = runner.kernel_path if batched else "dense-masked"
+    return walls, compiles, nspecs, kp
 
 
 MEASURE = {"cnn": _measure_leg_cnn, "transformer": _measure_leg_transformer}
@@ -206,7 +221,8 @@ def _run_leg_subprocess(family: str, mode: str, n_workers: int):
     for line in out.stdout.splitlines():
         if line.startswith("LEG,"):
             rec = json.loads(line[len("LEG,"):])
-            return rec["walls"], rec["compiles"], rec["nspecs"]
+            return (rec["walls"], rec["compiles"], rec["nspecs"],
+                    rec.get("kernel_path", "dense-masked"))
     raise RuntimeError(f"no LEG line in output:\n{out.stdout}")
 
 
@@ -216,7 +232,7 @@ def run(seed: int = 0) -> List[Row]:
     for family, sweep in SWEEP.items():
         for n_workers in sweep:
             for mode in ("seq", "batched"):
-                walls, compiles, nspecs = _run_leg_subprocess(
+                walls, compiles, nspecs, kernel_path = _run_leg_subprocess(
                     family, mode, n_workers)
                 per_round = float(np.mean(walls))
                 summary[(family, n_workers, mode)] = (per_round, compiles)
@@ -224,6 +240,7 @@ def run(seed: int = 0) -> List[Row]:
                     f"round_engine_{family}_{mode}_{n_workers}c",
                     per_round * 1e6,
                     family=family, mode=mode, n_workers=n_workers,
+                    kernel_path=kernel_path,
                     compiles_per_round=float(np.mean(compiles)),
                     max_round_compiles=float(max(compiles)),
                     distinct_specs=float(max(nspecs))))
@@ -247,12 +264,14 @@ def main():
         if family not in MEASURE:
             ap.error(f"FAMILY must be one of {sorted(MEASURE)}, got "
                      f"{family!r}")
-        if mode not in ("seq", "batched"):
-            ap.error(f"MODE must be 'seq' or 'batched', got {mode!r}")
-        walls, compiles, nspecs = MEASURE[family](mode, n)
+        if mode not in ("seq", "batched", "kernels"):
+            ap.error(f"MODE must be 'seq', 'batched' or 'kernels', got "
+                     f"{mode!r}")
+        walls, compiles, nspecs, kernel_path = MEASURE[family](mode, n)
         print("LEG," + json.dumps({"walls": walls,
                                    "compiles": [float(c) for c in compiles],
-                                   "nspecs": [float(s) for s in nspecs]}))
+                                   "nspecs": [float(s) for s in nspecs],
+                                   "kernel_path": kernel_path}))
         return
 
     rows = run()

@@ -52,6 +52,13 @@ from repro.models import transformer as T
 from repro.models.layers import groupnorm
 
 
+# sentinel: masked_loss/masked_metric callers that don't pass ``kernels``
+# get the family's own table (enable_elastic_kernels); the batched engine
+# always passes its engine-owned table instead, so engines sharing one
+# family instance never fight over the compute path
+_FAMILY_KERNELS = object()
+
+
 # ---------------------------------------------------------------------------
 # mask containers + the spec-table LRU
 # ---------------------------------------------------------------------------
@@ -126,6 +133,30 @@ class ElasticFamily:
         self._spec_cache = SpecLRU(spec_cache)
         self._full_eval_fn = None
         self._full_flops: Optional[float] = None
+        # tile-skipping op table (repro.kernels.dispatch); None = dense
+        # masked XLA paths
+        self._kernels = None
+
+    # -- elastic kernel path -----------------------------------------------
+    def enable_elastic_kernels(self, backend="auto") -> "ElasticFamily":
+        """Set this family's *default* kernel table: masked_loss/
+        masked_metric callers that don't pass ``kernels=`` then run the
+        tile-skipping path (``kernels.dispatch``) — masked submodel
+        compute is *skipped*, not zeroed. ``backend``: 'auto' | 'tpu' |
+        'interpret' | 'xla' (the last restores the dense masked path).
+        The batched engine does NOT use this default — it resolves and
+        passes its own table per call, so engines sharing a family never
+        fight over the path. The per-client prefix scalars are derived
+        from the masks at runtime, so this never adds compiled programs
+        under spec churn."""
+        from repro.kernels.dispatch import kernel_dispatch
+        self._kernels = kernel_dispatch(backend).table(self.name)
+        return self
+
+    @property
+    def kernel_path(self) -> str:
+        """BENCH-row label: which masked-compute path this family runs."""
+        return "tile-skipping" if self._kernels else "dense-masked"
 
     # -- spec algebra ------------------------------------------------------
     def full_spec(self):
@@ -235,11 +266,18 @@ class ElasticFamily:
         return CohortMasks(pmask, fwd)
 
     # -- parent-space masked compute (vmapped by the engine) ---------------
-    def masked_loss(self, params, fwd, x, y, sample_weight):
+    # ``kernels``: an op table from kernels.dispatch (tile-skipping path),
+    # None (dense masked path), or omitted = this family's own table.
+    def masked_loss(self, params, fwd, x, y, sample_weight,
+                    kernels=_FAMILY_KERNELS):
         raise NotImplementedError
 
-    def masked_metric(self, params, fwd, x, y, valid):
+    def masked_metric(self, params, fwd, x, y, valid,
+                      kernels=_FAMILY_KERNELS):
         raise NotImplementedError
+
+    def _kernel_table(self, kernels):
+        return self._kernels if kernels is _FAMILY_KERNELS else kernels
 
     # -- sequential extract → train → pad reference ------------------------
     def extract(self, params, spec) -> Tuple[Any, Any]:
@@ -304,27 +342,47 @@ def _masked_groupnorm(x, A, eps=1e-5):
 
 
 def masked_forward(params, cfg: CNNConfig, x, ch_masks, gn_assign,
-                   depth_masks):
+                   depth_masks, kernels=None):
     """Parent-shape forward equal to the extracted submodel's forward.
 
     ch_masks[s]: (C_s,) 0/1 channel mask; gn_assign[s]: (C_s, G) masked
     one-hot groupnorm assignment; depth_masks[s]: (n_blocks_s,) 0/1.
+
+    kernels: optional op table (repro.kernels.dispatch, 'cnn' family) —
+    convs then run as im2col elastic matmuls that *skip* masked channel
+    tiles (input-channel prefix = contraction prefix, output-channel
+    prefix = output prefix) with runtime prefix scalars derived from the
+    masks, instead of full-channel convs multiplied by 0/1.
     """
+    conv_op = None if kernels is None else kernels.get("conv")
     g = cfg.groupnorm_groups
     x = jax.nn.relu(groupnorm(_conv(params["stem"], x), g))
+    cin_active = None            # stem output: every channel active
     for si, stage in enumerate(params["stages"]):
         m = ch_masks[si].astype(x.dtype)
         A = gn_assign[si]
-        x = _conv(stage["down"], x, stride=2) * m
+        if conv_op is None:
+            c_act = None
+            x = _conv(stage["down"], x, stride=2) * m
+        else:
+            c_act = jnp.sum(ch_masks[si] > 0).astype(jnp.int32)
+            x = conv_op(stage["down"], x, 2, cin_active, c_act)
         x = jax.nn.relu(_masked_groupnorm(x, A))
         for bi, bp in enumerate(stage["blocks"]):
             d = depth_masks[si][bi].astype(x.dtype)
-            h = _conv(bp["conv1"], x) * m
+            if conv_op is None:
+                h = _conv(bp["conv1"], x) * m
+            else:
+                h = conv_op(bp["conv1"], x, 1, c_act, c_act)
             h = jax.nn.relu(_masked_groupnorm(h, A))
-            h = _conv(bp["conv2"], h) * m
+            if conv_op is None:
+                h = _conv(bp["conv2"], h) * m
+            else:
+                h = conv_op(bp["conv2"], h, 1, c_act, c_act)
             h = _masked_groupnorm(h, A)
             # depth skip: x >= 0 post-ReLU, so relu(x + 0) == x exactly
             x = jax.nn.relu(x + d * h)
+        cin_active = c_act
     feat = jnp.mean(x, axis=(1, 2))
     return feat @ params["head"]["w"].astype(x.dtype) + \
         params["head"]["b"].astype(x.dtype)
@@ -425,14 +483,18 @@ class CNNElasticFamily(ElasticFamily):
         return SpecMasks(mask_cnn(cfg, spec),
                          {"ch": ch, "gn": gn, "depth": de})
 
-    def masked_loss(self, params, fwd, x, y, sample_weight):
+    def masked_loss(self, params, fwd, x, y, sample_weight,
+                    kernels=_FAMILY_KERNELS):
         logits = masked_forward(params, self.cfg, x, fwd["ch"], fwd["gn"],
-                                fwd["depth"])
+                                fwd["depth"],
+                                kernels=self._kernel_table(kernels))
         return _weighted_ce(logits, y, sample_weight)
 
-    def masked_metric(self, params, fwd, x, y, valid):
+    def masked_metric(self, params, fwd, x, y, valid,
+                      kernels=_FAMILY_KERNELS):
         logits = masked_forward(params, self.cfg, x, fwd["ch"], fwd["gn"],
-                                fwd["depth"])
+                                fwd["depth"],
+                                kernels=self._kernel_table(kernels))
         return _weighted_acc(logits, y, valid)
 
     def extract(self, params, spec):
@@ -626,14 +688,18 @@ class TransformerElasticFamily(ElasticFamily):
         return jax.tree.map(lambda a: np.asarray(a, np.float32), cov)
 
     # -- parent-space masked compute ---------------------------------------
-    def masked_loss(self, params, fwd, x, y, sample_weight):
+    def masked_loss(self, params, fwd, x, y, sample_weight,
+                    kernels=_FAMILY_KERNELS):
         del y                                   # targets come from tokens
-        logits, _ = T.forward(params, self.cfg, {"tokens": x}, masks=fwd)
+        logits, _ = T.forward(params, self.cfg, {"tokens": x}, masks=fwd,
+                              kernels=self._kernel_table(kernels))
         return _weighted_mean(_lm_per_sample_ce(logits, x), sample_weight)
 
-    def masked_metric(self, params, fwd, x, y, valid):
+    def masked_metric(self, params, fwd, x, y, valid,
+                      kernels=_FAMILY_KERNELS):
         del y
-        logits, _ = T.forward(params, self.cfg, {"tokens": x}, masks=fwd)
+        logits, _ = T.forward(params, self.cfg, {"tokens": x}, masks=fwd,
+                              kernels=self._kernel_table(kernels))
         return _weighted_mean(_lm_per_sample_acc(logits, x), valid)
 
     # -- sequential reference ----------------------------------------------

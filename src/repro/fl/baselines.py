@@ -36,7 +36,8 @@ class FedAvgServer:
         if fl_cfg.batched_rounds:
             self._runner = BatchedRoundEngine(
                 self.family, lr=fl_cfg.lr, momentum=fl_cfg.momentum,
-                cohort_shards=fl_cfg.cohort_shards)
+                cohort_shards=fl_cfg.cohort_shards,
+                elastic_kernels=fl_cfg.elastic_kernels)
         else:
             self._runner = SequentialFamilyTrainer(
                 self.family, lr=fl_cfg.lr, momentum=fl_cfg.momentum)
@@ -84,7 +85,8 @@ def independent_learning(cfg, init_params,
     if fl_cfg.batched_rounds:
         engine = BatchedRoundEngine(
             family, lr=fl_cfg.lr, momentum=fl_cfg.momentum,
-            cohort_shards=fl_cfg.cohort_shards)
+            cohort_shards=fl_cfg.cohort_shards,
+            elastic_kernels=fl_cfg.elastic_kernels)
         specs = [spec] * len(clients)
         thetas = engine.broadcast_params(init_params, len(clients))
         for r in range(rounds):

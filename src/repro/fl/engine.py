@@ -148,11 +148,27 @@ class BatchedRoundEngine:
     ElasticFamily instance (``core.elastic.family_for`` resolves configs).
     ``cohort_shards`` > 1 shards the stacked client axis over that many
     devices (clamped to a divisor of the cohort / available devices).
+
+    ``elastic_kernels`` routes masked compute through the tile-skipping
+    kernel path (``kernels.dispatch``): masked width / expert / head /
+    channel tiles are *skipped*, not zeroed. Truthy values: True ('auto'
+    backend) or a backend name. The per-client prefix scalars are
+    derived inside the jitted program from the mask inputs, so the
+    2-programs/round invariant holds under spec churn. The resolved op
+    table is **engine-owned** (passed to ``masked_loss``/``masked_metric``
+    per call, never stored on the family), so engines sharing one family
+    instance each keep the path their own flag selected — the dense A/B
+    baseline can never silently run the kernel path or vice versa.
     """
 
     def __init__(self, cfg, *, lr: float, momentum: float,
-                 grad_clip: float = 5.0, cohort_shards: int = 1):
+                 grad_clip: float = 5.0, cohort_shards: int = 1,
+                 elastic_kernels=False):
+        from repro.kernels.dispatch import kernel_dispatch
         self.family: ElasticFamily = family_for(cfg)
+        # resolve_backend maps True -> 'auto'; falsy -> 'xla' (= no table)
+        self._elastic_kernels = kernel_dispatch(
+            elastic_kernels or "xla").table(self.family.name)
         self.cfg = self.family.cfg
         self._opt = sgd(lr, momentum=momentum)
         self._grad_clip = grad_clip
@@ -171,6 +187,11 @@ class BatchedRoundEngine:
         self._masks_cache: "OrderedDict[Tuple, CohortMasks]" = OrderedDict()
         self._requested_shards = int(cohort_shards)
         self._cohort_meshes: Dict[int, jax.sharding.Mesh] = {}
+
+    @property
+    def kernel_path(self) -> str:
+        """'tile-skipping' | 'dense-masked' — the BENCH-row label."""
+        return "tile-skipping" if self._elastic_kernels else "dense-masked"
 
     # -- cohort sharding ---------------------------------------------------
     def cohort_sharding(self, n_clients: int):
@@ -195,7 +216,8 @@ class BatchedRoundEngine:
             x, yb = data_x[ix], data_y[ix]
 
             def loss_fn(pp):
-                return self.family.masked_loss(pp, fwd, x, yb, sv)
+                return self.family.masked_loss(
+                    pp, fwd, x, yb, sv, kernels=self._elastic_kernels)
 
             grad = jax.grad(loss_fn)(p)
             grad = jax.tree.map(lambda gg, mm: gg * mm, grad, pmask)
@@ -214,7 +236,8 @@ class BatchedRoundEngine:
         return delta, theta_e
 
     def _client_eval(self, params, fwd, x, y, valid):
-        return self.family.masked_metric(params, fwd, x, y, valid)
+        return self.family.masked_metric(params, fwd, x, y, valid,
+                                         kernels=self._elastic_kernels)
 
     def _client_train_eval(self, theta0, pmask, fwd, data_x, data_y, idx,
                            svalid, stvalid, ex, ey, evalid):

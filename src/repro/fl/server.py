@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import random
-from typing import Dict, List
+from typing import Dict, List, Union
 
 from repro.core.elastic import ElasticFamily, family_for
 from repro.core.fairness import accuracy_fairness, round_time_fairness
@@ -47,6 +47,11 @@ class CFLConfig:
     # shard the engine's stacked client axis over this many devices
     # (sharding.cohort; clamped to a divisor of the cohort / device count)
     cohort_shards: int = 1
+    # route the batched engine's masked compute through tile-skipping
+    # kernels (kernels.dispatch): False = dense masked XLA; True = 'auto'
+    # backend (Pallas-TPU on TPU hosts, Pallas-interpret elsewhere); or an
+    # explicit backend name ('tpu' | 'interpret' | 'xla')
+    elastic_kernels: Union[bool, str] = False
     seed: int = 0
 
 
@@ -73,7 +78,8 @@ class CFLServer:
         if fl_cfg.batched_rounds:
             self.engine = BatchedRoundEngine(
                 self.family, lr=fl_cfg.lr, momentum=fl_cfg.momentum,
-                cohort_shards=fl_cfg.cohort_shards)
+                cohort_shards=fl_cfg.cohort_shards,
+                elastic_kernels=fl_cfg.elastic_kernels)
             self._seq = None
         else:
             self.engine = None

@@ -1,6 +1,10 @@
-from repro.kernels.elastic_matmul import elastic_matmul
+from repro.kernels.elastic_matmul import elastic_dense, elastic_matmul
+from repro.kernels.elastic_conv import elastic_conv2d
+from repro.kernels.grouped_matmul import grouped_elastic_matmul
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.dispatch import (KernelDispatch, kernel_dispatch,
+                                    resolve_backend)
 from repro.kernels.ops import (attention_op, ssd_op, elastic_mlp_matmul,
                                model_kernels)
 from repro.kernels import ref

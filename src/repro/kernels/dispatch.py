@@ -1,0 +1,201 @@
+"""Backend-aware kernel dispatch — one op table per elastic family.
+
+This replaces the ad-hoc ``model_kernels()`` dict: callers ask for a
+``KernelDispatch`` and get the per-op callables the model forwards
+consume (``models.transformer.forward(kernels=...)``,
+``core.elastic.masked_forward(kernels=...)``), with the backend resolved
+once.
+
+Backend-selection rules
+-----------------------
+* ``"auto"``  — ``"tpu"`` when jax's default backend is TPU, else
+  ``"interpret"`` (Pallas interpreter: functional validation on CPU).
+* ``"tpu"``   — compiled Pallas TPU kernels (``interpret=False``).
+* ``"interpret"`` — Pallas interpreter (CPU-safe, numerics == TPU path).
+* ``"xla"``   — no kernel table at all (``table()`` returns ``None``):
+  callers fall back to the dense masked XLA reference paths. This is the
+  A/B baseline, not a third kernel implementation.
+
+Per-op ``k_active`` contracts
+-----------------------------
+Every op derives its runtime prefix scalars from the 0/1 prefix masks the
+spec table already ships (``jnp.sum(mask > 0)``), so the batched engine's
+vmapped cohort carries **per-client runtime scalars** — spec churn never
+recompiles and the 2-programs/round invariant holds.
+
+=========  ==================================================================
+op         contract
+=========  ==================================================================
+``mlp``    ``op(params, x, act, width_mask)``. Up/gate projections skip
+           *output* tiles past ``k = sum(width_mask)``; the down
+           projection ``(…, d_ff) @ (d_ff, d_model)`` skips *contraction*
+           tiles past the same ``k``. Activation fused into the gate/up
+           kernel; differentiable (tile-skipping VJP).
+``moe``    ``op(eb, w, g_active)`` — grouped ``(E, cap, d) @ (E, d, f)``
+           matmul that skips routed-expert blocks ``>= g_active``
+           (= sum of the expert mask). Injected into
+           ``models.moe._dispatch_compute_combine``; differentiable.
+``ssd``    ``op(xh, dt, A, Bm, Cm, chunk, head_mask=None)`` — SSD chunk
+           scan skipping head blocks past ``sum(head_mask)``. Forward is
+           the Pallas kernel; backward runs the dense masked XLA
+           reference (``models.ssm.ssd_chunked``) under ``jax.vjp`` — the
+           scan transpose is not worth a hand-written kernel yet (the
+           op sits under ``jax.checkpoint`` anyway, so the reference
+           recompute is already the backward's cost model).
+``conv``   ``op(params, x, stride, cin_active, cout_active)`` — im2col
+           channel-prefix conv (``kernels.elastic_conv``): input-channel
+           prefix becomes a contraction prefix, output-channel prefix an
+           output prefix, bias fused; differentiable end to end.
+``attention`` (model_kernels back-compat only) — flash attention; not
+           elastic and forward-only, so it is *not* part of the family
+           tables the training engine uses.
+=========  ==================================================================
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.elastic_conv import elastic_conv2d
+from repro.kernels.elastic_matmul import elastic_dense
+from repro.kernels.grouped_matmul import grouped_elastic_matmul
+from repro.kernels.ssd_scan import ssd_scan
+
+BACKENDS = ("xla", "interpret", "tpu")
+
+
+def resolve_backend(backend: Optional[str] = "auto") -> str:
+    """'auto' -> 'tpu' on TPU hosts, 'interpret' elsewhere."""
+    if backend in (None, "auto", True):
+        return "tpu" if jax.default_backend() == "tpu" else "interpret"
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got "
+                         f"{backend!r}")
+    return backend
+
+
+def _active_len(mask) -> jax.Array:
+    """Runtime prefix length of a 0/1 prefix mask (traced int32 — the
+    no-recompile contract: spec churn changes the value, not the jaxpr)."""
+    return jnp.sum(mask > 0).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# per-op builders
+# ---------------------------------------------------------------------------
+def _make_mlp_op(interpret: bool):
+    def op(params, x, act, width_mask):
+        ka = None if width_mask is None else _active_len(width_mask)
+        wi = params["wi"].astype(x.dtype)
+        wo = params["wo"].astype(x.dtype)
+        if "wg" in params:
+            h = elastic_dense(x, wi, n_active=ka, interpret=interpret)
+            h = elastic_dense(x, params["wg"].astype(x.dtype), n_active=ka,
+                              act=act, interpret=interpret) * h
+        else:
+            h = elastic_dense(x, wi, n_active=ka, act=act,
+                              interpret=interpret)
+        return elastic_dense(h, wo, k_active=ka, interpret=interpret)
+    return op
+
+
+def _make_moe_op(interpret: bool):
+    def op(eb, w, g_active):
+        return grouped_elastic_matmul(eb, w.astype(eb.dtype), g_active,
+                                      interpret=interpret)
+    return op
+
+
+@functools.lru_cache(maxsize=None)
+def _make_ssd_prefix(chunk: int, interpret: bool, has_mask: bool):
+    """custom-vjp SSD op: Pallas head-prefix forward, dense masked XLA
+    reference backward (see module docstring)."""
+    from repro.models.ssm import ssd_chunked
+
+    if has_mask:
+        @jax.custom_vjp
+        def f(xh, dt, A, Bm, Cm, head_mask):
+            return ssd_scan(xh, dt, A, Bm, Cm, chunk,
+                            h_active=_active_len(head_mask),
+                            interpret=interpret)
+
+        def fwd(xh, dt, A, Bm, Cm, head_mask):
+            return f(xh, dt, A, Bm, Cm, head_mask), \
+                (xh, dt, A, Bm, Cm, head_mask)
+
+        def bwd(res, dy):
+            xh, dt, A, Bm, Cm, head_mask = res
+
+            def g(xh, dt, A, Bm, Cm):
+                y, _ = ssd_chunked(xh, dt, A, Bm, Cm, chunk)
+                return y * head_mask[None, None, :, None].astype(y.dtype)
+
+            _, vjp = jax.vjp(g, xh, dt, A, Bm, Cm)
+            return vjp(dy) + (jnp.zeros_like(head_mask),)
+    else:
+        @jax.custom_vjp
+        def f(xh, dt, A, Bm, Cm):
+            return ssd_scan(xh, dt, A, Bm, Cm, chunk, interpret=interpret)
+
+        def fwd(xh, dt, A, Bm, Cm):
+            return f(xh, dt, A, Bm, Cm), (xh, dt, A, Bm, Cm)
+
+        def bwd(res, dy):
+            xh, dt, A, Bm, Cm = res
+            _, vjp = jax.vjp(
+                lambda *a: ssd_chunked(*a, chunk)[0], xh, dt, A, Bm, Cm)
+            return vjp(dy)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def _make_ssd_op(interpret: bool):
+    def op(xh, dt, A, Bm, Cm, chunk, head_mask=None):
+        f = _make_ssd_prefix(int(chunk), interpret, head_mask is not None)
+        dt = dt.astype(jnp.float32)
+        if head_mask is None:
+            return f(xh, dt, A, Bm, Cm), None
+        return f(xh, dt, A, Bm, Cm, head_mask), None
+    return op
+
+
+def _make_conv_op(interpret: bool):
+    def op(params, x, stride, cin_active, cout_active):
+        return elastic_conv2d(x, params["w"].astype(x.dtype), params["b"],
+                              stride=stride, cin_active=cin_active,
+                              cout_active=cout_active, interpret=interpret)
+    return op
+
+
+# ---------------------------------------------------------------------------
+# the dispatch object
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class KernelDispatch:
+    """Resolved backend + per-family op tables. ``table(family)`` returns
+    the ``kernels`` dict a family's masked forward consumes, or ``None``
+    for the 'xla' backend (dense masked reference paths)."""
+
+    backend: str
+
+    @property
+    def interpret(self) -> bool:
+        return self.backend != "tpu"
+
+    def table(self, family: str = "transformer") -> Optional[Dict]:
+        if self.backend == "xla":
+            return None
+        if family == "cnn":
+            return {"conv": _make_conv_op(self.interpret)}
+        return {"mlp": _make_mlp_op(self.interpret),
+                "moe": _make_moe_op(self.interpret),
+                "ssd": _make_ssd_op(self.interpret)}
+
+
+def kernel_dispatch(backend: Optional[str] = "auto") -> KernelDispatch:
+    return KernelDispatch(resolve_backend(backend))

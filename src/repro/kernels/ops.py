@@ -1,19 +1,19 @@
-"""Jit'd kernel wrappers with model-facing signatures.
+"""Back-compat kernel wrappers with model-facing signatures.
 
-``model_kernels(interpret=...)`` returns the `kernels` dict consumed by
-repro.models.transformer.forward — plug-in replacements for the XLA
-reference paths. On this CPU container kernels run in interpret mode
-(functional validation); on TPU set interpret=False.
+Superseded by ``repro.kernels.dispatch`` (backend-aware op tables); kept
+as thin aliases so PR-1/2 call sites keep working. ``model_kernels``
+now registers the elastic MLP/MoE ops alongside attention + ssd — the
+width kernel was previously exported but unreachable from
+``models.transformer.forward``.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.kernels.elastic_matmul import elastic_matmul
+from repro.kernels.dispatch import kernel_dispatch
+from repro.kernels.elastic_matmul import elastic_dense, elastic_matmul
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssd_scan import ssd_scan
 
@@ -26,24 +26,28 @@ def attention_op(q, k, v, *, causal=True, window=None, cap=None,
                            bq=bq, bk=bk, interpret=interpret)
 
 
-def ssd_op(xh, dt, A, Bm, Cm, chunk, *, interpret=True):
+def ssd_op(xh, dt, A, Bm, Cm, chunk, *, head_mask=None, interpret=True):
     """Contract matches models.ssm.ssd_chunked (returns (y, None) — the
-    final state is only used by decode, which has its own path)."""
+    final state is only used by decode, which has its own path). Forward-
+    only alias; the differentiable head-prefix op lives in dispatch."""
+    ha = None if head_mask is None else \
+        jnp.sum(head_mask > 0).astype(jnp.int32)
     y = ssd_scan(xh, dt.astype(jnp.float32), A, Bm, Cm, chunk=chunk,
-                 interpret=interpret)
+                 h_active=ha, interpret=interpret)
     return y, None
 
 
 def elastic_mlp_matmul(x, w, k_active, *, interpret=True):
-    """(…, K) @ (K, N) with active output prefix k_active (CFL width)."""
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1])
-    y = elastic_matmul(x2, w, k_active, interpret=interpret)
-    return y.reshape(*lead, w.shape[-1])
+    """(…, K) @ (K, N) with active output prefix k_active (CFL width).
+    Back-compat alias over the differentiable ``elastic_dense``."""
+    return elastic_dense(x, w, n_active=k_active, interpret=interpret)
 
 
 def model_kernels(interpret: bool = True):
-    return {
-        "attention": functools.partial(attention_op, interpret=interpret),
-        "ssd": functools.partial(ssd_op, interpret=interpret),
-    }
+    """Back-compat model-facing dict: the dispatch table (mlp / moe / ssd
+    elastic ops) plus flash attention (not elastic, forward-only)."""
+    table = kernel_dispatch("interpret" if interpret else "tpu").table(
+        "transformer")
+    table["attention"] = functools.partial(attention_op,
+                                           interpret=interpret)
+    return table

@@ -15,6 +15,58 @@ def elastic_matmul_ref(x, w, k_active: int):
     return y * mask.astype(y.dtype)[None, :]
 
 
+from repro.models.layers import ACTIVATIONS as _ACTS_REF  # noqa: E402
+
+
+def elastic_dense_ref(x, w, bias=None, *, k_active=None, n_active=None,
+                      m_active=None, act=None):
+    """Oracle for kernels.elastic_matmul.elastic_dense: act((x ⊙ [k <
+    k_active]) @ w + bias) masked to the [m, n] active prefixes."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    M, K = x2.shape
+    N = w.shape[-1]
+    if k_active is not None:
+        x2 = x2 * (jnp.arange(K) < k_active).astype(x2.dtype)[None, :]
+    y = x2 @ w.astype(x2.dtype)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    if act is not None:
+        y = _ACTS_REF[act](y)
+    if n_active is not None:
+        y = y * (jnp.arange(N) < n_active).astype(y.dtype)[None, :]
+    if m_active is not None:
+        y = y * (jnp.arange(M) < m_active).astype(y.dtype)[:, None]
+    return y.reshape(*lead, N)
+
+
+def grouped_elastic_matmul_ref(xs, ws, g_active=None):
+    """Oracle for kernels.grouped_matmul: per-group matmul with groups
+    >= g_active exactly zero."""
+    y = jnp.einsum("gmk,gkn->gmn", xs, ws.astype(xs.dtype))
+    if g_active is not None:
+        gmask = (jnp.arange(xs.shape[0]) < g_active).astype(y.dtype)
+        y = y * gmask[:, None, None]
+    return y
+
+
+def elastic_conv2d_ref(x, w, b=None, *, stride=1, cin_active=None,
+                       cout_active=None):
+    """Oracle for kernels.elastic_conv: (conv(x ⊙ cin_mask, w) + b) ⊙
+    cout_mask, SAME padding, NHWC/HWIO."""
+    Cin, Cout = w.shape[2], w.shape[3]
+    if cin_active is not None:
+        x = x * (jnp.arange(Cin) < cin_active).astype(x.dtype)
+    y = jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    if cout_active is not None:
+        y = y * (jnp.arange(Cout) < cout_active).astype(y.dtype)
+    return y
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True,
                         window: Optional[int] = None,
                         cap: Optional[float] = None,

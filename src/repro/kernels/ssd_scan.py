@@ -1,4 +1,4 @@
-"""Mamba2 SSD chunk scan (Pallas TPU).
+"""Mamba2 SSD chunk scan (Pallas TPU), with a head-prefix skip.
 
 One grid cell = one (batch, head) × one chunk; the chunk axis is the
 innermost *sequential* grid dimension and the SSM state h (P×N, fp32)
@@ -6,6 +6,14 @@ persists in VMEM scratch across chunks — the TPU-native formulation of
 SSD: intra-chunk compute is dense (Q×Q decay-masked score matmul on the
 MXU), inter-chunk is a rank-preserving state pass, no HBM round-trip for
 the state.
+
+CFL elasticity: a submodel keeps a *prefix* of SSD heads
+(``core.submodel.extract_transformer``). ``h_active`` is a runtime int32
+scalar-prefetch operand — grid cells whose head index is past the prefix
+issue no compute and write zeros, and their BlockSpec index maps clamp to
+the last active head so no DMA is spent on the inactive suffix. Masked
+compute is therefore *skipped*, not zeroed, and spec churn never
+recompiles (the scalar is traced).
 
 Block shapes: x (Q,P), B/C (Q,N), dt (Q,) with Q=chunk (≤256), P=head_dim
 (64..128), N=d_state (64..128) — everything fits VMEM with room for
@@ -25,49 +33,61 @@ _CompilerParams = getattr(pltpu, "CompilerParams",
                           getattr(pltpu, "TPUCompilerParams", None))
 
 
-def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *, q):
-    ci = pl.program_id(1)
+def _kernel(s_ref, x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
+            q, n_heads):
+    bh, ci = pl.program_id(0), pl.program_id(1)
+    head = jax.lax.rem(bh, n_heads)
+    ha = s_ref[0]
 
-    @pl.when(ci == 0)
-    def _init():
-        h_ref[...] = jnp.zeros_like(h_ref)
+    @pl.when(head >= ha)
+    def _skip():
+        y_ref[...] = jnp.zeros_like(y_ref)
 
-    x = x_ref[0, :, 0, :].astype(jnp.float32)       # (Q,P)
-    dt = dt_ref[0, :, 0].astype(jnp.float32)        # (Q,)
-    A = a_ref[0]                                    # scalar
-    Bm = b_ref[0, :, 0, :].astype(jnp.float32)      # (Q,N)
-    Cm = c_ref[0, :, 0, :].astype(jnp.float32)      # (Q,N)
+    @pl.when(head < ha)
+    def _compute():
+        @pl.when(ci == 0)
+        def _init():
+            h_ref[...] = jnp.zeros_like(h_ref)
 
-    dA = dt * A                                     # (Q,) negative
-    cum = jnp.cumsum(dA)
-    diff = cum[:, None] - cum[None, :]
-    tri = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
-        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
-    M = jnp.where(tri, jnp.exp(diff), 0.0)
-    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
-                             preferred_element_type=jnp.float32)
-    xdt = x * dt[:, None]
-    y_intra = jax.lax.dot_general(CB * M, xdt, (((1,), (0,)), ((), ())),
+        x = x_ref[0, :, 0, :].astype(jnp.float32)       # (Q,P)
+        dt = dt_ref[0, :, 0].astype(jnp.float32)        # (Q,)
+        A = a_ref[0]                                    # scalar
+        Bm = b_ref[0, :, 0, :].astype(jnp.float32)      # (Q,N)
+        Cm = c_ref[0, :, 0, :].astype(jnp.float32)      # (Q,N)
+
+        dA = dt * A                                     # (Q,) negative
+        cum = jnp.cumsum(dA)
+        diff = cum[:, None] - cum[None, :]
+        tri = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+            jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+        M = jnp.where(tri, jnp.exp(diff), 0.0)
+        CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        xdt = x * dt[:, None]
+        y_intra = jax.lax.dot_general(CB * M, xdt, (((1,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+        h = h_ref[...]                                   # (P,N)
+        y_inter = jnp.exp(cum)[:, None] * jax.lax.dot_general(
+            Cm, h, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+        decay_end = jnp.exp(cum[-1] - cum)               # (Q,)
+        S_c = jax.lax.dot_general(xdt * decay_end[:, None], Bm,
+                                  (((0,), (0,)), ((), ())),
                                   preferred_element_type=jnp.float32)
-    h = h_ref[...]                                   # (P,N)
-    y_inter = jnp.exp(cum)[:, None] * jax.lax.dot_general(
-        Cm, h, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
-
-    decay_end = jnp.exp(cum[-1] - cum)               # (Q,)
-    S_c = jax.lax.dot_general(xdt * decay_end[:, None], Bm,
-                              (((0,), (0,)), ((), ())),
-                              preferred_element_type=jnp.float32)  # (P,N)
-    h_ref[...] = h * jnp.exp(cum[-1]) + S_c
+        h_ref[...] = h * jnp.exp(cum[-1]) + S_c
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd_scan(xh, dt, A, Bm, Cm, chunk: int = 128, *, interpret: bool = True):
+def ssd_scan(xh, dt, A, Bm, Cm, chunk: int = 128, *, h_active=None,
+             interpret: bool = True):
     """xh: (B,S,H,P)  dt: (B,S,H)  A: (H,)  Bm/Cm: (B,S,G,N).
 
-    Returns y (B,S,H,P). (Final state stays in scratch; the training path
-    doesn't need it — decode uses ssm.mamba_decode.)
+    h_active: runtime int32 head prefix (None = all heads); heads past it
+    are skipped (zero output, no matmul, no DMA). Returns y (B,S,H,P).
+    (Final state stays in scratch; the training path doesn't need it —
+    decode uses ssm.mamba_decode.)
     """
     B, S, H, P = xh.shape
     G, N = Bm.shape[2], Bm.shape[3]
@@ -78,26 +98,38 @@ def ssd_scan(xh, dt, A, Bm, Cm, chunk: int = 128, *, interpret: bool = True):
         Bm = jnp.repeat(Bm, rep, axis=2)
         Cm = jnp.repeat(Cm, rep, axis=2)
     grid = (B * H, nc)
+    ha = jnp.asarray(H if h_active is None else h_active,
+                     jnp.int32).reshape(1)
 
-    return pl.pallas_call(
-        functools.partial(_kernel, q=chunk),
+    def hcl(bh, s):
+        # clamp the head index to the last active head: skipped cells
+        # re-request a resident block (no DMA)
+        return jnp.minimum(jax.lax.rem(bh, H),
+                           jnp.maximum(s[0] - 1, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, chunk, 1, P),
-                         lambda bh, ci: (bh // H, ci, bh % H, 0)),
+                         lambda bh, ci, s: (bh // H, ci, hcl(bh, s), 0)),
             pl.BlockSpec((1, chunk, 1),
-                         lambda bh, ci: (bh // H, ci, bh % H)),
-            pl.BlockSpec((1,), lambda bh, ci: (bh % H,)),
+                         lambda bh, ci, s: (bh // H, ci, hcl(bh, s))),
+            pl.BlockSpec((1,), lambda bh, ci, s: (hcl(bh, s),)),
             pl.BlockSpec((1, chunk, 1, N),
-                         lambda bh, ci: (bh // H, ci, bh % H, 0)),
+                         lambda bh, ci, s: (bh // H, ci, hcl(bh, s), 0)),
             pl.BlockSpec((1, chunk, 1, N),
-                         lambda bh, ci: (bh // H, ci, bh % H, 0)),
+                         lambda bh, ci, s: (bh // H, ci, hcl(bh, s), 0)),
         ],
         out_specs=pl.BlockSpec((1, chunk, 1, P),
-                               lambda bh, ci: (bh // H, ci, bh % H, 0)),
-        out_shape=jax.ShapeDtypeStruct(xh.shape, xh.dtype),
+                               lambda bh, ci, s: (bh // H, ci, bh % H, 0)),
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, q=chunk, n_heads=H),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(xh.shape, xh.dtype),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(xh, dt, A, Bm, Cm)
+    )(ha, xh, dt, A, Bm, Cm)

@@ -98,12 +98,21 @@ def groupnorm(x, groups, eps=1e-5):
 # ---------------------------------------------------------------------------
 # activations / caps
 # ---------------------------------------------------------------------------
+# single source of truth for activation semantics — the tile-skipping
+# kernels (repro.kernels) fuse these at the tile write and their oracles
+# (kernels.ref) must match bit-for-bit, so all three import this table
+ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
 def act_fn(name: str):
-    if name == "silu":
-        return jax.nn.silu
-    if name == "gelu":
-        return lambda x: jax.nn.gelu(x, approximate=True)
-    raise ValueError(name)
+    try:
+        return ACTIVATIONS[name]
+    except KeyError:
+        raise ValueError(name) from None
 
 
 def softcap(x, cap: Optional[float]):
@@ -143,8 +152,16 @@ def mlp_init(key, d_model, d_ff, gated=True):
     return p
 
 
-def mlp(params, x, act="silu", *, width_mask=None):
-    """width_mask: optional (d_ff,) 0/1 mask — CFL elastic width."""
+def mlp(params, x, act="silu", *, width_mask=None, kernel=None):
+    """width_mask: optional (d_ff,) 0/1 mask — CFL elastic width.
+
+    kernel: optional elastic-matmul op (repro.kernels.dispatch 'mlp'
+    contract) — masked width tiles are then *skipped* (up/gate skip
+    output tiles, the down projection skips contraction tiles) instead of
+    multiplied by zero.
+    """
+    if kernel is not None:
+        return kernel(params, x, act, width_mask)
     a = act_fn(act)
     h = x @ params["wi"].astype(x.dtype)
     if "wg" in params:

@@ -50,13 +50,18 @@ def moe_init(key, d_model, moe_cfg, gated=True):
 
 
 def _dispatch_compute_combine(xt, gate_vals, idx, wi, wg, wo, *, E, k, cap,
-                              act, expert_mask, e_offset=0):
+                              act, expert_mask, e_offset=0, kernel=None):
     """Sort-based dispatch over (a slice of) experts — fully local math.
 
     xt: (T,d); idx/gate_vals: (T,k); wi/wg/wo: (E_loc,...) expert weights;
     e_offset: global id of this shard's first expert (shard_map path).
     Returns partial output (T,d): tokens not routed to local experts
     contribute zero (psum over 'model' reconstructs).
+
+    kernel: optional grouped-matmul op (repro.kernels.dispatch 'moe'
+    contract) — expert blocks past the active prefix are then *skipped*
+    (the router never dispatches to them; see moe_forward), not merely
+    zeroed by ``expert_mask``.
     """
     T, d = xt.shape
     E_loc = wi.shape[0]
@@ -85,12 +90,22 @@ def _dispatch_compute_combine(xt, gate_vals, idx, wi, wg, wo, *, E, k, cap,
     xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
     eb = xt_pad[jnp.minimum(slot_src, T)].reshape(E_loc, cap, d)
 
-    h = jnp.einsum("ecd,edf->ecf", eb, wi.astype(xt.dtype))
-    if wg is not None:
-        h = a(jnp.einsum("ecd,edf->ecf", eb, wg.astype(xt.dtype))) * h
+    if kernel is not None:
+        g_active = None if expert_mask is None else \
+            jnp.sum(expert_mask > 0).astype(jnp.int32)
+        h = kernel(eb, wi, g_active)
+        if wg is not None:
+            h = a(kernel(eb, wg, g_active)) * h
+        else:
+            h = a(h)
+        y = kernel(h, wo, g_active)
     else:
-        h = a(h)
-    y = jnp.einsum("ecf,efd->ecd", h, wo.astype(xt.dtype))
+        h = jnp.einsum("ecd,edf->ecf", eb, wi.astype(xt.dtype))
+        if wg is not None:
+            h = a(jnp.einsum("ecd,edf->ecf", eb, wg.astype(xt.dtype))) * h
+        else:
+            h = a(h)
+        y = jnp.einsum("ecf,efd->ecd", h, wo.astype(xt.dtype))
     if expert_mask is not None:
         y = y * expert_mask[:, None, None].astype(y.dtype)
 
@@ -100,8 +115,13 @@ def _dispatch_compute_combine(xt, gate_vals, idx, wi, wg, wo, *, E, k, cap,
 
 
 def moe_forward(p, x, moe_cfg, *, act="silu",
-                expert_mask: Optional[jax.Array] = None):
+                expert_mask: Optional[jax.Array] = None, kernel=None):
     """x: (B, S, d). Returns (y, aux) with aux = {aux_loss, z_loss}.
+
+    kernel: optional grouped elastic matmul (tile-skipping expert-prefix
+    compute); used on the single-process path only — the shard_map branch
+    keeps its einsums (expert compute there is already sliced to the
+    local expert shard).
 
     Expert compute runs under shard_map when a mesh with a 'model' axis is
     ambient: activations are replicated over 'model' in the TP layout, so
@@ -206,7 +226,7 @@ def moe_forward(p, x, moe_cfg, *, act="silu",
         cap = max(8, -(-cap // 8) * 8)
         out = _dispatch_compute_combine(
             xt, gate_vals, idx, p["wi"], wg, p["wo"], E=E, k=k, cap=cap,
-            act=act, expert_mask=expert_mask)
+            act=act, expert_mask=expert_mask, kernel=kernel)
 
     # --- shared (always-on) experts ----------------------------------------
     if "shared" in p:

@@ -150,8 +150,14 @@ def mamba_forward(p, x, ssm, *, norm_eps=1e-6, head_mask=None, kernel=None):
     Cm = Cm.reshape(B, S, ng, N)
     dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
     A = -jnp.exp(p["A_log"])
-    ssd = kernel if kernel is not None else ssd_chunked
-    y, _ = ssd(xh, dtv, A, Bm, Cm, min(ssm.chunk, S))
+    if kernel is not None:
+        # prefix-aware kernels (repro.kernels.dispatch 'ssd' contract)
+        # skip masked head blocks instead of computing-then-zeroing them;
+        # the head_mask multiply below stays (it also gates the D term)
+        y, _ = kernel(xh, dtv, A, Bm, Cm, min(ssm.chunk, S),
+                      head_mask=head_mask)
+    else:
+        y, _ = ssd_chunked(xh, dtv, A, Bm, Cm, min(ssm.chunk, S))
     y = y.astype(x.dtype) + xh.astype(x.dtype) * \
         p["D"].astype(x.dtype)[None, None, :, None]
     if head_mask is not None:

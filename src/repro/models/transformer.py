@@ -150,14 +150,17 @@ def _apply_attn_block(bp, x, positions, cfg: ModelConfig, window, use_moe,
     aux = jnp.zeros((), jnp.float32)
     if use_moe:
         expert_mask = None if masks is None else masks.get("experts")
+        moe_kern = None if kernels is None else kernels.get("moe")
         m, moe_aux = _ckpt(lambda p_, h_: moe_lib.moe_forward(
-            p_, h_, cfg.moe, act=cfg.act, expert_mask=expert_mask))(
-                bp["moe"], h)
+            p_, h_, cfg.moe, act=cfg.act, expert_mask=expert_mask,
+            kernel=moe_kern))(bp["moe"], h)
         aux = moe_aux["aux_loss"] + moe_aux["z_loss"]
     else:
         width_mask = None if masks is None else masks.get("ff")
+        mlp_kern = None if kernels is None else kernels.get("mlp")
         m = _ckpt(lambda p_, h_: mlp(p_, h_, cfg.act,
-                                     width_mask=width_mask))(bp["mlp"], h)
+                                     width_mask=width_mask,
+                                     kernel=mlp_kern))(bp["mlp"], h)
     if cfg.post_norms:
         m = _norm(cfg, bp["post_ln2"], m)
     if gate is not None:

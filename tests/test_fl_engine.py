@@ -191,3 +191,114 @@ def test_latency_bound_frac_controls_bounds_and_submodels():
     srv_tight = run_cfl(CFG, kind="synthmnist", n_workers=4, n_samples=400,
                         heterogeneity="none", rounds=0, fl_cfg=fl_tight)
     assert spec_flops(srv_tight) < spec_flops(srv_loose)
+
+
+# ---------------------------------------------------------------------------
+# tile-skipping kernel path (CFLConfig.elastic_kernels): A/B vs dense masked
+# ---------------------------------------------------------------------------
+KCFG = CNNConfig(name="engine-ktest", in_channels=1, image_size=16,
+                 stem_channels=8, stages=((16, 2), (32, 2)),
+                 groupnorm_groups=4, elastic_widths=(0.5, 1.0))
+
+
+def _ab_round(cfg, params, specs, datasets, tdata, sizes, seeds,
+              batch_size=8):
+    """One engine round dense-masked vs tile-skipping on identical seeds;
+    returns (max param diff, max acc diff)."""
+    outs = {}
+    for mode in (False, "interpret"):
+        eng = BatchedRoundEngine(cfg, lr=0.05, momentum=0.9,
+                                 elastic_kernels=mode)
+        assert eng.kernel_path == (
+            "tile-skipping" if mode else "dense-masked")
+        outs[mode] = eng.run_fl_round(
+            params, specs, datasets, tdata, sizes, batch_size=batch_size,
+            epochs=1, seeds=seeds)
+    (pd, ad, _), (pk, ak, _) = outs[False], outs["interpret"]
+    err = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), pd, pk)
+    return max(jax.tree.leaves(err)), max(
+        abs(a - b) for a, b in zip(ad, ak))
+
+
+def test_elastic_kernels_round_matches_dense_cnn():
+    """One-round smoke, paper CNN: the tile-skipping path (im2col channel-
+    prefix convs) trains identically to the dense masked engine."""
+    params = cnn.init_params(jax.random.PRNGKey(0), KCFG)
+    data = make_dataset("synthmnist", 64, seed=3)
+    datasets = [{k: v[:32] for k, v in data.items()},
+                {k: v[32:] for k, v in data.items()}]
+    specs = [SubmodelSpec((1, 2), (0.5, 1.0)), SubmodelSpec((2, 1),
+                                                            (1.0, 0.5))]
+    perr, aerr = _ab_round(KCFG, params, specs, datasets, datasets,
+                           [32.0, 32.0], [5, 6])
+    assert perr < 1e-5, perr
+    assert aerr < 1e-5, aerr
+
+
+def _zoo_ab(arch, n_layers=2):
+    from repro.configs import ARCHS, reduced
+    from repro.core.elastic import family_for
+    from repro.data import make_lm_dataset
+    from repro.models import transformer as T
+    import random as _random
+    cfg = reduced(ARCHS[arch], n_layers=n_layers, d_model=64)
+    fam = family_for(cfg)
+    datasets = [make_lm_dataset(16, 16, cfg.vocab_size, seed=31 + k)
+                for k in range(2)]
+    tdata = [make_lm_dataset(8, 16, cfg.vocab_size, seed=977 + k)
+             for k in range(2)]
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    specs = [fam.random_spec(_random.Random(k + 1)) for k in range(2)]
+    return _ab_round(cfg, params, specs, datasets, tdata, [16.0, 16.0],
+                     [7, 8])
+
+
+def test_elastic_kernels_round_matches_dense_transformer():
+    """One-round smoke, dense transformer zoo parent (width-prefix MLP
+    kernels: output-prefix up/gate + contraction-prefix down)."""
+    perr, aerr = _zoo_ab("granite-3-8b")
+    assert perr < 1e-5, perr
+    assert aerr < 1e-5, aerr
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["granite-moe-1b-a400m", "mamba2-2.7b",
+                                  "zamba2-1.2b"])
+def test_elastic_kernels_round_matches_dense_zoo(arch):
+    """One-round smokes for the moe / ssm / hybrid blocks (grouped
+    expert-prefix matmul, head-prefix SSD scan, shared-block exemption)."""
+    perr, aerr = _zoo_ab(arch)
+    assert perr < 1e-5, (arch, perr)
+    assert aerr < 1e-5, (arch, aerr)
+
+
+def test_elastic_kernels_keep_two_programs_under_spec_churn():
+    """k_active stays a *runtime* scalar: per-round spec churn with the
+    kernel path on must not add compiled programs (the engine's
+    2-programs/round invariant — fused train+eval stays at one entry,
+    fused aggregate+apply at one)."""
+    import importlib
+    agg_mod = importlib.import_module("repro.core.aggregate")
+
+    def cache_size(fn):
+        get = getattr(fn, "_cache_size", None)
+        if not callable(get):
+            pytest.skip("jit._cache_size accessor unavailable")
+        return get()
+
+    params = cnn.init_params(jax.random.PRNGKey(1), KCFG)
+    data = make_dataset("synthmnist", 64, seed=9)
+    datasets = [{k: v[:32] for k, v in data.items()},
+                {k: v[32:] for k, v in data.items()}]
+    eng = BatchedRoundEngine(KCFG, lr=0.05, momentum=0.9,
+                             elastic_kernels="interpret")
+    churn = [[SubmodelSpec((1, 2), (0.5, 1.0)), full_spec(KCFG)],
+             [minimal_spec(KCFG), SubmodelSpec((2, 1), (1.0, 0.5))],
+             [full_spec(KCFG), minimal_spec(KCFG)]]
+    agg0 = cache_size(agg_mod.aggregate_apply)
+    for r, specs in enumerate(churn):
+        params, _, _ = eng.run_fl_round(
+            params, specs, datasets, datasets, [32.0, 32.0],
+            batch_size=8, epochs=1, seeds=[r, r + 1])
+    assert cache_size(eng._train_eval) == 1
+    assert cache_size(agg_mod.aggregate_apply) - agg0 <= 1

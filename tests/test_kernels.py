@@ -9,7 +9,10 @@ try:
 except ImportError:          # container without hypothesis: seeded sweeps
     from _hypothesis_compat import given, settings, strategies as st
 
-from repro.kernels import (elastic_matmul, flash_attention, ssd_scan, ref)
+from repro.kernels import (elastic_conv2d, elastic_dense, elastic_matmul,
+                           elastic_mlp_matmul, flash_attention,
+                           grouped_elastic_matmul, kernel_dispatch,
+                           model_kernels, resolve_backend, ssd_scan, ref)
 from repro.models.ssm import ssd_chunked
 
 jax.config.update("jax_enable_x64", False)
@@ -44,6 +47,186 @@ def test_elastic_matmul_masks_columns():
     y = elastic_matmul(x, w, 37, bm=64, bn=64, bk=64)
     assert bool(jnp.all(y[:, 37:] == 0))
     assert bool(jnp.all(y[:, :37] == 64.0))
+
+
+# ---------------------------------------------------------------------------
+# general elastic dense: contraction/output/row prefixes, fused bias+act
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([8, 64, 130]),
+    k=st.sampled_from([37, 64, 100, 200]),     # includes K % bk != 0
+    n=st.sampled_from([64, 100, 128]),
+    kfrac=st.floats(0.0, 1.0),
+    nfrac=st.floats(0.0, 1.0),
+    act=st.sampled_from([None, "silu", "gelu", "relu"]),
+    bias=st.booleans(),
+)
+def test_elastic_dense_matches_ref(m, k, n, kfrac, nfrac, act, bias):
+    key = jax.random.PRNGKey(m * 13 + k * 7 + n)
+    x = jax.random.normal(key, (m, k))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n))
+    b = jax.random.normal(jax.random.fold_in(key, 2), (n,)) if bias else None
+    ka, na = int(round(kfrac * k)), int(round(nfrac * n))
+    y = elastic_dense(x, w, b, k_active=ka, n_active=na, act=act,
+                      bm=64, bn=64, bk=64)
+    yr = ref.elastic_dense_ref(x, w, b, k_active=ka, n_active=na, act=act)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    k=st.sampled_from([37, 100, 130]),
+    kfrac=st.floats(0.0, 1.0),
+    nfrac=st.floats(0.0, 1.0),
+    act=st.sampled_from([None, "silu"]),
+)
+def test_elastic_dense_grads_match_ref(k, kfrac, nfrac, act):
+    """The tile-skipping custom VJP == autodiff of the masked oracle."""
+    key = jax.random.PRNGKey(k)
+    x = jax.random.normal(key, (48, k))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, 72))
+    b = jax.random.normal(jax.random.fold_in(key, 2), (72,))
+    ka, na = int(round(kfrac * k)), int(round(nfrac * 72))
+
+    def loss_k(x, w, b):
+        y = elastic_dense(x, w, b, k_active=ka, n_active=na, act=act,
+                          bm=64, bn=64, bk=64)
+        return jnp.sum(jnp.sin(y))
+
+    def loss_r(x, w, b):
+        y = ref.elastic_dense_ref(x, w, b, k_active=ka, n_active=na,
+                                  act=act)
+        return jnp.sum(jnp.sin(y))
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(x, w, b)
+    for a, r in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r), atol=2e-4)
+
+
+def test_elastic_dense_k_active_edges():
+    """k_active == 0 (accumulator must still init to zeros), k_active == K,
+    and K not a multiple of bk — the hardened edge cases."""
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (40, 150))          # K=150, bk=64: boundary
+    w = jax.random.normal(jax.random.fold_in(key, 1), (150, 70))
+    b = jnp.ones((70,))
+    y0 = elastic_dense(x, w, b, k_active=0, bm=64, bn=64, bk=64)
+    np.testing.assert_allclose(np.asarray(y0), np.ones((40, 70)), atol=0)
+    yk = elastic_dense(x, w, b, k_active=150, bm=64, bn=64, bk=64)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(x @ w + b),
+                               atol=1e-4)
+    # n_active == 0 zeroes everything including the bias
+    yn = elastic_dense(x, w, b, n_active=0, bm=64, bn=64, bk=64)
+    assert float(jnp.abs(yn).max()) == 0.0
+
+
+def test_elastic_dense_vmap_per_lane_scalars():
+    """The engine contract: one program, per-client runtime prefixes."""
+    key = jax.random.PRNGKey(9)
+    x = jax.random.normal(key, (3, 32, 64))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (64, 96))
+    kas = jnp.array([0, 40, 96], jnp.int32)
+    y = jax.jit(jax.vmap(lambda xx, ka: elastic_dense(
+        xx, w, n_active=ka, bm=64, bn=64, bk=64)))(x, kas)
+    for i, ka in enumerate([0, 40, 96]):
+        yr = ref.elastic_dense_ref(x[i], w, n_active=ka)
+        np.testing.assert_allclose(np.asarray(y[i]), np.asarray(yr),
+                                   atol=1e-4)
+
+
+def test_elastic_mlp_matmul_alias():
+    """Back-compat: the exported MLP width op == output-prefix matmul."""
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (2, 16, 64))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (64, 128))
+    y = elastic_mlp_matmul(x, w, 50)
+    yr = ref.elastic_matmul_ref(x.reshape(-1, 64), w, 50).reshape(2, 16, 128)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# grouped expert-prefix matmul (MoE)
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(
+    g=st.sampled_from([2, 4, 5]),
+    m=st.sampled_from([8, 24]),
+    k=st.sampled_from([32, 100]),
+    n=st.sampled_from([48, 64]),
+    gfrac=st.floats(0.0, 1.0),
+)
+def test_grouped_elastic_matmul_matches_ref(g, m, k, n, gfrac):
+    key = jax.random.PRNGKey(g * 17 + m + k + n)
+    xs = jax.random.normal(key, (g, m, k))
+    ws = jax.random.normal(jax.random.fold_in(key, 1), (g, k, n))
+    ga = int(round(gfrac * g))
+    y = grouped_elastic_matmul(xs, ws, ga, bm=64, bn=64, bk=64)
+    yr = ref.grouped_elastic_matmul_ref(xs, ws, ga)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-4)
+
+
+def test_grouped_elastic_matmul_grads_match_ref():
+    key = jax.random.PRNGKey(11)
+    xs = jax.random.normal(key, (4, 16, 40))
+    ws = jax.random.normal(jax.random.fold_in(key, 1), (4, 40, 56))
+    for ga in (0, 2, 4):
+        gk = jax.grad(lambda a, b: jnp.sum(jnp.sin(grouped_elastic_matmul(
+            a, b, ga, bm=64, bn=64, bk=64))), argnums=(0, 1))(xs, ws)
+        gr = jax.grad(lambda a, b: jnp.sum(jnp.sin(
+            ref.grouped_elastic_matmul_ref(a, b, ga))),
+            argnums=(0, 1))(xs, ws)
+        for a, r in zip(gk, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(r),
+                                       atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# channel-prefix elastic conv (im2col lowering)
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(
+    hw=st.sampled_from([7, 8, 14]),
+    cin=st.sampled_from([3, 8, 16]),
+    cout=st.sampled_from([8, 16]),
+    stride=st.sampled_from([1, 2]),
+    cin_frac=st.floats(0.1, 1.0),
+    cout_frac=st.floats(0.1, 1.0),
+)
+def test_elastic_conv2d_matches_ref(hw, cin, cout, stride, cin_frac,
+                                    cout_frac):
+    key = jax.random.PRNGKey(hw * 3 + cin + cout + stride)
+    x = jax.random.normal(key, (2, hw, hw, cin))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (3, 3, cin, cout)) * .2
+    b = jax.random.normal(jax.random.fold_in(key, 2), (cout,))
+    ca, co = max(1, int(round(cin_frac * cin))), \
+        max(1, int(round(cout_frac * cout)))
+    y = elastic_conv2d(x, w, b, stride=stride, cin_active=ca,
+                       cout_active=co, bm=64, bn=64, bk=64)
+    yr = ref.elastic_conv2d_ref(x, w, b, stride=stride, cin_active=ca,
+                                cout_active=co)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-4)
+
+
+def test_elastic_conv2d_grads_match_ref():
+    key = jax.random.PRNGKey(21)
+    x = jax.random.normal(key, (2, 8, 8, 8))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (3, 3, 8, 16)) * .2
+    b = jax.random.normal(jax.random.fold_in(key, 2), (16,))
+
+    def loss(f, *a):
+        return jnp.sum(jnp.sin(f(*a, stride=2, cin_active=5,
+                                 cout_active=11)))
+
+    gk = jax.grad(lambda *a: loss(
+        lambda x_, w_, b_, **kw: elastic_conv2d(
+            x_, w_, b_, bm=64, bn=64, bk=64, **kw), *a),
+        argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(lambda *a: loss(ref.elastic_conv2d_ref, *a),
+                  argnums=(0, 1, 2))(x, w, b)
+    for a, r in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r), atol=2e-4)
 
 
 # ---------------------------------------------------------------------------
@@ -114,6 +297,34 @@ def test_ssd_scan_matches_sequential(b, s, h, g_div, p, n, chunk):
                                atol=3e-3, rtol=1e-3)
 
 
+@settings(max_examples=6, deadline=None)
+@given(
+    h=st.sampled_from([2, 4]),
+    g_div=st.sampled_from([1, 2]),
+    ha_frac=st.floats(0.0, 1.0),
+    chunk=st.sampled_from([16, 32]),
+)
+def test_ssd_scan_head_prefix_matches_masked_ref(h, g_div, ha_frac, chunk):
+    """Heads past the runtime prefix are skipped → exactly zero; active
+    heads equal the unmasked scan."""
+    g = max(1, h // g_div)
+    b, s, p, n = 2, 64, 32, 16
+    key = jax.random.PRNGKey(h * 5 + g + chunk)
+    ks = jax.random.split(key, 5)
+    xh = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (b, s, g, n), jnp.float32)
+    Cm = jax.random.normal(ks[4], (b, s, g, n), jnp.float32)
+    ha = int(round(ha_frac * h))
+    y = ssd_scan(xh, dt, A, Bm, Cm, chunk=chunk, h_active=ha)
+    yr, _ = ref.ssd_ref(xh, dt, A, Bm, Cm)
+    yr = yr * (jnp.arange(h) < ha).astype(yr.dtype)[None, None, :, None]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=3e-3, rtol=1e-3)
+    assert float(jnp.abs(y[:, :, ha:, :]).max() if ha < h else 0.0) == 0.0
+
+
 def test_ssd_chunked_reference_matches_sequential():
     key = jax.random.PRNGKey(7)
     ks = jax.random.split(key, 5)
@@ -129,3 +340,45 @@ def test_ssd_chunked_reference_matches_sequential():
                                rtol=1e-3)
     np.testing.assert_allclose(np.asarray(hf), np.asarray(hr), atol=2e-3,
                                rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# dispatch layer
+# ---------------------------------------------------------------------------
+def test_resolve_backend_rules():
+    import pytest
+    assert resolve_backend("auto") == (
+        "tpu" if jax.default_backend() == "tpu" else "interpret")
+    assert resolve_backend(None) == resolve_backend("auto")
+    assert resolve_backend("xla") == "xla"
+    with pytest.raises(ValueError):
+        resolve_backend("cuda")
+
+
+def test_dispatch_tables_per_family():
+    d = kernel_dispatch("interpret")
+    t = d.table("transformer")
+    assert set(t) == {"mlp", "moe", "ssd"}
+    assert set(d.table("cnn")) == {"conv"}
+    # 'xla' backend = no kernel table: callers use the dense masked paths
+    assert kernel_dispatch("xla").table("transformer") is None
+    assert kernel_dispatch("xla").table("cnn") is None
+
+
+def test_model_kernels_registers_mlp():
+    """Regression (satellite): the MLP width kernel used to be exported
+    but unreachable from models.transformer.forward's kernel dict."""
+    kd = model_kernels(interpret=True)
+    assert {"mlp", "moe", "ssd", "attention"} <= set(kd)
+    # and the registered op actually skips masked width: equal to the
+    # masked dense mlp from models.layers
+    from repro.models.layers import mlp
+    key = jax.random.PRNGKey(2)
+    p = {"wi": jax.random.normal(key, (32, 64)),
+         "wg": jax.random.normal(jax.random.fold_in(key, 1), (32, 64)),
+         "wo": jax.random.normal(jax.random.fold_in(key, 2), (64, 32))}
+    x = jax.random.normal(jax.random.fold_in(key, 3), (4, 8, 32))
+    wm = (jnp.arange(64) < 24).astype(jnp.float32)
+    got = mlp(p, x, "silu", width_mask=wm, kernel=kd["mlp"])
+    want = mlp(p, x, "silu", width_mask=wm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
