@@ -27,9 +27,18 @@ tile-skipping leg (CFLConfig.elastic_kernels) runs via ``--single <fam>
 kernels <n>`` — it is interpret-mode Pallas on CPU hosts, so it is not in
 the default sweep.
 
+Rows also carry a ``selection`` column (the client-selection policy;
+'full' for the engine sweep, so pre-existing BENCH_round_engine.json rows
+stay comparable). ``--selection`` runs the partial-participation leg —
+one CFLSession per policy (full/uniform/fairness/latency) on the same
+heterogeneous CNN fleet, recording per-policy accuracy fairness
+(``sess.fairness()``) and simulated round time / straggler gap — and
+writes ``BENCH_round_engine_selection.json``.
+
   PYTHONPATH=src python -m benchmarks.round_engine            # full sweep
   PYTHONPATH=src python -m benchmarks.round_engine --single cnn seq 32
   PYTHONPATH=src python -m benchmarks.round_engine --single cnn kernels 8
+  PYTHONPATH=src python -m benchmarks.round_engine --selection
 """
 from __future__ import annotations
 
@@ -240,7 +249,7 @@ def run(seed: int = 0) -> List[Row]:
                     f"round_engine_{family}_{mode}_{n_workers}c",
                     per_round * 1e6,
                     family=family, mode=mode, n_workers=n_workers,
-                    kernel_path=kernel_path,
+                    kernel_path=kernel_path, selection="full",
                     compiles_per_round=float(np.mean(compiles)),
                     max_round_compiles=float(max(compiles)),
                     distinct_specs=float(max(nspecs))))
@@ -250,15 +259,93 @@ def run(seed: int = 0) -> List[Row]:
             rows.append(json_row(
                 f"round_engine_speedup_{family}_{n_workers}c", 0.0,
                 family=family, n_workers=n_workers, x=sw / bw,
+                selection="full",
                 compiles_seq=float(np.mean(sc)),
                 compiles_batched=float(np.mean(bc))))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# partial-participation leg: per-policy fairness / round-time deltas
+# ---------------------------------------------------------------------------
+SELECTION_ROUNDS = 4
+
+
+def run_selection(seed: int = 0, n_workers: int = 8,
+                  rounds: int = SELECTION_ROUNDS) -> List[Row]:
+    """One CFLSession per selection policy on the same heterogeneous CNN
+    fleet: cohort fairness from ``sess.fairness()`` plus **fleet-wide**
+    fairness over every client's accuracy at its last participation
+    (``FleetTracker.last_accs``) — under partial participation the cohort
+    statistic only covers whoever the policy picked last round (the
+    latency policy's cohort excludes exactly the straggler clients), so
+    cross-policy comparisons must use the fleet columns. Also records the
+    simulated round-time story (the latency policy should shrink the
+    straggler barrier; the fairness policy should lift the worst
+    clients)."""
+    import numpy as _np
+
+    from repro.core.fairness import accuracy_fairness
+    from repro.fl import CFLConfig, CFLSession
+
+    rows: List[Row] = []
+    for policy in ("full", "uniform", "fairness", "latency"):
+        fl = CFLConfig(n_workers=n_workers, local_epochs=1, batch_size=32,
+                       seed=seed, selection=policy)
+        sess = CFLSession.from_synthetic(
+            ENGINE_CNN, kind="synthmnist", n_workers=n_workers,
+            n_samples=n_workers * 60, heterogeneity="both", seed=seed,
+            fl_cfg=fl)
+        t0 = time.perf_counter()
+        hist = sess.run(rounds)
+        wall = (time.perf_counter() - t0) / rounds
+        cohort_fair = sess.fairness()
+        last = sess.server.tracker.last_accs
+        seen = last[~_np.isnan(last)]
+        fleet_fair = accuracy_fairness(list(seen))
+        timing = hist[-1]["timing"]
+        rows.append(json_row(
+            f"round_engine_selection_{policy}_{n_workers}c", wall * 1e6,
+            family="cnn", mode="batched", n_workers=n_workers,
+            selection=policy,
+            cohort=float(len(hist[-1]["participants"])),
+            cohort_acc_mean=cohort_fair["mean"],
+            cohort_acc_min=cohort_fair["min"],
+            cohort_jain=cohort_fair["jain_index"],
+            fleet_acc_mean=fleet_fair["mean"],
+            fleet_acc_min=fleet_fair["min"],
+            fleet_jain=fleet_fair["jain_index"],
+            fleet_seen_frac=float(len(seen)) / n_workers,
+            sim_round_time=timing["round_time"],
+            straggler_gap=timing["straggler_gap"]))
+        print(f"  {policy:>8}: cohort {len(hist[-1]['participants'])}"
+              f"/{n_workers}  fleet acc {fleet_fair['mean']:.3f} (min "
+              f"{fleet_fair['min']:.3f}, jain {fleet_fair['jain_index']:.3f}"
+              f", seen {len(seen)}/{n_workers})  sim round "
+              f"{timing['round_time']:.2f}s  straggler gap "
+              f"{timing['straggler_gap']:.2f}s  wall/round {wall:.2f}s")
     return rows
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--single", nargs=3, metavar=("FAMILY", "MODE", "N"))
+    ap.add_argument("--selection", action="store_true",
+                    help="partial-participation leg: per-policy fairness/"
+                         "round-time rows (full/uniform/fairness/latency)")
     args = ap.parse_args()
+    if args.selection:
+        from benchmarks.common import emit
+        rows = run_selection()
+        emit(rows)
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        out_path = os.path.join(root, "BENCH_round_engine_selection.json")
+        with open(out_path, "w") as f:
+            json.dump([dict(json.loads(derived), name=name, us=us)
+                       for name, us, derived in rows], f, indent=1)
+            f.write("\n")
+        print(f"wrote {out_path}")
+        return
     if args.single:
         family, mode, n = args.single[0], args.single[1], int(args.single[2])
         if family not in MEASURE:

@@ -23,7 +23,11 @@ Engine knobs (CFLConfig):
                      (CFLConfig.cohort_shards — a 1-D `cohort` mesh via
                      repro.sharding.cohort; clamped to a divisor of the
                      cohort and the available device count, so `--shards 4`
-                     on a 1-CPU host degrades gracefully to 1).
+                     on a 1-CPU host degrades gracefully to 1);
+  --selection P      client-selection policy for partial-participation
+                     rounds (CFLConfig.selection / fl.selection):
+                     full (default, the paper's everyone-every-round
+                     regime) | uniform | fairness | latency.
 """
 import argparse
 import sys
@@ -43,6 +47,10 @@ ap.add_argument("--engine", choices=("batched", "seq"), default="batched",
                      "per-client loop")
 ap.add_argument("--shards", type=int, default=1,
                 help="cohort-axis shards (devices) for the batched engine")
+ap.add_argument("--selection",
+                choices=("full", "uniform", "fairness", "latency"),
+                default="full",
+                help="client-selection policy (partial participation)")
 ap.add_argument("--rounds", type=int, default=5)
 args = ap.parse_args()
 
@@ -61,10 +69,14 @@ else:
 
 fl = CFLConfig(n_workers=n_workers, local_epochs=epochs, batch_size=bs,
                lr=lr, seed=0, batched_rounds=(args.engine == "batched"),
-               cohort_shards=args.shards)
+               cohort_shards=args.shards, selection=args.selection)
 
 
 def session(algorithm, het, fl_cfg=fl):
+    if algorithm == "il":
+        # IL has no rounds to subsample: it always trains the whole fleet
+        # (the session would reject a partial selection outright)
+        fl_cfg = dataclasses.replace(fl_cfg, selection="full")
     return CFLSession.from_synthetic(
         family, n_workers=n_workers, n_samples=n_samples,
         heterogeneity=het, fl_cfg=fl_cfg, algorithm=algorithm)

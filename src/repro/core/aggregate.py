@@ -40,6 +40,10 @@ def aggregate_coverage(padded_deltas: Sequence, coverages: Sequence,
     """Entry-wise: Δ[i] = Σ_k n_k c_k[i] Δ_k[i] / max(Σ_k n_k c_k[i], eps).
 
     coverages: 0/1 trees of the same structure (core.submodel.coverage_*).
+    Partial-participation rounds on the sequential path pass participant
+    sub-lists here; the batched engine's fused analogue
+    (``aggregate_apply``) takes an explicit ``participation`` mask
+    instead, because its stacked cohort keeps padding slots resident.
     """
     n = list(data_sizes)
     num = jax.tree.map(lambda a: a * n[0], padded_deltas[0])
@@ -62,7 +66,8 @@ def apply_server_update(params, delta, server_lr: float = 1.0):
 # ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("coverage_norm",))
 def aggregate_apply(params, stacked_deltas, stacked_coverages, weights, *,
-                    coverage_norm: bool = False, eps: float = 1e-8):
+                    coverage_norm: bool = False, eps: float = 1e-8,
+                    participation=None):
     """Fused Alg. 3 + Alg. 4 server step over a *stacked* cohort.
 
     stacked_deltas / stacked_coverages: pytrees whose leaves carry a
@@ -71,8 +76,17 @@ def aggregate_apply(params, stacked_deltas, stacked_coverages, weights, *,
     tree_maps. Weighted sums reduce in fp32 regardless of param dtype.
     stacked_coverages may be None when coverage_norm is False (the paper
     rule never reads it — don't pay the device transfer).
+
+    participation: optional (K,) 0/1 flags for partial-participation
+    rounds (the engine's fixed-size padded cohort): padding slots drop out
+    of both the update numerator and the coverage denominator, so the
+    average runs over the *participating* mass only and entries covered
+    solely by padding slots stay exactly 0 under coverage_norm. A runtime
+    input, not a static one — subset churn never recompiles this program.
     """
     w = weights.astype(jnp.float32)
+    if participation is not None:
+        w = w * participation.astype(jnp.float32)
 
     def plain(d):
         wd = w.reshape((-1,) + (1,) * (d.ndim - 1))

@@ -160,6 +160,7 @@ class ElasticFamily:
 
     # -- spec algebra ------------------------------------------------------
     def full_spec(self):
+        """The spec naming the whole parent (identity submodel)."""
         raise NotImplementedError
 
     def minimal_spec(self):
@@ -168,9 +169,13 @@ class ElasticFamily:
         raise NotImplementedError
 
     def random_spec(self, rng):
+        """A feasible random spec drawn with ``rng`` (``random.Random``) —
+        the search's initial population / round-0 sampling source."""
         raise NotImplementedError
 
     def genes(self, spec) -> Tuple:
+        """Hashable gene tuple identifying ``spec`` — the key every cache
+        (spec tables, latency LUT, compile caches) is bucketed by."""
         return spec.genes()
 
     # -- spec-space surface: genetic search (Alg. 1) -----------------------
@@ -218,6 +223,8 @@ class ElasticFamily:
 
     # -- parent-model lifecycle --------------------------------------------
     def init_params(self, key):
+        """Fresh parent params for this family's config (``key`` is a
+        ``jax.random.PRNGKey``)."""
         raise NotImplementedError
 
     def full_ctx(self):
@@ -247,6 +254,10 @@ class ElasticFamily:
 
     # -- masks (spec table, LRU by genes) ----------------------------------
     def spec_masks(self, spec) -> SpecMasks:
+        """Per-spec host masks: what you pass is a spec; what you get back
+        is a :class:`SpecMasks` — the parent-shaped 0/1 ``param_mask``
+        (gradient/coverage semantics) and the family's forward-mask
+        pytree. Built once per distinct ``genes()`` (bounded LRU)."""
         return self._spec_cache.get_or_build(
             self.genes(spec), lambda: self._build_spec_masks(spec))
 
@@ -270,10 +281,21 @@ class ElasticFamily:
     # None (dense masked path), or omitted = this family's own table.
     def masked_loss(self, params, fwd, x, y, sample_weight,
                     kernels=_FAMILY_KERNELS):
+        """Training loss of the masked submodel in *parent* coordinates.
+
+        What you pass: parent-shaped ``params``, one spec's forward-mask
+        pytree ``fwd`` (``spec_masks(spec).fwd``), a batch ``x``/``y``,
+        per-sample 0/1 ``sample_weight``, and optionally a ``kernels`` op
+        table (``kernels.dispatch``; omit for the family default, ``None``
+        for dense masked XLA). What you get back: a scalar loss equal to
+        the extracted submodel's — the engine's exactness contract."""
         raise NotImplementedError
 
     def masked_metric(self, params, fwd, x, y, valid,
                       kernels=_FAMILY_KERNELS):
+        """Eval metric (accuracy) of the masked submodel in parent
+        coordinates; same argument contract as :meth:`masked_loss`, with
+        ``valid`` flagging real (non-padding) eval samples."""
         raise NotImplementedError
 
     def _kernel_table(self, kernels):
@@ -285,12 +307,19 @@ class ElasticFamily:
         raise NotImplementedError
 
     def pad_delta(self, delta, parent_template, spec):
+        """Zero-pad a submodel-coordinate update back to parent shape
+        (Alg. 3 alignment) — inverse of :meth:`extract` on the covered
+        entries, exact zeros elsewhere."""
         raise NotImplementedError
 
     def sub_loss(self, sub_params, sub_ctx, x, y, sample_weight):
+        """Loss of the *extracted* submodel (``sub_ctx`` from
+        :meth:`extract`) — the sequential reference the masked path is
+        verified against."""
         raise NotImplementedError
 
     def sub_metric(self, sub_params, sub_ctx, x, y, valid):
+        """Eval metric of the extracted submodel (sequential reference)."""
         raise NotImplementedError
 
 

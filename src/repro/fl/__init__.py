@@ -5,4 +5,9 @@ from repro.fl.engine import (BatchedRoundEngine, CohortResult,
 from repro.fl.server import CFLConfig, CFLServer
 from repro.fl.baselines import FedAvgServer, independent_learning
 from repro.fl.session import CFLSession
+from repro.fl.selection import (FairnessSelection, FleetState, FleetTracker,
+                                FullParticipation, LatencySelection,
+                                Selection, SelectionPolicy,
+                                SELECTION_POLICIES, UniformSelection,
+                                resolve_policy)
 from repro.fl.rounds import build_population, run_cfl, run_fedavg, run_il

@@ -15,10 +15,16 @@ from repro.core.fairness import accuracy_fairness, round_time_fairness
 from repro.core.latency import LatencyTable
 from repro.fl.client import ClientInfo
 from repro.fl.engine import BatchedRoundEngine, SequentialFamilyTrainer
+from repro.fl.selection import FleetTracker, predict_full_round_times
 
 
 class FedAvgServer:
-    """Standard FL [40]: every client trains the full parent model."""
+    """Standard FL [40]: every client trains the full parent model.
+
+    Supports the same partial-participation policies as CFLServer
+    (``fl_cfg.selection`` / ``set_selection``) so per-policy fairness
+    deltas compare against the paper baseline under the identical cohort
+    regime."""
 
     def __init__(self, cfg, params, clients: List[ClientInfo],
                  client_data: List[Dict], test_data: List[Dict], fl_cfg):
@@ -31,6 +37,9 @@ class FedAvgServer:
         self.fl = fl_cfg
         self.latency = LatencyTable(self.family,
                                     batch_size=fl_cfg.batch_size)
+        self.tracker = FleetTracker(
+            clients, getattr(fl_cfg, "selection", "full"),
+            seed=fl_cfg.seed, predicted_times_fn=self._predict_round_times)
         self.round_idx = 0
         self.history: List[Dict] = []
         if fl_cfg.batched_rounds:
@@ -44,23 +53,61 @@ class FedAvgServer:
         # back-compat alias (None when running the sequential loop)
         self.engine = self._runner if fl_cfg.batched_rounds else None
 
+    def set_selection(self, selection) -> None:
+        """Swap the client-selection policy for the rounds that follow."""
+        self.tracker.set_policy(selection)
+
+    def _predict_round_times(self) -> List[float]:
+        return predict_full_round_times(
+            self.family, self.clients, self.latency,
+            batch_size=self.fl.batch_size, epochs=self.fl.local_epochs)
+
     def run_round(self) -> Dict:
         spec = self.family.full_spec()
-        seeds = [self.fl.seed * 7 + self.round_idx * 131 + k
-                 for k in range(len(self.clients))]
-        sizes = [c.n_samples for c in self.clients]
-        self.params, accs, n_steps_all = self._runner.run_fl_round(
-            self.params, [spec] * len(self.clients), self.client_data,
-            self.test_data, sizes, batch_size=self.fl.batch_size,
-            epochs=self.fl.local_epochs, seeds=seeds)
+        sel = self.tracker.select(self.round_idx)
+        participants = [int(i) for i in sel.participants]
+        if self.tracker.is_full and self.fl.batched_rounds:
+            seeds = [self.fl.seed * 7 + self.round_idx * 131 + k
+                     for k in range(len(self.clients))]
+            sizes = [c.n_samples for c in self.clients]
+            self.params, accs, n_steps_all = self._runner.run_fl_round(
+                self.params, [spec] * len(self.clients), self.client_data,
+                self.test_data, sizes, batch_size=self.fl.batch_size,
+                epochs=self.fl.local_epochs, seeds=seeds)
+        elif self.fl.batched_rounds:
+            m = len(sel.idx)
+            seeds = [self.fl.seed * 7 + self.round_idx * 131 + int(i)
+                     for i in sel.idx]
+            self.params, accs_pad, n_steps_pad = self._runner.run_fl_round(
+                self.params, [spec] * m, self.client_data, self.test_data,
+                None, batch_size=self.fl.batch_size,
+                epochs=self.fl.local_epochs, seeds=seeds,
+                participation=sel)
+            accs = sel.take_valid(accs_pad)
+            n_steps_all = [int(n) for n in sel.take_valid(n_steps_pad)]
+        else:
+            seeds = [self.fl.seed * 7 + self.round_idx * 131 + i
+                     for i in participants]
+            sizes = [float(w) for w, v in zip(sel.weights, sel.valid)
+                     if v > 0]
+            self.params, accs, n_steps_all = self._runner.run_fl_round(
+                self.params, [spec] * len(participants),
+                [self.client_data[i] for i in participants],
+                [self.test_data[i] for i in participants], sizes,
+                batch_size=self.fl.batch_size,
+                epochs=self.fl.local_epochs, seeds=seeds)
+        self.tracker.record(participants, accs)
 
         times = []
-        for client, n_steps in zip(self.clients, n_steps_all):
+        for i, n_steps in zip(participants, n_steps_all):
+            client = self.clients[i]
             prof = self.latency.fleet[client.device]
             times.append(
                 n_steps * self.latency.lookup(spec, client.device) +
                 prof.comm_latency(2 * self.family.param_bytes(spec)))
         rec = {"round": self.round_idx, "accs": accs,
+               "participants": participants,
+               "selection": self.tracker.policy.name,
                "fairness": accuracy_fairness(accs),
                "timing": round_time_fairness(times)}
         self.history.append(rec)

@@ -21,6 +21,17 @@ Clients with fewer local steps than the cohort max are handled with step
 validity flags (invalid steps are no-ops on the carry), partial batches
 with sample validity weights — bitwise-faithful to the per-client loader.
 
+**Partial participation** (``fl.selection``): a round may train only a
+subset of the fleet. The engine keeps its shapes stable by running a
+**fixed-size padded cohort** — ``run_fl_round(..., participation=sel)``
+takes a ``Selection`` whose (M,) ``idx``/``valid``/``weights`` arrays
+gather the selected clients out of the fleet-resident data pack on
+device; padding slots carry no valid steps (their local train is an exact
+no-op) and weight 0 (they drop out of the fused aggregate+apply). M and
+the fleet-wide step/eval paddings are round-invariant, so the selected
+subset can churn every round without adding compiled programs — the
+2-programs/round invariant survives partial participation.
+
 **Cohort sharding**: with ``cohort_shards > 1`` the stacked leading client
 axis is committed to a 1-D ``cohort`` mesh (``sharding.cohort``) before
 dispatch; jit propagates the layout so the whole round — local train, local
@@ -77,6 +88,40 @@ def pack_cohort_data(datasets: Sequence[Dict[str, np.ndarray]]
     return jnp.asarray(x), jnp.asarray(y)
 
 
+def n_stream_steps(n: int, batch_size: int, epochs: int) -> int:
+    """Steps ``index_batches(n, batch_size, epochs=epochs)`` will yield
+    (drop-remainder semantics; a dataset smaller than one batch still
+    yields one partial batch per epoch). The fleet-wide max of this is the
+    round-invariant step padding partial-participation packing uses."""
+    per_epoch = n // batch_size if n >= batch_size else 1
+    return per_epoch * epochs
+
+
+def _pack_streams(lengths: Sequence[int], batch_size: int, *, epochs: int,
+                  seeds: Sequence[int], n_steps_pad: Optional[int] = None):
+    """Build the (K, S, B) index / validity tensors for per-client batch
+    streams; ``lengths[k] == 0`` marks a padding slot (no valid steps).
+    ``n_steps_pad`` pins S to a caller-chosen (fleet-wide) value so the
+    packed shapes stay round-invariant under cohort churn."""
+    streams = [list(index_batches(n, batch_size, seed=s, epochs=epochs))
+               if n > 0 else []
+               for n, s in zip(lengths, seeds)]
+    K = len(streams)
+    S = max(len(st) for st in streams) if n_steps_pad is None \
+        else int(n_steps_pad)
+    idx = np.zeros((K, S, batch_size), np.int32)
+    sv = np.zeros((K, S, batch_size), np.float32)
+    stv = np.zeros((K, S), bool)
+    for k, stream in enumerate(streams):
+        assert len(stream) <= S, (k, len(stream), S)
+        for t, b_idx in enumerate(stream):
+            idx[k, t, :len(b_idx)] = b_idx
+            sv[k, t, :len(b_idx)] = 1.0
+            stv[k, t] = True
+    return (jnp.asarray(idx), jnp.asarray(sv), jnp.asarray(stv),
+            np.array([len(st) for st in streams]))
+
+
 def pack_cohort(datasets: Sequence[Dict[str, np.ndarray]], batch_size: int,
                 *, epochs: int, seeds: Sequence[int],
                 data: Optional[Tuple[jax.Array, jax.Array]] = None
@@ -87,23 +132,11 @@ def pack_cohort(datasets: Sequence[Dict[str, np.ndarray]], batch_size: int,
     gathered per scan step, not extra data copies — and a cached
     ``pack_cohort_data`` result can be reused across rounds (only the
     index/validity tensors depend on the round seeds)."""
-    streams = [list(index_batches(len(d["y"]), batch_size, seed=s,
-                                  epochs=epochs))
-               for d, s in zip(datasets, seeds)]
-    K = len(streams)
-    S = max(len(st) for st in streams)
     x, y = pack_cohort_data(datasets) if data is None else data
-    idx = np.zeros((K, S, batch_size), np.int32)
-    sv = np.zeros((K, S, batch_size), np.float32)
-    stv = np.zeros((K, S), bool)
-    for k, stream in enumerate(streams):
-        for t, b_idx in enumerate(stream):
-            idx[k, t, :len(b_idx)] = b_idx
-            sv[k, t, :len(b_idx)] = 1.0
-            stv[k, t] = True
-    return CohortBatches(x, y, jnp.asarray(idx), jnp.asarray(sv),
-                         jnp.asarray(stv),
-                         np.array([len(st) for st in streams]))
+    idx, sv, stv, n_steps = _pack_streams(
+        [len(d["y"]) for d in datasets], batch_size, epochs=epochs,
+        seeds=seeds)
+    return CohortBatches(x, y, idx, sv, stv, n_steps)
 
 
 @dataclasses.dataclass
@@ -254,10 +287,24 @@ class BatchedRoundEngine:
     def train_cohort(self, theta0_stacked, specs: Sequence,
                      datasets: Sequence[Dict], *, batch_size: int,
                      epochs: int, seeds: Sequence[int],
-                     eval_datasets: Optional[Sequence[Dict]] = None
-                     ) -> CohortResult:
+                     eval_datasets: Optional[Sequence[Dict]] = None,
+                     participation=None) -> CohortResult:
         """Run every client's local epochs (and, when eval_datasets is
-        given, its local test pass) as one compiled program."""
+        given, its local test pass) as one compiled program.
+
+        With ``participation`` (an ``fl.selection.Selection``) the cohort
+        is the fixed-size padded subset it names: ``specs`` and ``seeds``
+        are per-slot (length M == len(participation.idx)), ``datasets`` /
+        ``eval_datasets`` stay the full fleet lists (their resident packs
+        are cached across rounds; the subset is gathered on device), and
+        padding slots train zero steps. Step padding is the fleet-wide
+        max, so the packed shapes — and therefore the compiled programs —
+        are invariant under subset churn."""
+        if participation is not None:
+            return self._train_cohort_subset(
+                theta0_stacked, specs, datasets, participation,
+                batch_size=batch_size, epochs=epochs, seeds=seeds,
+                eval_datasets=eval_datasets)
         sh = self.cohort_sharding(len(specs))
         masks = self._cohort_masks(specs)
         cohort = pack_cohort(datasets, batch_size, epochs=epochs,
@@ -275,6 +322,53 @@ class BatchedRoundEngine:
             theta0_stacked, masks.param_mask, masks.fwd, cohort.x, cohort.y,
             *stream, pack.x, pack.y, pack.valid)
         return CohortResult(deltas, trained, masks, cohort.n_steps,
+                            np.asarray(accs))
+
+    def _train_cohort_subset(self, theta0_stacked, specs: Sequence,
+                             datasets: Sequence[Dict], participation, *,
+                             batch_size: int, epochs: int,
+                             seeds: Sequence[int],
+                             eval_datasets: Optional[Sequence[Dict]] = None
+                             ) -> CohortResult:
+        """Fixed-size padded subset round: gather the selected clients out
+        of the fleet-resident packs on device, pad streams to the
+        fleet-wide step count, and run the same compiled programs."""
+        part = participation
+        m = len(part.idx)
+        if not (len(specs) == len(seeds) == m):
+            raise ValueError(
+                f"per-slot specs/seeds must match the padded cohort size "
+                f"{m}, got {len(specs)}/{len(seeds)}")
+        sh = self.cohort_sharding(m)
+        masks = self._cohort_masks(specs)
+        gidx = jnp.asarray(np.asarray(part.idx, np.int32))
+        x_full, y_full = self._cohort_data(datasets)
+        x = shard_cohort(jnp.take(x_full, gidx, 0), sh)
+        y = shard_cohort(jnp.take(y_full, gidx, 0), sh)
+        # step padding is the *fleet-wide* max so S never depends on which
+        # subset was selected (shape churn would mean program churn)
+        s_fleet = max(n_stream_steps(len(d["y"]), batch_size, epochs)
+                      for d in datasets)
+        lengths = [len(datasets[i]["y"]) if v > 0 else 0
+                   for i, v in zip(part.idx, part.valid)]
+        idx, sv, stv, n_steps = _pack_streams(
+            lengths, batch_size, epochs=epochs, seeds=seeds,
+            n_steps_pad=s_fleet)
+        theta0_stacked = shard_cohort(theta0_stacked, sh)
+        stream = shard_cohort((idx, sv, stv), sh)
+        if eval_datasets is None:
+            deltas, trained = self._train(
+                theta0_stacked, masks.param_mask, masks.fwd, x, y, *stream)
+            return CohortResult(deltas, trained, masks, n_steps)
+        pack = self._eval_pack(eval_datasets)
+        valid_col = jnp.asarray(np.asarray(part.valid, np.float32))[:, None]
+        ex = shard_cohort(jnp.take(pack.x, gidx, 0), sh)
+        ey = shard_cohort(jnp.take(pack.y, gidx, 0), sh)
+        ev = shard_cohort(jnp.take(pack.valid, gidx, 0) * valid_col, sh)
+        deltas, trained, accs = self._train_eval(
+            theta0_stacked, masks.param_mask, masks.fwd, x, y, *stream,
+            ex, ey, ev)
+        return CohortResult(deltas, trained, masks, n_steps,
                             np.asarray(accs))
 
     def _cohort_masks(self, specs: Sequence) -> CohortMasks:
@@ -321,21 +415,37 @@ class BatchedRoundEngine:
     def run_fl_round(self, params, specs: Sequence,
                      datasets: Sequence[Dict], test_datasets: Sequence[Dict],
                      sizes: Sequence[float], *, batch_size: int, epochs: int,
-                     seeds: Sequence[int], coverage_norm: bool = False):
+                     seeds: Sequence[int], coverage_norm: bool = False,
+                     participation=None):
         """One full FL round — cohort local train + eval fused, then fused
         aggregate+apply. The single dispatch contract shared by CFLServer
         and FedAvgServer (FedAvg is specs=[full_spec]*K, coverage off).
 
-        Returns (new_params, accs, n_steps)."""
+        With ``participation`` (an ``fl.selection.Selection``) the round
+        trains only its fixed-size padded cohort: ``specs``/``seeds`` are
+        per-slot, ``sizes`` is ignored in favour of the selection's
+        aggregation weights, and padding slots contribute neither updates
+        nor coverage. Returns (new_params, accs, n_steps) — with
+        participation these are per-slot; filter by ``participation.valid``
+        for the real cohort members."""
         from repro.core.aggregate import aggregate_apply
         theta0 = self.broadcast_params(params, len(specs))
         res = self.train_cohort(theta0, specs, datasets,
                                 batch_size=batch_size, epochs=epochs,
-                                seeds=seeds, eval_datasets=test_datasets)
+                                seeds=seeds, eval_datasets=test_datasets,
+                                participation=participation)
         covs = res.masks.param_mask if coverage_norm else None
-        new_params = aggregate_apply(
-            params, res.deltas, covs, jnp.asarray(sizes, jnp.float32),
-            coverage_norm=coverage_norm)
+        if participation is None:
+            new_params = aggregate_apply(
+                params, res.deltas, covs, jnp.asarray(sizes, jnp.float32),
+                coverage_norm=coverage_norm)
+        else:
+            new_params = aggregate_apply(
+                params, res.deltas, covs,
+                jnp.asarray(np.asarray(participation.weights, np.float32)),
+                coverage_norm=coverage_norm,
+                participation=jnp.asarray(
+                    np.asarray(participation.valid, np.float32)))
         return new_params, [float(a) for a in res.accs], res.n_steps
 
     def eval_cohort(self, params_stacked, specs: Sequence,

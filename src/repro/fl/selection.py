@@ -1,0 +1,382 @@
+"""Client-selection policies for partial-participation FL rounds.
+
+The paper's CFL system assumes every client trains every round; production
+fleets don't — only a subset participates per round, and *which* subset
+drives the fairness/efficiency trade-off the paper targets. This module is
+the pluggable policy layer on top of the batched round engine:
+
+* ``SelectionPolicy.select(state, rng)`` returns a :class:`Selection` — a
+  **fixed-size padded cohort**: ``idx`` (M,) fleet indices, ``valid`` (M,)
+  0/1 participation flags, and per-client aggregation ``weights`` (M,)
+  that sum to the *participating mass* (Σ n_k over participants, so the
+  FedAvg weighting stays unbiased over whoever showed up). M is constant
+  across rounds for a given policy + fleet, which is what lets the engine
+  keep its 2-compiled-programs/round invariant while the selected subset
+  churns (shapes never change; only mask/index values do).
+
+Shipped policies (``SELECTION_POLICIES`` / ``resolve_policy``):
+
+``full``     today's behavior and the default — every client, weights n_k.
+``uniform``  random m-of-K without replacement (the standard partial-
+             participation baseline), weights n_k.
+``fairness`` loss-proportional sampling with per-client participation
+             debt, plus GIFAIR-style quality-group reweighting of the
+             aggregation weights: struggling (high-loss) and underserved
+             (low participation count) clients are sampled more often,
+             and groups whose mean loss trails the fleet get their
+             aggregate weight boosted.
+``latency``  deadline-aware: predicted stragglers (two-term cost model,
+             ``core.latency``) past the deadline quantile are dropped, so
+             the simulated round barrier tightens.
+
+Policies consume only :class:`FleetState` (client metadata + per-client
+running accuracy / participation-count / predicted-round-time arrays the
+server maintains), so a new policy plugs in without touching the engine
+or servers — subclass ``SelectionPolicy``, implement ``select``, and pass
+the instance (or register a name) as ``CFLConfig.selection`` /
+``CFLSession.run(..., selection=...)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Type, Union
+
+import numpy as np
+
+from repro.fl.client import ClientInfo
+
+
+# ---------------------------------------------------------------------------
+# state the server maintains for the policies
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class FleetState:
+    """What a policy may look at when picking a round's cohort.
+
+    ``last_accs[k]`` is client k's local-test accuracy from its most
+    recent participating round (NaN if it has never participated —
+    policies treat unseen clients as maximally lossy, which doubles as
+    exploration). ``participation_counts[k]`` counts rounds participated.
+    ``predicted_times[k]`` is the server's full-model round-time estimate
+    from the two-term latency model (None when the server skipped it).
+    """
+    clients: List[ClientInfo]
+    round_idx: int
+    last_accs: np.ndarray            # (K,) float, NaN = never participated
+    participation_counts: np.ndarray  # (K,) int
+    predicted_times: Optional[np.ndarray] = None   # (K,) seconds
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.clients)
+
+    @property
+    def n_samples(self) -> np.ndarray:
+        return np.asarray([c.n_samples for c in self.clients], np.float64)
+
+    def lossiness(self) -> np.ndarray:
+        """1 − last_acc, with never-seen clients pinned to 1.0 (max)."""
+        loss = 1.0 - np.asarray(self.last_accs, np.float64)
+        return np.where(np.isnan(loss), 1.0, np.clip(loss, 0.0, 1.0))
+
+
+@dataclasses.dataclass
+class Selection:
+    """A fixed-size padded cohort for one round.
+
+    ``idx`` (M,) int32 fleet indices — padding slots repeat a valid index
+    so device-side gathers stay in range; ``valid`` (M,) float32 1/0 flags
+    (0 = padding slot: no training, no aggregation weight); ``weights``
+    (M,) float32 aggregation weights, 0 on padding slots and summing to
+    the participating mass Σ n_k over participants.
+    """
+    idx: np.ndarray
+    valid: np.ndarray
+    weights: np.ndarray
+
+    @property
+    def participants(self) -> np.ndarray:
+        """Fleet indices of the real (non-padding) cohort members."""
+        return self.idx[self.valid > 0]
+
+    def take_valid(self, values: Sequence) -> List:
+        """Filter a per-slot sequence (engine outputs: accs, n_steps)
+        down to the real cohort members, in slot order."""
+        return [v for v, f in zip(values, self.valid) if f > 0]
+
+    def __post_init__(self):
+        self.idx = np.asarray(self.idx, np.int32)
+        self.valid = np.asarray(self.valid, np.float32)
+        self.weights = np.asarray(self.weights, np.float32)
+        if not (self.idx.shape == self.valid.shape == self.weights.shape):
+            raise ValueError("idx/valid/weights must share shape (M,)")
+
+
+def _pad_selection(chosen: Sequence[int], weights: Sequence[float],
+                   m_pad: int) -> Selection:
+    """Pad a chosen cohort out to the policy's fixed size ``m_pad``."""
+    chosen = list(chosen)
+    if not chosen:
+        raise ValueError("a selection must keep at least one client")
+    idx = np.asarray(chosen + [chosen[0]] * (m_pad - len(chosen)), np.int32)
+    valid = np.zeros((m_pad,), np.float32)
+    valid[:len(chosen)] = 1.0
+    w = np.zeros((m_pad,), np.float32)
+    w[:len(chosen)] = np.asarray(weights, np.float32)
+    return Selection(idx, valid, w)
+
+
+def _mass_normalised(raw: np.ndarray, n_samples: np.ndarray) -> np.ndarray:
+    """Rescale raw weights to sum to the participating mass Σ n_k."""
+    total = float(np.sum(n_samples))
+    return raw * (total / max(float(np.sum(raw)), 1e-12))
+
+
+# ---------------------------------------------------------------------------
+# the protocol + shipped policies
+# ---------------------------------------------------------------------------
+class SelectionPolicy:
+    """Protocol: ``select(state, rng) -> Selection``.
+
+    What you pass: a :class:`FleetState` (the server builds it) and a
+    ``numpy.random.RandomState`` seeded per round (so reruns of the same
+    session replay the same cohorts). What you get back: a
+    :class:`Selection` whose padded size ``cohort_size(K)`` is constant
+    across rounds — the engine relies on that for shape stability.
+
+    ``fraction`` sets the participating share of the fleet (ignored by
+    ``full``); subclasses add their own knobs.
+    """
+
+    name = "abstract"
+
+    def __init__(self, fraction: float = 0.5):
+        if not (0.0 < fraction <= 1.0):
+            raise ValueError(f"fraction must be in (0, 1], got {fraction}")
+        self.fraction = float(fraction)
+
+    def cohort_size(self, n_clients: int) -> int:
+        """Fixed padded cohort size M for this fleet (≥ 1)."""
+        return max(1, int(round(self.fraction * n_clients)))
+
+    def select(self, state: FleetState,
+               rng: np.random.RandomState) -> Selection:
+        raise NotImplementedError
+
+
+class FullParticipation(SelectionPolicy):
+    """Every client, every round — the paper's regime and the default."""
+
+    name = "full"
+
+    def __init__(self, fraction: float = 1.0):
+        super().__init__(1.0)
+
+    def select(self, state: FleetState,
+               rng: np.random.RandomState) -> Selection:
+        k = state.n_clients
+        return _pad_selection(range(k), state.n_samples, k)
+
+
+class UniformSelection(SelectionPolicy):
+    """Random m-of-K without replacement; weights stay n_k (unbiased
+    FedAvg weighting over whoever participates)."""
+
+    name = "uniform"
+
+    def select(self, state: FleetState,
+               rng: np.random.RandomState) -> Selection:
+        m = self.cohort_size(state.n_clients)
+        chosen = rng.choice(state.n_clients, size=m, replace=False)
+        return _pad_selection(chosen, state.n_samples[chosen], m)
+
+
+class FairnessSelection(SelectionPolicy):
+    """Loss-proportional sampling with participation debt + GIFAIR-style
+    group reweighting.
+
+    Sampling score: ``lossiness_k + debt_gamma * debt_k`` where
+    ``debt_k = round_idx * m/K − participation_counts[k]`` (clients owed
+    rounds score higher; never-seen clients are maximally lossy, so the
+    policy explores the fleet before exploiting). m clients are drawn
+    without replacement proportional to score.
+
+    Aggregation weights: clients are grouped by data-quality level (the
+    paper's quality heterogeneity axis); each group's weight multiplier is
+    ``1 + group_beta * (group_mean_loss − fleet_mean_loss)`` (clipped to
+    [0.25, 4]), GIFAIR's idea that lagging groups get a louder vote in the
+    aggregate. Weights are renormalised to the participating mass.
+    """
+
+    name = "fairness"
+
+    def __init__(self, fraction: float = 0.5, debt_gamma: float = 0.5,
+                 group_beta: float = 1.0):
+        super().__init__(fraction)
+        self.debt_gamma = float(debt_gamma)
+        self.group_beta = float(group_beta)
+
+    def select(self, state: FleetState,
+               rng: np.random.RandomState) -> Selection:
+        k = state.n_clients
+        m = self.cohort_size(k)
+        loss = state.lossiness()
+        expected = state.round_idx * m / k
+        debt = np.maximum(expected - state.participation_counts, 0.0)
+        score = np.maximum(loss + self.debt_gamma * debt, 1e-6)
+        probs = score / score.sum()
+        chosen = rng.choice(k, size=m, replace=False, p=probs)
+
+        quals = np.asarray([state.clients[i].quality for i in chosen])
+        closs = loss[chosen]
+        mult = np.ones(m, np.float64)
+        group_means = {q: float(closs[quals == q].mean())
+                       for q in np.unique(quals)}
+        fleet_mean = float(np.mean(list(group_means.values())))
+        for q, gm in group_means.items():
+            mult[quals == q] = np.clip(
+                1.0 + self.group_beta * (gm - fleet_mean), 0.25, 4.0)
+        mass = state.n_samples[chosen]
+        return _pad_selection(chosen, _mass_normalised(mass * mult, mass), m)
+
+
+class LatencySelection(SelectionPolicy):
+    """Deadline-aware selection: drop predicted stragglers.
+
+    The server's ``predicted_times`` (full-model round time from the
+    two-term cost model in ``core.latency``) set the deadline at the
+    ``deadline_q`` quantile; clients past it are dropped. If more than m
+    clients beat the deadline, m are drawn uniformly among them (keeps
+    churn among the fast set instead of always picking the same devices);
+    if fewer, the fastest stragglers fill the remaining slots. Falls back
+    to uniform when the server provided no predictions.
+    """
+
+    name = "latency"
+
+    def __init__(self, fraction: float = 0.5, deadline_q: float = 0.75):
+        super().__init__(fraction)
+        if not (0.0 < deadline_q <= 1.0):
+            raise ValueError(f"deadline_q must be in (0, 1], got "
+                             f"{deadline_q}")
+        self.deadline_q = float(deadline_q)
+
+    def select(self, state: FleetState,
+               rng: np.random.RandomState) -> Selection:
+        k = state.n_clients
+        m = self.cohort_size(k)
+        times = state.predicted_times
+        if times is None:
+            chosen = rng.choice(k, size=m, replace=False)
+            return _pad_selection(chosen, state.n_samples[chosen], m)
+        times = np.asarray(times, np.float64)
+        deadline = float(np.quantile(times, self.deadline_q))
+        feasible = np.flatnonzero(times <= deadline)
+        if len(feasible) >= m:
+            chosen = rng.choice(feasible, size=m, replace=False)
+        else:
+            by_speed = np.argsort(times, kind="stable")
+            stragglers = by_speed[~np.isin(by_speed, feasible)]
+            chosen = np.concatenate([feasible,
+                                     stragglers[:m - len(feasible)]])
+        return _pad_selection(chosen, state.n_samples[chosen], m)
+
+
+SELECTION_POLICIES: Dict[str, Type[SelectionPolicy]] = {
+    FullParticipation.name: FullParticipation,
+    UniformSelection.name: UniformSelection,
+    FairnessSelection.name: FairnessSelection,
+    LatencySelection.name: LatencySelection,
+}
+
+
+def predict_full_round_times(family, clients: List[ClientInfo], latency, *,
+                             batch_size: int, epochs: int) -> List[float]:
+    """Per-client full-model round-time estimate (two-term cost model +
+    update exchange) — the latency policy's straggler signal, shared by
+    CFLServer and FedAvgServer (``latency`` is a ``core.latency
+    .LatencyTable``)."""
+    from repro.fl.engine import n_stream_steps
+    full = family.full_spec()
+    comm = 2 * family.param_bytes(full)
+    out = []
+    for c in clients:
+        n = n_stream_steps(c.n_samples, batch_size, epochs)
+        prof = latency.fleet[c.device]
+        out.append(n * latency.lookup(full, c.device) +
+                   prof.comm_latency(comm))
+    return out
+
+
+class FleetTracker:
+    """Server-side selection bookkeeping shared by CFLServer/FedAvgServer.
+
+    Holds the policy plus the per-client running state the policies read
+    (:class:`FleetState`), draws a deterministically-seeded cohort per
+    round, and records each round's outcomes back. ``predicted_times_fn``
+    is called once, lazily, the first time a policy asks for latency
+    predictions (so servers that never run the latency policy never pay
+    the LUT walk).
+    """
+
+    def __init__(self, clients: List[ClientInfo],
+                 selection: Union[None, str, SelectionPolicy] = None, *,
+                 seed: int = 0, predicted_times_fn=None):
+        self.clients = clients
+        self.policy = resolve_policy(selection)
+        self.seed = int(seed)
+        self._predicted_times_fn = predicted_times_fn
+        self._predicted_times: Optional[np.ndarray] = None
+        k = len(clients)
+        self.participation_counts = np.zeros((k,), np.int64)
+        self.last_accs = np.full((k,), np.nan)
+
+    def set_policy(self, selection: Union[None, str, SelectionPolicy]):
+        self.policy = resolve_policy(selection)
+
+    @property
+    def is_full(self) -> bool:
+        return isinstance(self.policy, FullParticipation)
+
+    def predicted_times(self) -> Optional[np.ndarray]:
+        if self._predicted_times is None and \
+                self._predicted_times_fn is not None:
+            self._predicted_times = np.asarray(self._predicted_times_fn(),
+                                               np.float64)
+        return self._predicted_times
+
+    def state(self, round_idx: int) -> FleetState:
+        return FleetState(self.clients, round_idx, self.last_accs,
+                          self.participation_counts,
+                          self.predicted_times())
+
+    def select(self, round_idx: int) -> Selection:
+        rng = np.random.RandomState(
+            (self.seed * 9176 + 31 * round_idx + 7) % (2 ** 31))
+        return self.policy.select(self.state(round_idx), rng)
+
+    def record(self, participants: Sequence[int], accs: Sequence[float]):
+        """Fold one round's participant accuracies into the running state
+        (feeds the fairness policy's lossiness/debt scores)."""
+        ids = np.asarray(participants, np.int64)
+        self.participation_counts[ids] += 1
+        self.last_accs[ids] = np.asarray(accs, np.float64)
+
+
+def resolve_policy(selection: Union[None, str, SelectionPolicy]
+                   ) -> SelectionPolicy:
+    """``None``/``'full'`` → FullParticipation; a registered name → that
+    policy with defaults; a SelectionPolicy instance → itself."""
+    if selection is None:
+        return FullParticipation()
+    if isinstance(selection, SelectionPolicy):
+        return selection
+    if isinstance(selection, str):
+        try:
+            return SELECTION_POLICIES[selection]()
+        except KeyError:
+            raise ValueError(
+                f"unknown selection policy {selection!r}; registered: "
+                f"{sorted(SELECTION_POLICIES)}") from None
+    raise TypeError(f"selection must be None, a name, or a "
+                    f"SelectionPolicy, got {type(selection).__name__}")

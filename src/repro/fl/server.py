@@ -20,7 +20,9 @@ from __future__ import annotations
 
 import dataclasses
 import random
-from typing import Dict, List, Union
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
 
 from repro.core.elastic import ElasticFamily, family_for
 from repro.core.fairness import accuracy_fairness, round_time_fairness
@@ -29,6 +31,8 @@ from repro.core.predictor import AccuracyPredictor
 from repro.core.search import SearchConfig, search_all_workers
 from repro.fl.client import ClientInfo
 from repro.fl.engine import BatchedRoundEngine, SequentialFamilyTrainer
+from repro.fl.selection import (FleetTracker, Selection, SelectionPolicy,
+                                predict_full_round_times)
 
 
 @dataclasses.dataclass
@@ -52,6 +56,11 @@ class CFLConfig:
     # backend (Pallas-TPU on TPU hosts, Pallas-interpret elsewhere); or an
     # explicit backend name ('tpu' | 'interpret' | 'xla')
     elastic_kernels: Union[bool, str] = False
+    # client-selection policy for partial-participation rounds
+    # (fl.selection): 'full' (every client, the paper's regime and the
+    # default) | 'uniform' | 'fairness' | 'latency', or a SelectionPolicy
+    # instance for custom fractions/knobs
+    selection: Union[None, str, SelectionPolicy] = "full"
     seed: int = 0
 
 
@@ -73,6 +82,9 @@ class CFLServer:
         self.predictor = AccuracyPredictor(self.family, seed=fl_cfg.seed)
         self.latency = LatencyTable(self.family,
                                     batch_size=fl_cfg.batch_size)
+        self.tracker = FleetTracker(
+            clients, fl_cfg.selection, seed=fl_cfg.seed,
+            predicted_times_fn=self._predict_round_times)
         self.round_idx = 0
         self.history: List[Dict] = []
         if fl_cfg.batched_rounds:
@@ -87,15 +99,33 @@ class CFLServer:
                 self.family, lr=fl_cfg.lr, momentum=fl_cfg.momentum)
 
     # ------------------------------------------------------------------
-    def sample_submodels(self) -> List:
+    def set_selection(self, selection) -> None:
+        """Swap the client-selection policy ('full' | 'uniform' |
+        'fairness' | 'latency' or a SelectionPolicy instance) for the
+        rounds that follow — the engine's compiled programs survive the
+        swap as long as the padded cohort size does."""
+        self.tracker.set_policy(selection)
+
+    def _predict_round_times(self) -> List[float]:
+        return predict_full_round_times(
+            self.family, self.clients, self.latency,
+            batch_size=self.fl.batch_size, epochs=self.fl.local_epochs)
+
+    def sample_submodels(self, client_ids: Optional[Sequence[int]] = None
+                         ) -> List:
         """Alg. 1 + helper filtering; round 0 uses random feasible specs
-        (predictor untrained)."""
-        bounds = [c.latency_bound for c in self.clients]
+        (predictor untrained). ``client_ids`` restricts the search to a
+        selected cohort (partial participation) — per-client randomness is
+        keyed by fleet id, so a client's round-0 spec does not depend on
+        who else was selected."""
+        ids = list(range(len(self.clients))) if client_ids is None \
+            else [int(i) for i in client_ids]
+        cohort = [self.clients[i] for i in ids]
         if self.round_idx == 0:
             fallback = self.family.minimal_spec()
             specs = []
-            for k, c in enumerate(self.clients):
-                rng = random.Random(self.fl.seed * 131 + k)
+            for i, c in zip(ids, cohort):
+                rng = random.Random(self.fl.seed * 131 + i)
                 cand = [self.family.random_spec(rng) for _ in range(32)]
                 feas = [s for s in cand
                         if self.latency.lookup(s, c.device) < c.latency_bound]
@@ -107,19 +137,24 @@ class CFLServer:
             return specs
         return search_all_workers(
             self.family, self.predictor, self.latency,
-            devices=[c.device for c in self.clients],
-            qualities=[c.quality for c in self.clients],
-            latency_bounds=bounds, search_cfg=self.fl.search,
+            devices=[c.device for c in cohort],
+            qualities=[c.quality for c in cohort],
+            latency_bounds=[c.latency_bound for c in cohort],
+            search_cfg=self.fl.search,
             seed=self.fl.seed + self.round_idx)
 
     # ------------------------------------------------------------------
     def _client_seed(self, k: int) -> int:
         return self.fl.seed * 7 + self.round_idx * 131 + k
 
-    def _simulated_times(self, specs, n_steps) -> List[float]:
+    def _simulated_times(self, specs, n_steps,
+                         client_ids: Optional[Sequence[int]] = None
+                         ) -> List[float]:
         """Simulated wall-clock per client: compute + update exchange."""
+        clients = self.clients if client_ids is None \
+            else [self.clients[int(i)] for i in client_ids]
         times = []
-        for client, spec, n in zip(self.clients, specs, n_steps):
+        for client, spec, n in zip(clients, specs, n_steps):
             prof = self.latency.fleet[client.device]
             t = n * self.latency.lookup(spec, client.device) + \
                 prof.comm_latency(2 * self.family.param_bytes(spec))
@@ -127,21 +162,28 @@ class CFLServer:
         return times
 
     def run_round(self) -> Dict:
-        specs = self.sample_submodels()
+        sel = self.tracker.select(self.round_idx)
+        participants = [int(i) for i in sel.participants]
+        specs = self.sample_submodels(
+            None if self.tracker.is_full else participants)
         if self.fl.batched_rounds:
-            accs, times = self._train_round_batched(specs)
+            accs, times = self._train_round_batched(specs, sel)
         else:
-            accs, times = self._train_round_sequential(specs)
+            accs, times = self._train_round_sequential(specs, sel)
 
-        # search-helper update (Alg. 2)
+        # search-helper update (Alg. 2) — participants only: absentees
+        # reported nothing this round
         self.predictor.add_profiles(
-            [(spec, c.quality, acc)
-             for spec, c, acc in zip(specs, self.clients, accs)])
+            [(spec, self.clients[i].quality, acc)
+             for spec, i, acc in zip(specs, participants, accs)])
         mae = self.predictor.train_round(epochs=4)
+        self.tracker.record(participants, accs)
 
         rec = {
             "round": self.round_idx,
             "specs": [self.family.genes(s) for s in specs],
+            "participants": participants,
+            "selection": self.tracker.policy.name,
             "accs": accs,
             "fairness": accuracy_fairness(accs),
             "timing": round_time_fairness(times),
@@ -152,27 +194,56 @@ class CFLServer:
         return rec
 
     # ------------------------------------------------------------------
-    def _train_round_batched(self, specs):
+    def _train_round_batched(self, specs, sel: Optional[Selection] = None):
         """Whole cohort's local train + eval in one compiled program, then
-        one fused aggregate+apply program (fl.engine)."""
-        seeds = [self._client_seed(k) for k in range(len(self.clients))]
-        self.params, accs, n_steps = self.engine.run_fl_round(
-            self.params, specs, self.client_data, self.test_data,
-            [c.n_samples for c in self.clients],
-            batch_size=self.fl.batch_size, epochs=self.fl.local_epochs,
-            seeds=seeds, coverage_norm=self.fl.coverage_norm)
-        return accs, self._simulated_times(specs, n_steps)
+        one fused aggregate+apply program (fl.engine). Full participation
+        (or no selection, for direct callers) takes the legacy path —
+        bit-identical to pre-selection rounds; otherwise the engine runs
+        the fixed-size padded subset."""
+        if sel is None or self.tracker.is_full:
+            seeds = [self._client_seed(k) for k in range(len(self.clients))]
+            self.params, accs, n_steps = self.engine.run_fl_round(
+                self.params, specs, self.client_data, self.test_data,
+                [c.n_samples for c in self.clients],
+                batch_size=self.fl.batch_size, epochs=self.fl.local_epochs,
+                seeds=seeds, coverage_norm=self.fl.coverage_norm)
+            return accs, self._simulated_times(specs, n_steps)
+        # pad per-slot specs with a repeat of slot 0 (weight 0, no steps —
+        # only its mask-table entry is reused, never its update)
+        m = len(sel.idx)
+        specs_pad = list(specs) + [specs[0]] * (m - len(specs))
+        seeds = [self._client_seed(int(i)) for i in sel.idx]
+        self.params, accs_pad, n_steps_pad = self.engine.run_fl_round(
+            self.params, specs_pad, self.client_data, self.test_data,
+            None, batch_size=self.fl.batch_size,
+            epochs=self.fl.local_epochs, seeds=seeds,
+            coverage_norm=self.fl.coverage_norm, participation=sel)
+        accs = sel.take_valid(accs_pad)
+        n_steps = [int(n) for n in sel.take_valid(n_steps_pad)]
+        participants = [int(i) for i in sel.participants]
+        return accs, self._simulated_times(specs, n_steps, participants)
 
-    def _train_round_sequential(self, specs):
+    def _train_round_sequential(self, specs,
+                                sel: Optional[Selection] = None):
         """Per-client extract → train → pad loop (A/B reference) via the
-        family-agnostic SequentialFamilyTrainer."""
-        seeds = [self._client_seed(k) for k in range(len(self.clients))]
+        family-agnostic SequentialFamilyTrainer; a partial cohort is just
+        the participant sub-lists with the selection's aggregation
+        weights."""
+        if sel is None or self.tracker.is_full:
+            ids = list(range(len(self.clients)))
+            sizes = [c.n_samples for c in self.clients]
+        else:
+            ids = [int(i) for i in sel.participants]
+            sizes = [float(w) for w, v in zip(sel.weights, sel.valid)
+                     if v > 0]
+        seeds = [self._client_seed(i) for i in ids]
         self.params, accs, n_steps = self._seq.run_fl_round(
-            self.params, specs, self.client_data, self.test_data,
-            [c.n_samples for c in self.clients],
+            self.params, specs, [self.client_data[i] for i in ids],
+            [self.test_data[i] for i in ids], sizes,
             batch_size=self.fl.batch_size, epochs=self.fl.local_epochs,
             seeds=seeds, coverage_norm=self.fl.coverage_norm)
-        return accs, self._simulated_times(specs, n_steps)
+        return accs, self._simulated_times(
+            specs, n_steps, None if self.tracker.is_full else ids)
 
     def global_accuracy(self, data: Dict) -> float:
         return self.family.evaluate(self.params, data)

@@ -19,6 +19,12 @@ or, for the synthetic heterogeneous populations the experiments use:
 ``algorithm`` selects CFL (default) or the paper's comparison baselines
 ("fedavg", "il") under the identical budget/fleet, so every Table II /
 Fig. 4–5 experiment is the same three-line program.
+
+``selection`` picks the partial-participation client-selection policy
+(``fl.selection``): ``sess.run(rounds=5, selection="fairness")`` runs
+loss-proportional debt-aware cohorts, ``"latency"`` drops predicted
+stragglers, ``"uniform"`` is the classic random m-of-K, and ``"full"``
+(default) is the paper's everyone-every-round regime.
 """
 from __future__ import annotations
 
@@ -36,8 +42,29 @@ from repro.fl.server import CFLConfig, CFLServer
 ALGORITHMS = ("cfl", "fedavg", "il")
 
 
+def _reject_il_selection(selection) -> None:
+    """IL has no rounds/aggregation to subsample — fail loudly instead of
+    silently running a different participation regime than requested."""
+    from repro.fl.selection import FullParticipation, resolve_policy
+    if not isinstance(resolve_policy(selection), FullParticipation):
+        raise ValueError(
+            "IL has no rounds/aggregation to subsample — selection only "
+            "applies to cfl/fedavg (use selection='full' for IL)")
+
+
 class CFLSession:
-    """Family + fleet + data in; history/fairness out."""
+    """Family + fleet + data in; history/fairness out.
+
+    What you pass: a family config (``CNNConfig`` / zoo ``ModelConfig``)
+    or an ``ElasticFamily`` instance; per-client ``ClientInfo`` metadata
+    with matching train/test data dicts; optionally a ``CFLConfig`` (round
+    hyperparameters + the ``batched_rounds`` / ``cohort_shards`` /
+    ``elastic_kernels`` / ``selection`` knobs), initial parent ``params``,
+    and the ``algorithm``. What you get back: ``run(rounds)`` returns the
+    per-round ``history`` (accs / fairness / timing / participants);
+    ``fairness()`` summarises the last round; ``params`` is the aggregated
+    parent (cfl/fedavg).
+    """
 
     def __init__(self, cfg, clients: List[ClientInfo],
                  client_data: List[Dict], test_data: List[Dict],
@@ -49,6 +76,8 @@ class CFLSession:
         self.family: ElasticFamily = family_for(cfg)
         self.fl = fl_cfg if fl_cfg is not None else \
             CFLConfig(n_workers=len(clients))
+        if algorithm == "il":
+            _reject_il_selection(self.fl.selection)
         self.algorithm = algorithm
         self.clients = clients
         self.client_data = client_data
@@ -75,11 +104,14 @@ class CFLSession:
                        heterogeneity: str = "quality",
                        fl_cfg: Optional[CFLConfig] = None,
                        algorithm: str = "cfl", seed: int = 0,
-                       cohort_shards: int = 1) -> "CFLSession":
+                       cohort_shards: int = 1,
+                       selection=None) -> "CFLSession":
         """Build the paper's synthetic heterogeneous population (devices ×
         quality × distribution) for any family and wrap it in a session.
         ``kind`` defaults per family: image classification for the CNN,
-        the Markov LM scenario ("synthlm") for the transformer zoo."""
+        the Markov LM scenario ("synthlm") for the transformer zoo.
+        ``selection`` (optional) sets the client-selection policy on the
+        config — same values as ``run(..., selection=...)``."""
         from repro.fl.rounds import build_population
         if fl_cfg is None:
             fl_cfg = CFLConfig(n_workers=n_workers, seed=seed,
@@ -87,6 +119,8 @@ class CFLSession:
         elif cohort_shards != 1:
             fl_cfg = dataclasses.replace(fl_cfg,
                                          cohort_shards=cohort_shards)
+        if selection is not None:
+            fl_cfg = dataclasses.replace(fl_cfg, selection=selection)
         family = family_for(cfg)
         clients, cdata, tdata = build_population(
             family, kind=kind, n_workers=n_workers, n_samples=n_samples,
@@ -99,9 +133,25 @@ class CFLSession:
                    algorithm=algorithm)
 
     # ------------------------------------------------------------------
-    def run(self, rounds: int) -> List[Dict]:
-        """Run ``rounds`` FL rounds (IL: the same local budget with no
-        aggregation, recorded as one history entry). Returns history."""
+    def run(self, rounds: int, selection=None) -> List[Dict]:
+        """Run ``rounds`` FL rounds and return the history.
+
+        What you pass: ``rounds`` (int); optionally ``selection`` — a
+        policy name ('full' | 'uniform' | 'fairness' | 'latency') or an
+        ``fl.selection.SelectionPolicy`` instance — to set the
+        partial-participation policy for these (and subsequent) rounds.
+        What you get back: the per-round history list; each entry carries
+        ``accs`` / ``fairness`` / ``timing`` / ``participants`` /
+        ``selection`` (cfl also ``specs`` and ``predictor_mae``).
+
+        IL runs the same local budget with no aggregation, recorded as
+        one history entry; partial participation is a rounds concept, so
+        IL rejects any non-full selection."""
+        if selection is not None:
+            if self.algorithm == "il":
+                _reject_il_selection(selection)
+            else:
+                self.server.set_selection(selection)
         if self.algorithm == "il":
             if self._il_history:
                 # IL trains each client from the initial parent for the

@@ -198,4 +198,12 @@ class KernelDispatch:
 
 
 def kernel_dispatch(backend: Optional[str] = "auto") -> KernelDispatch:
+    """Resolve a backend name to a :class:`KernelDispatch`.
+
+    What you pass: 'auto' (default — compiled Pallas on TPU hosts, the
+    CPU-safe Pallas interpreter elsewhere), 'tpu', 'interpret', or 'xla'
+    (no kernels: the dense masked A/B baseline). ``True``/``None`` mean
+    'auto'. What you get back: a dispatch whose ``table(family)`` returns
+    the per-op callables a family's masked forward consumes (``None`` for
+    'xla'). Raises ValueError on unknown names."""
     return KernelDispatch(resolve_backend(backend))
