@@ -27,7 +27,13 @@ Engine knobs (CFLConfig):
   --selection P      client-selection policy for partial-participation
                      rounds (CFLConfig.selection / fl.selection):
                      full (default, the paper's everyone-every-round
-                     regime) | uniform | fairness | latency.
+                     regime) | uniform | fairness | latency;
+  --mode M           round scheduling (CFLConfig.mode): sync (barrier
+                     rounds, default) | async (event-driven buffered
+                     rounds over fl.runtime.FleetRuntime — FedBuff
+                     staleness-decayed aggregation whenever
+                     CFLConfig.async_buffer deltas arrive; IL has no
+                     rounds to schedule and always runs sync).
 """
 import argparse
 import sys
@@ -51,6 +57,9 @@ ap.add_argument("--selection",
                 choices=("full", "uniform", "fairness", "latency"),
                 default="full",
                 help="client-selection policy (partial participation)")
+ap.add_argument("--mode", choices=("sync", "async"), default="sync",
+                help="round scheduling: barrier rounds vs event-driven "
+                     "buffered-async rounds (fl.runtime)")
 ap.add_argument("--rounds", type=int, default=5)
 args = ap.parse_args()
 
@@ -69,14 +78,16 @@ else:
 
 fl = CFLConfig(n_workers=n_workers, local_epochs=epochs, batch_size=bs,
                lr=lr, seed=0, batched_rounds=(args.engine == "batched"),
-               cohort_shards=args.shards, selection=args.selection)
+               cohort_shards=args.shards, selection=args.selection,
+               mode=args.mode)
 
 
 def session(algorithm, het, fl_cfg=fl):
     if algorithm == "il":
-        # IL has no rounds to subsample: it always trains the whole fleet
-        # (the session would reject a partial selection outright)
-        fl_cfg = dataclasses.replace(fl_cfg, selection="full")
+        # IL has no rounds to subsample or schedule: it always trains the
+        # whole fleet in one sync shot (the session would reject a partial
+        # selection or async mode outright)
+        fl_cfg = dataclasses.replace(fl_cfg, selection="full", mode="sync")
     return CFLSession.from_synthetic(
         family, n_workers=n_workers, n_samples=n_samples,
         heterogeneity=het, fl_cfg=fl_cfg, algorithm=algorithm)

@@ -104,3 +104,143 @@ def aggregate_apply(params, stacked_deltas, stacked_coverages, weights, *,
         delta_t = jax.tree.map(plain, stacked_deltas)
     return jax.tree.map(lambda p, d: (p - d).astype(p.dtype), params,
                         delta_t)
+
+
+# ---------------------------------------------------------------------------
+# buffered (FedBuff-style) aggregation: partial sums a server can hold
+# ---------------------------------------------------------------------------
+def staleness_scale(staleness: float, decay: float) -> float:
+    """FedBuff staleness discount ``(1+s)^-decay`` for a delta trained
+    against a server snapshot ``s`` versions old. ``decay=0.5`` is the
+    paper-standard ``1/sqrt(1+s)``; ``decay=0`` disables discounting
+    (async with a full buffer then reproduces sync exactly). Host-side
+    scalar: staleness is uniform per dispatch group (every slot trained
+    against the same snapshot), so the discount never enters the
+    per-leaf program shape."""
+    return float((1.0 + float(staleness)) ** (-float(decay)))
+
+
+@functools.partial(jax.jit, static_argnames=("coverage_norm",))
+def cohort_reduce(stacked_deltas, stacked_coverages, weights, *,
+                  coverage_norm: bool = False, participation=None,
+                  scale=1.0):
+    """Reduce one completed dispatch group to its aggregation partial
+    sums: ``(num, den)`` where ``num`` is the fp32 weighted delta sum per
+    leaf and ``den`` is the matching coverage-weight sum per leaf
+    (``coverage_norm``) or the scalar participating weight mass. ``scale``
+    is the group's staleness discount (:func:`staleness_scale`) — a
+    runtime input, so staleness churn never recompiles.
+
+    Partial sums are what a buffered-async server can *hold*: groups
+    completing at different sim-times tree-add (:func:`buffer_add`) into
+    one running buffer, and :func:`buffer_apply` turns the buffer into a
+    server step whenever B deltas have arrived. The compiled-program
+    count stays bounded (reduce/add/apply — one each per family) no
+    matter how completion order interleaves.
+    """
+    w = weights.astype(jnp.float32)
+    if participation is not None:
+        w = w * participation.astype(jnp.float32)
+    w = w * scale
+
+    def num_leaf(d):
+        wd = w.reshape((-1,) + (1,) * (d.ndim - 1))
+        return jnp.sum(d.astype(jnp.float32) * wd, 0)
+
+    num = jax.tree.map(num_leaf, stacked_deltas)
+    if coverage_norm:
+        den = jax.tree.map(num_leaf, stacked_coverages)
+    else:
+        den = jnp.sum(w)
+    return num, den
+
+
+@jax.jit
+def buffer_add(acc, update):
+    """Fold a group's ``(num, den)`` partial sums into the running
+    buffer (leafwise add — works for both den variants)."""
+    return jax.tree.map(jnp.add, acc, update)
+
+
+@functools.partial(jax.jit, static_argnames=("coverage_norm",))
+def buffer_apply(params, num, den, *, coverage_norm: bool = False,
+                 eps: float = 1e-8):
+    """Serve the buffered update: Δ = num/max(den, eps) (leafwise under
+    coverage_norm, scalar mass otherwise), then ω ← ω − Δ. With a single
+    group holding the full cohort this reproduces ``aggregate_apply``."""
+    if coverage_norm:
+        delta_t = jax.tree.map(lambda n, d: n / jnp.maximum(d, eps),
+                               num, den)
+    else:
+        delta_t = jax.tree.map(lambda n: n / jnp.maximum(den, eps), num)
+    return jax.tree.map(lambda p, d: (p - d).astype(p.dtype), params,
+                        delta_t)
+
+
+# ---------------------------------------------------------------------------
+# hierarchical aggregation: per-shard partial sums + one collective
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _hierarchical_program(mesh, coverage_norm: bool, has_participation: bool):
+    """Compile the sharded aggregate+apply for one (mesh, flags) combo.
+
+    Each cohort shard reduces its resident clients to local partial sums
+    (never materialising the full stacked tree on one device), then a
+    single ``psum`` over the whole ``(num, den)`` pytree crosses the
+    'cohort' axis once — the flat mean's reduce-scatter/all-gather pair
+    becomes one explicit collective, which is the shape that scales to
+    the multi-host fleet (ROADMAP item 1).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    rep, sh = P(), P("cohort")
+
+    def local(params, stacked_deltas, stacked_coverages, w):
+        def num_leaf(d):
+            wd = w.reshape((-1,) + (1,) * (d.ndim - 1))
+            return jnp.sum(d.astype(jnp.float32) * wd, 0)
+        num = jax.tree.map(num_leaf, stacked_deltas)
+        den = jax.tree.map(num_leaf, stacked_coverages) if coverage_norm \
+            else jnp.sum(w)
+        num, den = jax.lax.psum((num, den), "cohort")
+        if coverage_norm:
+            delta_t = jax.tree.map(lambda n, d: n / jnp.maximum(d, 1e-8),
+                                   num, den)
+        else:
+            delta_t = jax.tree.map(lambda n: n / jnp.maximum(den, 1e-8),
+                                   num)
+        return jax.tree.map(lambda p, d: (p - d).astype(p.dtype), params,
+                            delta_t)
+
+    inner = shard_map(local, mesh=mesh, in_specs=(rep, sh, sh, sh),
+                      out_specs=rep)
+
+    def run(params, stacked_deltas, stacked_coverages, weights,
+            participation):
+        w = weights.astype(jnp.float32)
+        if has_participation:
+            w = w * participation.astype(jnp.float32)
+        return inner(params, stacked_deltas, stacked_coverages, w)
+
+    return jax.jit(run)
+
+
+def aggregate_apply_hierarchical(params, stacked_deltas, stacked_coverages,
+                                 weights, *, mesh,
+                                 coverage_norm: bool = False,
+                                 participation=None):
+    """Sharded twin of :func:`aggregate_apply`: same signature plus the
+    cohort ``mesh``; numerics match the flat mean ≤1e-5 (same fp32
+    partial sums, different reduction order). Requires the stacked client
+    axis to divide the mesh (``sharding.cohort.effective_cohort_shards``
+    guarantees it)."""
+    fn = _hierarchical_program(mesh, bool(coverage_norm),
+                               participation is not None)
+    if not coverage_norm:
+        stacked_coverages = jax.tree.map(
+            lambda d: jnp.zeros((d.shape[0], 1), jnp.float32),
+            stacked_deltas)
+    if participation is None:
+        participation = jnp.ones_like(weights)
+    return fn(params, stacked_deltas, stacked_coverages, weights,
+              participation)

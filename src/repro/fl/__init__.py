@@ -5,9 +5,10 @@ from repro.fl.engine import (BatchedRoundEngine, CohortResult,
 from repro.fl.server import CFLConfig, CFLServer
 from repro.fl.baselines import FedAvgServer, independent_learning
 from repro.fl.session import CFLSession
-from repro.fl.selection import (FairnessSelection, FleetState, FleetTracker,
-                                FullParticipation, LatencySelection,
-                                Selection, SelectionPolicy,
+from repro.fl.selection import (FairnessSelection, FleetArrays, FleetState,
+                                FleetTracker, FullParticipation,
+                                LatencySelection, Selection, SelectionPolicy,
                                 SELECTION_POLICIES, UniformSelection,
                                 resolve_policy)
+from repro.fl.runtime import FleetRuntime, InFlightCohort
 from repro.fl.rounds import build_population, run_cfl, run_fedavg, run_il

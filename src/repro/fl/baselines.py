@@ -10,6 +10,8 @@ from __future__ import annotations
 
 from typing import Dict, List
 
+import numpy as np
+
 from repro.core.elastic import family_for
 from repro.core.fairness import accuracy_fairness, round_time_fairness
 from repro.core.latency import LatencyTable
@@ -39,9 +41,12 @@ class FedAvgServer:
                                     batch_size=fl_cfg.batch_size)
         self.tracker = FleetTracker(
             clients, getattr(fl_cfg, "selection", "full"),
-            seed=fl_cfg.seed, predicted_times_fn=self._predict_round_times)
+            seed=fl_cfg.seed, predicted_times_fn=self._predict_round_times,
+            rng_mode=getattr(fl_cfg, "selection_rng", "seedseq"))
         self.round_idx = 0
         self.history: List[Dict] = []
+        self._runtime = None
+        self._sim_clock = 0.0
         if fl_cfg.batched_rounds:
             self._runner = BatchedRoundEngine(
                 self.family, lr=fl_cfg.lr, momentum=fl_cfg.momentum,
@@ -57,12 +62,58 @@ class FedAvgServer:
         """Swap the client-selection policy for the rounds that follow."""
         self.tracker.set_policy(selection)
 
+    def set_mode(self, mode: str) -> None:
+        """'sync' (barrier rounds) | 'async' (event-driven buffered
+        rounds over fl.runtime.FleetRuntime) for the rounds that follow."""
+        if mode not in ("sync", "async"):
+            raise ValueError(f"mode must be 'sync' or 'async', "
+                             f"got {mode!r}")
+        self.fl.mode = mode
+
+    @property
+    def runtime(self):
+        """Shared event-driven runtime (fl.runtime.FleetRuntime) — FedAvg
+        is the thin policy where every dispatch trains the full spec and
+        there is no search-helper to update."""
+        if self._runtime is None:
+            from repro.fl.runtime import FleetRuntime
+            self._runtime = FleetRuntime(
+                self, buffer_size=getattr(self.fl, "async_buffer", None),
+                staleness_decay=getattr(self.fl, "staleness_decay", 0.5))
+        return self._runtime
+
     def _predict_round_times(self) -> List[float]:
         return predict_full_round_times(
             self.family, self.clients, self.latency,
             batch_size=self.fl.batch_size, epochs=self.fl.local_epochs)
 
+    # -- runtime hooks -----------------------------------------------------
+    def _client_seed(self, k: int) -> int:
+        return self.fl.seed * 7 + self.round_idx * 131 + k
+
+    def cohort_specs(self, participants=None) -> List:
+        n = len(self.clients) if participants is None else len(participants)
+        return [self.family.full_spec()] * n
+
+    def post_aggregate(self, specs, participants, accs) -> Dict:
+        return {}
+
+    def _simulated_times(self, specs, n_steps, client_ids=None
+                         ) -> List[float]:
+        """Simulated wall-clock per client: compute + update exchange."""
+        clients = self.clients if client_ids is None \
+            else [self.clients[int(i)] for i in client_ids]
+        times = []
+        for client, spec, n in zip(clients, specs, n_steps):
+            prof = self.latency.fleet[client.device]
+            times.append(float(
+                n * self.latency.lookup(spec, client.device) +
+                prof.comm_latency(2 * self.family.param_bytes(spec))))
+        return times
+
     def run_round(self) -> Dict:
+        if getattr(self.fl, "mode", "sync") == "async":
+            return self.runtime.run_until_aggregate()
         spec = self.family.full_spec()
         sel = self.tracker.select(self.round_idx)
         participants = [int(i) for i in sel.participants]
@@ -98,18 +149,21 @@ class FedAvgServer:
                 epochs=self.fl.local_epochs, seeds=seeds)
         self.tracker.record(participants, accs)
 
-        times = []
-        for i, n_steps in zip(participants, n_steps_all):
-            client = self.clients[i]
-            prof = self.latency.fleet[client.device]
-            times.append(
-                n_steps * self.latency.lookup(spec, client.device) +
-                prof.comm_latency(2 * self.family.param_bytes(spec)))
+        times = self._simulated_times([spec] * len(participants),
+                                      n_steps_all, participants)
+        barrier = max(times) if times else 0.0
+        self._sim_clock += barrier
         rec = {"round": self.round_idx, "accs": accs,
                "participants": participants,
                "selection": self.tracker.policy.name,
                "fairness": accuracy_fairness(accs),
-               "timing": round_time_fairness(times)}
+               "timing": round_time_fairness(times),
+               "staleness": 0.0,
+               "aggregate_lag": float(np.mean([barrier - t
+                                               for t in times]))
+               if times else 0.0,
+               "sim_clock": self._sim_clock,
+               "mode": "sync"}
         self.history.append(rec)
         self.round_idx += 1
         return rec

@@ -427,25 +427,37 @@ class BatchedRoundEngine:
         aggregation weights, and padding slots contribute neither updates
         nor coverage. Returns (new_params, accs, n_steps) — with
         participation these are per-slot; filter by ``participation.valid``
-        for the real cohort members."""
-        from repro.core.aggregate import aggregate_apply
+        for the real cohort members.
+
+        When the engine runs cohort-sharded the reduction routes through
+        ``aggregate_apply_hierarchical``: per-shard partial sums + one
+        explicit pytree collective over the 'cohort' axis, instead of
+        relying on GSPMD to split the flat mean (≤1e-5 vs the flat path —
+        same fp32 partial sums, different reduction order)."""
+        from repro.core.aggregate import (aggregate_apply,
+                                          aggregate_apply_hierarchical)
         theta0 = self.broadcast_params(params, len(specs))
         res = self.train_cohort(theta0, specs, datasets,
                                 batch_size=batch_size, epochs=epochs,
                                 seeds=seeds, eval_datasets=test_datasets,
                                 participation=participation)
         covs = res.masks.param_mask if coverage_norm else None
+        sh = self.cohort_sharding(len(specs))
         if participation is None:
-            new_params = aggregate_apply(
-                params, res.deltas, covs, jnp.asarray(sizes, jnp.float32),
-                coverage_norm=coverage_norm)
+            weights = jnp.asarray(sizes, jnp.float32)
+            part = None
+        else:
+            weights = jnp.asarray(
+                np.asarray(participation.weights, np.float32))
+            part = jnp.asarray(np.asarray(participation.valid, np.float32))
+        if sh is not None:
+            new_params = aggregate_apply_hierarchical(
+                params, res.deltas, covs, weights, mesh=sh.mesh,
+                coverage_norm=coverage_norm, participation=part)
         else:
             new_params = aggregate_apply(
-                params, res.deltas, covs,
-                jnp.asarray(np.asarray(participation.weights, np.float32)),
-                coverage_norm=coverage_norm,
-                participation=jnp.asarray(
-                    np.asarray(participation.valid, np.float32)))
+                params, res.deltas, covs, weights,
+                coverage_norm=coverage_norm, participation=part)
         return new_params, [float(a) for a in res.accs], res.n_steps
 
     def eval_cohort(self, params_stacked, specs: Sequence,

@@ -1,0 +1,359 @@
+"""Event-driven fleet runtime: the async control plane for CFL/FedAvg.
+
+The paper's server (Alg. 4) is lock-step — select, train a cohort, wait
+for the barrier, aggregate. Production fleets never synchronize:
+stragglers dominate the barrier exactly where the fairness story matters.
+This module replaces the blocking round loop with a **tick machine** over
+three event kinds driven by the simulated two-term latency clock
+(``core.latency``):
+
+``dispatch``    select a cohort among non-pending clients, run its local
+                training through the batched engine (the *compute* happens
+                eagerly; the *simulation* spreads the results over the
+                clock), schedule one ``complete`` per participant at its
+                simulated finish time, and flag the cohort pending.
+``complete``    a client's delta "arrives": host-side bookkeeping only —
+                mark the slot done, fold its accuracy into the tracker.
+                When the number of arrived-but-unapplied deltas reaches
+                the buffer size B, schedule an ``aggregate``.
+``aggregate``   FedBuff-style buffered server step: every arrived delta
+                is reduced group-by-group (one ``cohort_reduce`` partial
+                sum per in-flight cohort, discounted by the staleness
+                decay ``(1+s)^-a`` of *its* dispatch snapshot), the
+                buffer is applied in one ``buffer_apply``, the server
+                version advances, and the next ``dispatch`` is scheduled.
+
+Numerics contract (tests/test_async_runtime.py): with buffer = cohort
+size and zero staleness the aggregate fires exactly at the barrier with a
+single fully-complete group — the runtime detects that case and routes
+through the *same* fused ``aggregate_apply`` program as the sync path, so
+``mode="async"`` at the sync operating point reproduces the sync engine
+bit-for-bit (the ≤1e-5 acceptance bound holds with margin). Under real
+async operation (B < cohort, staleness > 0) the buffered path uses
+``cohort_reduce``/``buffer_add``/``buffer_apply`` — three more jitted
+programs compiled once each, never per-round: the engine's
+2-compiled-programs-per-round invariant survives as a bounded program
+count under arbitrary completion interleavings.
+
+Staleness is **uniform per dispatch group** (every slot of a dispatch
+trained against the same server snapshot), so the decay is a host scalar
+per group and never enters the compiled program shapes. Per-client
+staleness/pending columns live device-resident in
+``fl.selection.FleetArrays`` for observability and selection.
+
+Servers stay thin policies over this runtime: they provide cohort specs
+(``cohort_specs``), per-client seeds (``_client_seed``), the simulated
+times (``_simulated_times``), and a ``post_aggregate`` hook (CFL's
+predictor update; FedAvg's no-op).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregate import (aggregate_apply,
+                                  aggregate_apply_hierarchical, buffer_add,
+                                  buffer_apply, cohort_reduce,
+                                  staleness_scale)
+from repro.core.fairness import accuracy_fairness, round_time_fairness
+from repro.fl.selection import FleetState, Selection, _pad_selection
+
+DISPATCH, COMPLETE, AGGREGATE = "dispatch", "complete", "aggregate"
+
+
+@dataclasses.dataclass
+class InFlightCohort:
+    """One dispatched cohort's resident state while its deltas stream in.
+
+    ``deltas``/``covs`` keep the engine's stacked (M, ...) layout on
+    device until every valid slot has been consumed by an aggregate —
+    per-slot reduction at aggregate time is a masked ``cohort_reduce``
+    over this block, so completion order never forces a device gather.
+    """
+    version: int              # server version at dispatch (staleness base)
+    dispatch_t: float
+    sel: Selection
+    specs: List               # per-slot specs (padding repeats slot 0)
+    deltas: object            # stacked (M, ...) pytree
+    covs: Optional[object]    # stacked masks (coverage_norm) or None
+    weights: jnp.ndarray      # (M,) aggregation weights
+    accs: np.ndarray          # (M,) local-eval accuracies
+    n_steps: np.ndarray       # (M,) local steps (timing model)
+    times: np.ndarray         # (M,) simulated per-slot latency
+    completed: np.ndarray     # (M,) bool — delta arrived
+    consumed: np.ndarray      # (M,) bool — delta aggregated
+    complete_t: np.ndarray    # (M,) arrival clock (aggregate-lag metric)
+    full_parity: bool         # dispatched through the full-fleet path
+
+    def pending_slots(self) -> np.ndarray:
+        """Valid slots whose delta has arrived but not been applied."""
+        return np.flatnonzero(self.completed & ~self.consumed
+                              & (self.sel.valid > 0))
+
+    def all_consumed(self) -> bool:
+        return bool(np.all(self.consumed[self.sel.valid > 0]))
+
+
+class FleetRuntime:
+    """The buffered-async tick machine shared by CFLServer/FedAvgServer.
+
+    ``buffer_size`` B: apply the server step whenever B deltas have
+    arrived (None = the dispatch cohort size, i.e. the sync barrier).
+    ``staleness_decay`` a: discount a delta dispatched s versions ago by
+    ``(1+s)^-a`` (0 disables; 0.5 is FedBuff's ``1/sqrt(1+s)``).
+
+    Drive it with ``tick()`` (one event; returns the history record when
+    the event was an aggregate, else None) or ``run_until_aggregate()``
+    (one server version — the async analogue of ``run_round``).
+    """
+
+    def __init__(self, server, *, buffer_size: Optional[int] = None,
+                 staleness_decay: float = 0.5):
+        if getattr(server, "engine", None) is None:
+            raise ValueError(
+                "FleetRuntime requires the batched engine "
+                "(batched_rounds=True); the sequential loop stays the "
+                "sync A/B reference")
+        self.server = server
+        self.engine = server.engine
+        self.tracker = server.tracker
+        self.buffer_size = buffer_size
+        self.staleness_decay = float(staleness_decay)
+        self.clock = 0.0
+        self.groups: List[InFlightCohort] = []
+        self._events: List[Tuple[float, int, str, tuple]] = []
+        self._seq = 0
+        self._agg_scheduled = False
+        self._cohort_slots = None       # last dispatch's participant count
+        self._push(0.0, DISPATCH, ())
+
+    # -- event plumbing ----------------------------------------------------
+    def _push(self, t: float, kind: str, payload: tuple):
+        heapq.heappush(self._events, (float(t), self._seq, kind, payload))
+        self._seq += 1
+
+    def _buffered(self) -> int:
+        return int(sum(len(g.pending_slots()) for g in self.groups))
+
+    def _effective_buffer(self) -> int:
+        if self.buffer_size is not None:
+            return max(1, int(self.buffer_size))
+        return max(1, int(self._cohort_slots or 1))
+
+    def tick(self) -> Optional[Dict]:
+        """Process one event; returns the aggregate's history record when
+        one fired. Deadlock guards: a drained queue with arrived deltas
+        flushes an aggregate (B never reached — e.g. B > cohort); a fully
+        idle fleet re-dispatches."""
+        if not self._events:
+            if self._buffered() > 0:
+                self._push(self.clock, AGGREGATE, ())
+            elif not self.tracker.pending_mask().any():
+                self._push(self.clock, DISPATCH, ())
+            else:                        # pragma: no cover - defensive
+                raise RuntimeError("runtime stalled: pending deltas with "
+                                    "no scheduled events")
+        t, _, kind, payload = heapq.heappop(self._events)
+        self.clock = max(self.clock, t)
+        if kind == DISPATCH:
+            self._on_dispatch(t)
+            return None
+        if kind == COMPLETE:
+            self._on_complete(t, *payload)
+            return None
+        return self._on_aggregate(t)
+
+    def run_until_aggregate(self, max_ticks: int = 100_000) -> Dict:
+        """Advance the clock until one server step applies — the async
+        analogue of one ``run_round``."""
+        for _ in range(max_ticks):
+            rec = self.tick()
+            if rec is not None:
+                return rec
+        raise RuntimeError(f"no aggregate within {max_ticks} ticks")
+
+    # -- dispatch ----------------------------------------------------------
+    def _select_available(self, round_idx: int,
+                          avail: np.ndarray) -> Selection:
+        """Run the selection policy over the non-pending sub-fleet and
+        re-pad to the fleet-fixed slot count, so in-flight clients are
+        never re-dispatched and the engine's compiled shapes never churn
+        with availability."""
+        tracker, server = self.tracker, self.server
+        avail_ids = np.flatnonzero(avail)
+        m_fleet = tracker.policy.cohort_size(len(server.clients))
+        full = tracker.state(round_idx)
+        times = None if full.predicted_times is None else \
+            np.asarray(full.predicted_times)[avail_ids]
+        sub = FleetState([server.clients[int(i)] for i in avail_ids],
+                         round_idx, full.last_accs[avail_ids],
+                         full.participation_counts[avail_ids], times)
+        sub_sel = tracker.policy.select(sub, tracker._round_rng(round_idx))
+        local = sub_sel.participants
+        weights = [float(w) for w, v in zip(sub_sel.weights, sub_sel.valid)
+                   if v > 0]
+        return _pad_selection([int(avail_ids[i]) for i in local], weights,
+                              m_fleet)
+
+    def _on_dispatch(self, t: float) -> None:
+        server, fl = self.server, self.server.fl
+        avail = ~self.tracker.pending_mask()
+        if not avail.any():
+            return                      # next aggregate re-dispatches
+        r = server.round_idx
+        all_avail = bool(avail.all())
+        if all_avail:
+            sel = self.tracker.select(r)
+        else:
+            sel = self._select_available(r, avail)
+        participants = [int(i) for i in sel.participants]
+        full_parity = self.tracker.is_full and all_avail and \
+            len(participants) == len(server.clients)
+        specs_real = server.cohort_specs(None if full_parity
+                                         else participants)
+        if full_parity:
+            specs_slots = list(specs_real)
+            seeds = [server._client_seed(k)
+                     for k in range(len(server.clients))]
+            weights = jnp.asarray([c.n_samples for c in server.clients],
+                                  jnp.float32)
+            participation = None
+        else:
+            m = len(sel.idx)
+            specs_slots = list(specs_real) + \
+                [specs_real[0]] * (m - len(specs_real))
+            seeds = [server._client_seed(int(i)) for i in sel.idx]
+            weights = jnp.asarray(np.asarray(sel.weights, np.float32))
+            participation = sel
+        theta0 = self.engine.broadcast_params(server.params,
+                                              len(specs_slots))
+        res = self.engine.train_cohort(
+            theta0, specs_slots, server.client_data,
+            batch_size=fl.batch_size, epochs=fl.local_epochs, seeds=seeds,
+            eval_datasets=server.test_data, participation=participation)
+        covs = res.masks.param_mask if fl.coverage_norm else None
+
+        m = len(sel.idx)
+        n_steps_valid = [int(n) for n in sel.take_valid(res.n_steps)]
+        times_valid = server._simulated_times(
+            specs_real, n_steps_valid, None if full_parity else participants)
+        times = np.zeros((m,), np.float64)
+        times[np.flatnonzero(sel.valid > 0)] = times_valid
+        group = InFlightCohort(
+            version=r, dispatch_t=t, sel=sel, specs=specs_slots,
+            deltas=res.deltas, covs=covs, weights=weights,
+            accs=np.asarray(res.accs), n_steps=np.asarray(res.n_steps),
+            times=times, completed=np.zeros((m,), bool),
+            consumed=np.zeros((m,), bool),
+            complete_t=np.zeros((m,), np.float64),
+            full_parity=full_parity)
+        gi = len(self.groups)
+        self.groups.append(group)
+        self._cohort_slots = len(participants)
+        self.tracker.mark_pending(participants)
+        for slot in np.flatnonzero(sel.valid > 0):
+            self._push(t + times[slot], COMPLETE, (gi, int(slot)))
+
+    # -- complete ----------------------------------------------------------
+    def _on_complete(self, t: float, gi: int, slot: int) -> None:
+        g = self.groups[gi]
+        g.completed[slot] = True
+        g.complete_t[slot] = t
+        self.tracker.record([int(g.sel.idx[slot])],
+                            [float(g.accs[slot])])
+        if not self._agg_scheduled and \
+                self._buffered() >= self._effective_buffer():
+            self._agg_scheduled = True
+            self._push(t, AGGREGATE, ())
+
+    # -- aggregate ---------------------------------------------------------
+    def _apply_buffered(self, contribs) -> None:
+        """The FedBuff step: per-group masked partial sums (scaled by each
+        group's staleness discount), tree-added, applied once."""
+        server, fl = self.server, self.server.fl
+        r = server.round_idx
+        total = None
+        for g, slots in contribs:
+            mask = np.zeros((len(g.sel.idx),), np.float32)
+            mask[slots] = 1.0
+            scale = staleness_scale(r - g.version, self.staleness_decay)
+            nd = cohort_reduce(g.deltas, g.covs, g.weights,
+                               coverage_norm=fl.coverage_norm,
+                               participation=jnp.asarray(mask),
+                               scale=jnp.float32(scale))
+            total = nd if total is None else buffer_add(total, nd)
+        server.params = buffer_apply(server.params, *total,
+                                     coverage_norm=fl.coverage_norm)
+
+    def _apply_exact(self, g: InFlightCohort) -> None:
+        """Sync operating point (one fresh, fully-complete group): route
+        through the same fused program as the sync path — bit-identical
+        to ``run_round`` in sync mode."""
+        server, fl = self.server, self.server.fl
+        part = None if g.full_parity else \
+            jnp.asarray(np.asarray(g.sel.valid, np.float32))
+        sh = self.engine.cohort_sharding(len(g.sel.idx))
+        if sh is not None:
+            server.params = aggregate_apply_hierarchical(
+                server.params, g.deltas, g.covs, g.weights, mesh=sh.mesh,
+                coverage_norm=fl.coverage_norm, participation=part)
+        else:
+            server.params = aggregate_apply(
+                server.params, g.deltas, g.covs, g.weights,
+                coverage_norm=fl.coverage_norm, participation=part)
+
+    def _on_aggregate(self, t: float) -> Optional[Dict]:
+        self._agg_scheduled = False
+        server = self.server
+        contribs = [(g, g.pending_slots()) for g in self.groups
+                    if len(g.pending_slots())]
+        if not contribs:
+            return None
+        r = server.round_idx
+        exact = (len(contribs) == 1
+                 and r == contribs[0][0].version
+                 and contribs[0][0].completed[
+                     contribs[0][0].sel.valid > 0].all()
+                 and not contribs[0][0].consumed.any())
+        if exact:
+            self._apply_exact(contribs[0][0])
+        else:
+            self._apply_buffered(contribs)
+
+        # host bookkeeping: consume slots, free finished groups
+        participants, accs, times, specs, lags, stale = [], [], [], [], [], []
+        for g, slots in contribs:
+            g.consumed[slots] = True
+            ids = [int(g.sel.idx[s]) for s in slots]
+            participants.extend(ids)
+            accs.extend(float(g.accs[s]) for s in slots)
+            times.extend(float(g.times[s]) for s in slots)
+            specs.extend(g.specs[s] for s in slots)
+            lags.extend(t - float(g.complete_t[s]) for s in slots)
+            stale.extend([r - g.version] * len(slots))
+            self.tracker.clear_pending(ids)
+        self.groups = [g for g in self.groups if not g.all_consumed()]
+
+        server.round_idx += 1
+        self.tracker.bump_staleness()
+        rec = {
+            "round": r,
+            "participants": participants,
+            "selection": self.tracker.policy.name,
+            "accs": accs,
+            "fairness": accuracy_fairness(accs),
+            "timing": round_time_fairness(times),
+            "staleness": float(np.mean(stale)),
+            "aggregate_lag": float(np.mean(lags)),
+            "sim_clock": float(t),
+            "buffered": len(participants),
+            "mode": "async",
+        }
+        rec.update(server.post_aggregate(specs, participants, accs))
+        server.history.append(rec)
+        self._push(t, DISPATCH, ())
+        return rec

@@ -39,16 +39,83 @@ the instance (or register a name) as ``CFLConfig.selection`` /
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Sequence, Type, Union
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.fl.client import ClientInfo
+
+# fleets at least this large auto-route FleetTracker.select through the
+# jitted device path (gumbel-top-k over array scores) instead of the
+# numpy policies — Python loops over ClientInfo don't survive K=10^5
+DEVICE_SELECT_THRESHOLD = 4096
 
 
 # ---------------------------------------------------------------------------
 # state the server maintains for the policies
 # ---------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FleetArrays:
+    """Device-resident fleet state: one (K,) jnp array per column.
+
+    This is the vectorized backbone of :class:`FleetTracker` — selection
+    scores, staleness decay, and pending-delta bookkeeping all run as
+    array programs over these columns, so fleet state scales to
+    K=10^5–10^6 clients with no Python loop over ``ClientInfo``. It is a
+    registered pytree, so jitted policy programs take it as a plain
+    argument. ``predicted_times`` uses NaN for "never predicted";
+    ``last_accs`` uses NaN for "never participated".
+
+    ``staleness[k]`` counts server versions since client k's in-flight
+    delta was dispatched (0 when idle); ``pending[k]`` is a 0/1 flag for
+    "delta dispatched but not yet aggregated" — the async runtime's
+    don't-redispatch mask.
+    """
+    n_samples: jnp.ndarray            # (K,) float32
+    quality: jnp.ndarray              # (K,) int32
+    last_accs: jnp.ndarray            # (K,) float32, NaN = never seen
+    participation_counts: jnp.ndarray  # (K,) int32
+    predicted_times: jnp.ndarray      # (K,) float32, NaN = not predicted
+    staleness: jnp.ndarray            # (K,) int32
+    pending: jnp.ndarray              # (K,) float32 0/1
+
+    def tree_flatten(self):
+        return ((self.n_samples, self.quality, self.last_accs,
+                 self.participation_counts, self.predicted_times,
+                 self.staleness, self.pending), None)
+
+    @classmethod
+    def tree_unflatten(cls, _, leaves):
+        return cls(*leaves)
+
+    @property
+    def n_clients(self) -> int:
+        return int(self.n_samples.shape[0])
+
+    @classmethod
+    def from_clients(cls, clients: Sequence[ClientInfo]) -> "FleetArrays":
+        k = len(clients)
+        return cls(
+            n_samples=jnp.asarray([c.n_samples for c in clients],
+                                  jnp.float32),
+            quality=jnp.asarray([c.quality for c in clients], jnp.int32),
+            last_accs=jnp.full((k,), jnp.nan, jnp.float32),
+            participation_counts=jnp.zeros((k,), jnp.int32),
+            predicted_times=jnp.full((k,), jnp.nan, jnp.float32),
+            staleness=jnp.zeros((k,), jnp.int32),
+            pending=jnp.zeros((k,), jnp.float32))
+
+    def lossiness(self) -> jnp.ndarray:
+        """1 − last_acc with never-seen clients pinned to 1.0 (max) — the
+        jnp mirror of ``FleetState.lossiness`` (jit-traceable)."""
+        loss = 1.0 - self.last_accs
+        return jnp.where(jnp.isnan(loss), 1.0, jnp.clip(loss, 0.0, 1.0))
+
+
 @dataclasses.dataclass
 class FleetState:
     """What a policy may look at when picking a round's cohort.
@@ -59,20 +126,38 @@ class FleetState:
     exploration). ``participation_counts[k]`` counts rounds participated.
     ``predicted_times[k]`` is the server's full-model round-time estimate
     from the two-term latency model (None when the server skipped it).
+    ``staleness`` / ``pending`` mirror the async runtime's
+    :class:`FleetArrays` columns (None outside async rounds).
+
+    ``clients`` may be None for array-backed states (fleet-scale paths):
+    pass ``n_samples_arr`` / ``qualities_arr`` instead.
     """
-    clients: List[ClientInfo]
+    clients: Optional[List[ClientInfo]]
     round_idx: int
     last_accs: np.ndarray            # (K,) float, NaN = never participated
     participation_counts: np.ndarray  # (K,) int
     predicted_times: Optional[np.ndarray] = None   # (K,) seconds
+    staleness: Optional[np.ndarray] = None         # (K,) int
+    pending: Optional[np.ndarray] = None           # (K,) 0/1
+    n_samples_arr: Optional[np.ndarray] = None     # (K,) — clients=None
+    qualities_arr: Optional[np.ndarray] = None     # (K,) — clients=None
 
     @property
     def n_clients(self) -> int:
-        return len(self.clients)
+        return len(self.clients) if self.clients is not None \
+            else len(self.last_accs)
 
     @property
     def n_samples(self) -> np.ndarray:
+        if self.n_samples_arr is not None:
+            return np.asarray(self.n_samples_arr, np.float64)
         return np.asarray([c.n_samples for c in self.clients], np.float64)
+
+    @property
+    def qualities(self) -> np.ndarray:
+        if self.qualities_arr is not None:
+            return np.asarray(self.qualities_arr)
+        return np.asarray([c.quality for c in self.clients])
 
     def lossiness(self) -> np.ndarray:
         """1 − last_acc, with never-seen clients pinned to 1.0 (max)."""
@@ -146,6 +231,13 @@ class SelectionPolicy:
 
     ``fraction`` sets the participating share of the fleet (ignored by
     ``full``); subclasses add their own knobs.
+
+    Policies also expose a **vectorized surface** for fleet-scale runs:
+    ``scores(arrays, round_idx)`` returns (K,) unnormalised sampling
+    scores as a jit-traceable array program over :class:`FleetArrays`,
+    and ``select_arrays(arrays, round_idx, m, key)`` draws the cohort on
+    device via gumbel-top-k (weighted sampling without replacement) — one
+    compiled program per (policy, K, m), reused across rounds.
     """
 
     name = "abstract"
@@ -154,6 +246,7 @@ class SelectionPolicy:
         if not (0.0 < fraction <= 1.0):
             raise ValueError(f"fraction must be in (0, 1], got {fraction}")
         self.fraction = float(fraction)
+        self._jit_select = None
 
     def cohort_size(self, n_clients: int) -> int:
         """Fixed padded cohort size M for this fleet (≥ 1)."""
@@ -162,6 +255,44 @@ class SelectionPolicy:
     def select(self, state: FleetState,
                rng: np.random.RandomState) -> Selection:
         raise NotImplementedError
+
+    # -- vectorized surface (device-resident fleet state) ------------------
+    def scores(self, arrays: FleetArrays, round_idx) -> jnp.ndarray:
+        """(K,) sampling scores; must be pure jnp ops (jit-traceable)."""
+        raise NotImplementedError(
+            f"policy {self.name!r} has no vectorized scores()")
+
+    def _jit_select_fn(self):
+        if self._jit_select is None:
+            def run(arrays, round_idx, key, m):
+                scores = jnp.maximum(self.scores(arrays, round_idx), 1e-30)
+                # gumbel-top-k == weighted sampling w/o replacement
+                g = jax.random.gumbel(key, scores.shape)
+                _, idx = jax.lax.top_k(jnp.log(scores) + g, m)
+                w = jnp.take(arrays.n_samples, idx)
+                # renormalise to the participating mass Σ n_k (weights may
+                # be reweighted by subclasses before this hook)
+                w = self._array_weights(arrays, idx, w)
+                return idx.astype(jnp.int32), w.astype(jnp.float32)
+            self._jit_select = jax.jit(run, static_argnames=("m",))
+        return self._jit_select
+
+    def _array_weights(self, arrays: FleetArrays, idx, w):
+        """Hook: per-slot aggregation weights on the device path (default
+        n_k — unbiased FedAvg weighting)."""
+        return w
+
+    def select_arrays(self, arrays: FleetArrays, round_idx: int,
+                      key) -> Selection:
+        """Device-path selection over :class:`FleetArrays` — the whole
+        score/sample/weight pipeline is one jitted program, so per-round
+        selection at K=10^5–10^6 costs one device dispatch, not a Python
+        loop. Returns the same padded :class:`Selection` contract as
+        ``select``."""
+        m = self.cohort_size(arrays.n_clients)
+        idx, w = self._jit_select_fn()(arrays, jnp.int32(round_idx), key, m)
+        return Selection(np.asarray(idx), np.ones((m,), np.float32),
+                         np.asarray(w))
 
 
 class FullParticipation(SelectionPolicy):
@@ -177,6 +308,16 @@ class FullParticipation(SelectionPolicy):
         k = state.n_clients
         return _pad_selection(range(k), state.n_samples, k)
 
+    def scores(self, arrays: FleetArrays, round_idx) -> jnp.ndarray:
+        return jnp.ones_like(arrays.n_samples)
+
+    def select_arrays(self, arrays: FleetArrays, round_idx: int,
+                      key) -> Selection:
+        k = arrays.n_clients
+        return Selection(np.arange(k, dtype=np.int32),
+                         np.ones((k,), np.float32),
+                         np.asarray(arrays.n_samples, np.float32))
+
 
 class UniformSelection(SelectionPolicy):
     """Random m-of-K without replacement; weights stay n_k (unbiased
@@ -189,6 +330,9 @@ class UniformSelection(SelectionPolicy):
         m = self.cohort_size(state.n_clients)
         chosen = rng.choice(state.n_clients, size=m, replace=False)
         return _pad_selection(chosen, state.n_samples[chosen], m)
+
+    def scores(self, arrays: FleetArrays, round_idx) -> jnp.ndarray:
+        return jnp.ones_like(arrays.n_samples)
 
 
 class FairnessSelection(SelectionPolicy):
@@ -227,7 +371,7 @@ class FairnessSelection(SelectionPolicy):
         probs = score / score.sum()
         chosen = rng.choice(k, size=m, replace=False, p=probs)
 
-        quals = np.asarray([state.clients[i].quality for i in chosen])
+        quals = state.qualities[chosen]
         closs = loss[chosen]
         mult = np.ones(m, np.float64)
         group_means = {q: float(closs[quals == q].mean())
@@ -238,6 +382,37 @@ class FairnessSelection(SelectionPolicy):
                 1.0 + self.group_beta * (gm - fleet_mean), 0.25, 4.0)
         mass = state.n_samples[chosen]
         return _pad_selection(chosen, _mass_normalised(mass * mult, mass), m)
+
+    # vectorized surface: same score program as the numpy path; the
+    # GIFAIR group reweighting runs as a one-hot segment reduction over a
+    # static quality-level bound (edge data-quality levels are an enum)
+    N_QUALITY_LEVELS = 8
+
+    def scores(self, arrays: FleetArrays, round_idx) -> jnp.ndarray:
+        k = arrays.n_clients
+        m = self.cohort_size(k)
+        loss = arrays.lossiness()
+        expected = round_idx * (m / k)
+        debt = jnp.maximum(
+            expected - arrays.participation_counts.astype(jnp.float32), 0.0)
+        return jnp.maximum(loss + self.debt_gamma * debt, 1e-6)
+
+    def _array_weights(self, arrays: FleetArrays, idx, w):
+        loss = jnp.take(arrays.lossiness(), idx)
+        quals = jnp.take(arrays.quality, idx)
+        onehot = (quals[None, :] ==
+                  jnp.arange(self.N_QUALITY_LEVELS)[:, None]
+                  ).astype(jnp.float32)                    # (Q, m)
+        gcount = onehot.sum(1)
+        present = (gcount > 0).astype(jnp.float32)
+        gmean = (onehot @ loss) / jnp.maximum(gcount, 1.0)  # (Q,)
+        fleet_mean = jnp.sum(gmean * present) / jnp.maximum(present.sum(),
+                                                            1.0)
+        gmult = jnp.clip(1.0 + self.group_beta * (gmean - fleet_mean),
+                         0.25, 4.0)                        # (Q,)
+        mult = gmult[quals]
+        raw = w * mult
+        return raw * (jnp.sum(w) / jnp.maximum(jnp.sum(raw), 1e-12))
 
 
 class LatencySelection(SelectionPolicy):
@@ -281,6 +456,21 @@ class LatencySelection(SelectionPolicy):
                                      stragglers[:m - len(feasible)]])
         return _pad_selection(chosen, state.n_samples[chosen], m)
 
+    def scores(self, arrays: FleetArrays, round_idx) -> jnp.ndarray:
+        """Feasible (≤ deadline-quantile) clients score 1, predicted
+        stragglers ~0 (picked only when the feasible set is too small);
+        no predictions (all-NaN) degrades to uniform."""
+        t = arrays.predicted_times
+        known = ~jnp.isnan(t)
+        t_filled = jnp.where(known, t, jnp.inf)
+        deadline = jnp.nanquantile(jnp.where(known, t, jnp.nan),
+                                   self.deadline_q)
+        feasible = t_filled <= deadline
+        any_known = jnp.any(known)
+        base = jnp.where(feasible, 1.0,
+                         1e-9 / (1.0 + jnp.where(known, t, 0.0)))
+        return jnp.where(any_known, base, jnp.ones_like(t))
+
 
 SELECTION_POLICIES: Dict[str, Type[SelectionPolicy]] = {
     FullParticipation.name: FullParticipation,
@@ -295,44 +485,88 @@ def predict_full_round_times(family, clients: List[ClientInfo], latency, *,
     """Per-client full-model round-time estimate (two-term cost model +
     update exchange) — the latency policy's straggler signal, shared by
     CFLServer and FedAvgServer (``latency`` is a ``core.latency
-    .LatencyTable``)."""
+    .LatencyTable``). Device-type lookups are memoised so the walk is
+    O(device types), not O(K) LUT probes — fleet-scale safe."""
     from repro.fl.engine import n_stream_steps
     full = family.full_spec()
     comm = 2 * family.param_bytes(full)
-    out = []
-    for c in clients:
-        n = n_stream_steps(c.n_samples, batch_size, epochs)
-        prof = latency.fleet[c.device]
-        out.append(n * latency.lookup(full, c.device) +
-                   prof.comm_latency(comm))
-    return out
+    step_lat = {name: latency.lookup(full, name)
+                for name in {c.device for c in clients}}
+    comm_lat = {name: latency.fleet[name].comm_latency(comm)
+                for name in step_lat}
+    return [n_stream_steps(c.n_samples, batch_size, epochs)
+            * step_lat[c.device] + comm_lat[c.device] for c in clients]
 
 
 class FleetTracker:
-    """Server-side selection bookkeeping shared by CFLServer/FedAvgServer.
+    """Server-side selection bookkeeping shared by CFLServer/FedAvgServer
+    and the event-driven ``fl.runtime.FleetRuntime``.
 
-    Holds the policy plus the per-client running state the policies read
-    (:class:`FleetState`), draws a deterministically-seeded cohort per
-    round, and records each round's outcomes back. ``predicted_times_fn``
-    is called once, lazily, the first time a policy asks for latency
-    predictions (so servers that never run the latency policy never pay
-    the LUT walk).
+    Fleet state lives in a device-resident :class:`FleetArrays` (one (K,)
+    jnp column per signal: participation counts, last accs, predicted
+    times, staleness, pending-delta flags), so recording outcomes and the
+    async runtime's staleness decay are ``.at[]`` array programs rather
+    than Python loops, and the jitted ``select_arrays`` policy path runs
+    directly on the resident columns at K=10^5–10^6. The legacy numpy
+    views (``participation_counts`` / ``last_accs``) remain as read-only
+    properties.
+
+    Cohort RNG: round r draws from
+    ``np.random.SeedSequence(entropy=seed, spawn_key=(r,))`` —
+    collision-free across nearby seeds, unlike the old ad-hoc modular
+    mixing. ``rng_mode="legacy"`` restores the pre-runtime mixing so
+    recorded benches stay reproducible.
+
+    ``predicted_times_fn`` is called once, lazily, the first time a
+    policy asks for latency predictions (so servers that never run the
+    latency policy never pay the LUT walk); the cache is dropped by
+    ``invalidate()`` — called automatically on ``set_policy`` /
+    ``set_fleet`` because a policy swap or fleet mutation may invalidate
+    the latency LUT snapshot the estimates were built from.
     """
 
     def __init__(self, clients: List[ClientInfo],
                  selection: Union[None, str, SelectionPolicy] = None, *,
-                 seed: int = 0, predicted_times_fn=None):
+                 seed: int = 0, predicted_times_fn=None,
+                 rng_mode: str = "seedseq",
+                 device_select: Optional[bool] = None):
+        if rng_mode not in ("seedseq", "legacy"):
+            raise ValueError(f"rng_mode must be 'seedseq' or 'legacy', "
+                             f"got {rng_mode!r}")
         self.clients = clients
         self.policy = resolve_policy(selection)
         self.seed = int(seed)
+        self.rng_mode = rng_mode
+        # None = auto: device path for fleets >= DEVICE_SELECT_THRESHOLD
+        self.device_select = device_select
         self._predicted_times_fn = predicted_times_fn
         self._predicted_times: Optional[np.ndarray] = None
-        k = len(clients)
-        self.participation_counts = np.zeros((k,), np.int64)
-        self.last_accs = np.full((k,), np.nan)
+        self.arrays = FleetArrays.from_clients(clients)
+
+    # -- legacy numpy views (read-only) --------------------------------
+    @property
+    def participation_counts(self) -> np.ndarray:
+        return np.asarray(self.arrays.participation_counts)
+
+    @property
+    def last_accs(self) -> np.ndarray:
+        return np.asarray(self.arrays.last_accs, np.float64)
 
     def set_policy(self, selection: Union[None, str, SelectionPolicy]):
         self.policy = resolve_policy(selection)
+        self.invalidate()
+
+    def set_fleet(self, clients: List[ClientInfo]):
+        """Replace the fleet (elastic membership): rebuilds the resident
+        arrays and drops the stale latency predictions."""
+        self.clients = clients
+        self.arrays = FleetArrays.from_clients(clients)
+        self.invalidate()
+
+    def invalidate(self):
+        """Drop the cached per-client round-time predictions (stale after
+        a latency-LUT or fleet change); recomputed lazily on next use."""
+        self._predicted_times = None
 
     @property
     def is_full(self) -> bool:
@@ -343,24 +577,81 @@ class FleetTracker:
                 self._predicted_times_fn is not None:
             self._predicted_times = np.asarray(self._predicted_times_fn(),
                                                np.float64)
+            self.arrays = dataclasses.replace(
+                self.arrays, predicted_times=jnp.asarray(
+                    self._predicted_times, jnp.float32))
         return self._predicted_times
 
     def state(self, round_idx: int) -> FleetState:
         return FleetState(self.clients, round_idx, self.last_accs,
                           self.participation_counts,
-                          self.predicted_times())
+                          self.predicted_times(),
+                          staleness=np.asarray(self.arrays.staleness),
+                          pending=np.asarray(self.arrays.pending))
+
+    def _round_rng(self, round_idx: int) -> np.random.RandomState:
+        if self.rng_mode == "legacy":
+            return np.random.RandomState(
+                (self.seed * 9176 + 31 * round_idx + 7) % (2 ** 31))
+        ss = np.random.SeedSequence(entropy=self.seed,
+                                    spawn_key=(int(round_idx),))
+        return np.random.RandomState(ss.generate_state(4))
+
+    def _use_device_path(self) -> bool:
+        if self.device_select is not None:
+            return bool(self.device_select)
+        return len(self.clients) >= DEVICE_SELECT_THRESHOLD
 
     def select(self, round_idx: int) -> Selection:
-        rng = np.random.RandomState(
-            (self.seed * 9176 + 31 * round_idx + 7) % (2 ** 31))
-        return self.policy.select(self.state(round_idx), rng)
+        if self._use_device_path() and not self.is_full:
+            if isinstance(self.policy, LatencySelection):
+                self.predicted_times()     # materialise the column
+            key = jax.random.PRNGKey(
+                np.random.SeedSequence(
+                    entropy=self.seed, spawn_key=(int(round_idx),)
+                ).generate_state(1)[0])
+            return self.policy.select_arrays(self.arrays, round_idx, key)
+        return self.policy.select(self.state(round_idx),
+                                  self._round_rng(round_idx))
 
     def record(self, participants: Sequence[int], accs: Sequence[float]):
         """Fold one round's participant accuracies into the running state
         (feeds the fairness policy's lossiness/debt scores)."""
-        ids = np.asarray(participants, np.int64)
-        self.participation_counts[ids] += 1
-        self.last_accs[ids] = np.asarray(accs, np.float64)
+        ids = jnp.asarray(np.asarray(participants, np.int32))
+        a = self.arrays
+        self.arrays = dataclasses.replace(
+            a,
+            participation_counts=a.participation_counts.at[ids].add(1),
+            last_accs=a.last_accs.at[ids].set(
+                jnp.asarray(np.asarray(accs, np.float32))))
+
+    # -- async-runtime bookkeeping (array programs over FleetArrays) ---
+    def mark_pending(self, participants: Sequence[int]):
+        """Flag dispatched clients: delta in flight, staleness restarts."""
+        ids = jnp.asarray(np.asarray(participants, np.int32))
+        a = self.arrays
+        self.arrays = dataclasses.replace(
+            a, pending=a.pending.at[ids].set(1.0),
+            staleness=a.staleness.at[ids].set(0))
+
+    def clear_pending(self, participants: Sequence[int]):
+        """Unflag clients whose deltas were just aggregated."""
+        ids = jnp.asarray(np.asarray(participants, np.int32))
+        a = self.arrays
+        self.arrays = dataclasses.replace(
+            a, pending=a.pending.at[ids].set(0.0),
+            staleness=a.staleness.at[ids].set(0))
+
+    def bump_staleness(self):
+        """One server version elapsed: every in-flight delta ages by 1
+        (vectorised where(pending) — no per-client loop)."""
+        a = self.arrays
+        self.arrays = dataclasses.replace(
+            a, staleness=jnp.where(a.pending > 0, a.staleness + 1,
+                                   a.staleness))
+
+    def pending_mask(self) -> np.ndarray:
+        return np.asarray(self.arrays.pending) > 0
 
 
 def resolve_policy(selection: Union[None, str, SelectionPolicy]

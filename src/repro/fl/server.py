@@ -61,6 +61,22 @@ class CFLConfig:
     # default) | 'uniform' | 'fairness' | 'latency', or a SelectionPolicy
     # instance for custom fractions/knobs
     selection: Union[None, str, SelectionPolicy] = "full"
+    # round scheduling (fl.runtime): 'sync' = the paper's barrier rounds;
+    # 'async' = event-driven buffered rounds (FedBuff-style) driven by the
+    # simulated latency clock
+    mode: str = "sync"
+    # async buffer size B: apply the server step whenever B deltas have
+    # arrived; None = the dispatch cohort size (i.e. the sync barrier,
+    # which with staleness_decay=0 reproduces sync numerics exactly)
+    async_buffer: Optional[int] = None
+    # staleness discount exponent a in (1+s)^-a for async deltas trained
+    # against an s-versions-old snapshot; 0.5 = FedBuff's 1/sqrt(1+s),
+    # 0 disables discounting
+    staleness_decay: float = 0.5
+    # cohort RNG derivation: 'seedseq' (SeedSequence spawn keys,
+    # collision-free across nearby seeds) | 'legacy' (the pre-runtime
+    # modular mixing, kept so recorded benches stay reproducible)
+    selection_rng: str = "seedseq"
     seed: int = 0
 
 
@@ -84,9 +100,12 @@ class CFLServer:
                                     batch_size=fl_cfg.batch_size)
         self.tracker = FleetTracker(
             clients, fl_cfg.selection, seed=fl_cfg.seed,
-            predicted_times_fn=self._predict_round_times)
+            predicted_times_fn=self._predict_round_times,
+            rng_mode=getattr(fl_cfg, "selection_rng", "seedseq"))
         self.round_idx = 0
         self.history: List[Dict] = []
+        self._runtime = None            # built lazily on first async round
+        self._sim_clock = 0.0
         if fl_cfg.batched_rounds:
             self.engine = BatchedRoundEngine(
                 self.family, lr=fl_cfg.lr, momentum=fl_cfg.momentum,
@@ -105,6 +124,28 @@ class CFLServer:
         rounds that follow — the engine's compiled programs survive the
         swap as long as the padded cohort size does."""
         self.tracker.set_policy(selection)
+
+    def set_mode(self, mode: str) -> None:
+        """Switch round scheduling for the rounds that follow: 'sync'
+        (barrier rounds) | 'async' (event-driven buffered rounds,
+        fl.runtime). Switching to sync with deltas still in flight waits
+        for them: the runtime flushes at the next aggregate, so no
+        arrived update is dropped."""
+        if mode not in ("sync", "async"):
+            raise ValueError(f"mode must be 'sync' or 'async', "
+                             f"got {mode!r}")
+        self.fl.mode = mode
+
+    @property
+    def runtime(self):
+        """The event-driven fleet runtime (fl.runtime.FleetRuntime),
+        built on first use; async rounds are driven through it."""
+        if self._runtime is None:
+            from repro.fl.runtime import FleetRuntime
+            self._runtime = FleetRuntime(
+                self, buffer_size=getattr(self.fl, "async_buffer", None),
+                staleness_decay=getattr(self.fl, "staleness_decay", 0.5))
+        return self._runtime
 
     def _predict_round_times(self) -> List[float]:
         return predict_full_round_times(
@@ -161,7 +202,27 @@ class CFLServer:
             times.append(float(t))
         return times
 
+    def cohort_specs(self, participants: Optional[Sequence[int]] = None
+                     ) -> List:
+        """Runtime hook: specs for a dispatch cohort (None = full fleet).
+        CFL's policy is the Alg. 1 search (``sample_submodels``)."""
+        return self.sample_submodels(participants)
+
+    def post_aggregate(self, specs, participants: Sequence[int],
+                       accs: Sequence[float]) -> Dict:
+        """Runtime hook, called once per applied server step: the
+        search-helper update (Alg. 2) over the deltas that were just
+        aggregated — participants only: absentees reported nothing."""
+        self.predictor.add_profiles(
+            [(spec, self.clients[i].quality, acc)
+             for spec, i, acc in zip(specs, participants, accs)])
+        mae = self.predictor.train_round(epochs=4)
+        return {"specs": [self.family.genes(s) for s in specs],
+                "predictor_mae": mae}
+
     def run_round(self) -> Dict:
+        if getattr(self.fl, "mode", "sync") == "async":
+            return self.runtime.run_until_aggregate()
         sel = self.tracker.select(self.round_idx)
         participants = [int(i) for i in sel.participants]
         specs = self.sample_submodels(
@@ -171,27 +232,36 @@ class CFLServer:
         else:
             accs, times = self._train_round_sequential(specs, sel)
 
-        # search-helper update (Alg. 2) — participants only: absentees
-        # reported nothing this round
-        self.predictor.add_profiles(
-            [(spec, self.clients[i].quality, acc)
-             for spec, i, acc in zip(specs, participants, accs)])
-        mae = self.predictor.train_round(epochs=4)
+        extras = self.post_aggregate(specs, participants, accs)
         self.tracker.record(participants, accs)
 
         rec = {
             "round": self.round_idx,
-            "specs": [self.family.genes(s) for s in specs],
             "participants": participants,
             "selection": self.tracker.policy.name,
             "accs": accs,
             "fairness": accuracy_fairness(accs),
             "timing": round_time_fairness(times),
-            "predictor_mae": mae,
         }
+        rec.update(extras)
+        rec.update(self._sync_clock_columns(times))
         self.history.append(rec)
         self.round_idx += 1
         return rec
+
+    def _sync_clock_columns(self, times: Sequence[float]) -> Dict:
+        """Sync rows carry the same scheduling columns as async ones:
+        staleness is 0 by construction, aggregate_lag is the barrier wait
+        (how long each delta sat before the straggler arrived), and
+        sim_clock accumulates the barrier round times."""
+        barrier = max(times) if times else 0.0
+        self._sim_clock += barrier
+        return {"staleness": 0.0,
+                "aggregate_lag": float(np.mean([barrier - t
+                                                for t in times]))
+                if times else 0.0,
+                "sim_clock": self._sim_clock,
+                "mode": "sync"}
 
     # ------------------------------------------------------------------
     def _train_round_batched(self, specs, sel: Optional[Selection] = None):

@@ -133,20 +133,36 @@ class CFLSession:
                    algorithm=algorithm)
 
     # ------------------------------------------------------------------
-    def run(self, rounds: int, selection=None) -> List[Dict]:
+    def run(self, rounds: int, selection=None,
+            mode: Optional[str] = None) -> List[Dict]:
         """Run ``rounds`` FL rounds and return the history.
 
         What you pass: ``rounds`` (int); optionally ``selection`` — a
         policy name ('full' | 'uniform' | 'fairness' | 'latency') or an
         ``fl.selection.SelectionPolicy`` instance — to set the
-        partial-participation policy for these (and subsequent) rounds.
-        What you get back: the per-round history list; each entry carries
-        ``accs`` / ``fairness`` / ``timing`` / ``participants`` /
-        ``selection`` (cfl also ``specs`` and ``predictor_mae``).
+        partial-participation policy for these (and subsequent) rounds;
+        optionally ``mode`` — 'sync' (the paper's barrier rounds, the
+        default) or 'async' (event-driven buffered rounds over
+        ``fl.runtime.FleetRuntime``, governed by
+        ``CFLConfig.async_buffer`` / ``staleness_decay``; an async
+        "round" is one applied server step). What you get back: the
+        per-round history list; each entry carries ``accs`` /
+        ``fairness`` / ``timing`` / ``participants`` / ``selection`` and
+        the scheduling columns ``staleness`` / ``aggregate_lag`` /
+        ``sim_clock`` / ``mode`` (cfl also ``specs`` and
+        ``predictor_mae``).
 
         IL runs the same local budget with no aggregation, recorded as
-        one history entry; partial participation is a rounds concept, so
-        IL rejects any non-full selection."""
+        one history entry; partial participation and round scheduling are
+        rounds concepts, so IL rejects any non-full selection or
+        non-sync mode."""
+        if mode is not None:
+            if self.algorithm == "il":
+                if mode != "sync":
+                    raise ValueError("IL has no rounds to schedule — "
+                                     "mode only applies to cfl/fedavg")
+            else:
+                self.server.set_mode(mode)
         if selection is not None:
             if self.algorithm == "il":
                 _reject_il_selection(selection)
