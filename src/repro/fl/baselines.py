@@ -64,10 +64,15 @@ class FedAvgServer:
 
     def set_mode(self, mode: str) -> None:
         """'sync' (barrier rounds) | 'async' (event-driven buffered
-        rounds over fl.runtime.FleetRuntime) for the rounds that follow."""
+        rounds over fl.runtime.FleetRuntime) for the rounds that follow.
+        Switching to sync with deltas still in flight drains the runtime
+        first (each flush aggregate is a server step, recorded in
+        ``history``), so no arrived update is dropped."""
         if mode not in ("sync", "async"):
             raise ValueError(f"mode must be 'sync' or 'async', "
                              f"got {mode!r}")
+        if mode == "sync" and self._runtime is not None:
+            self._runtime.drain()
         self.fl.mode = mode
 
     @property

@@ -124,10 +124,16 @@ class FleetRuntime:
         self.buffer_size = buffer_size
         self.staleness_decay = float(staleness_decay)
         self.clock = 0.0
-        self.groups: List[InFlightCohort] = []
+        # in-flight cohorts keyed by a monotonically increasing group id —
+        # COMPLETE events carry the gid, so fully-consumed groups can be
+        # deleted while later groups still have events in flight without
+        # invalidating any pending event's address
+        self.groups: Dict[int, InFlightCohort] = {}
+        self._next_gid = 0
         self._events: List[Tuple[float, int, str, tuple]] = []
         self._seq = 0
         self._agg_scheduled = False
+        self._draining = False
         self._cohort_slots = None       # last dispatch's participant count
         self._push(0.0, DISPATCH, ())
 
@@ -137,7 +143,8 @@ class FleetRuntime:
         self._seq += 1
 
     def _buffered(self) -> int:
-        return int(sum(len(g.pending_slots()) for g in self.groups))
+        return int(sum(len(g.pending_slots())
+                       for g in self.groups.values()))
 
     def _effective_buffer(self) -> int:
         if self.buffer_size is not None:
@@ -176,6 +183,26 @@ class FleetRuntime:
                 return rec
         raise RuntimeError(f"no aggregate within {max_ticks} ticks")
 
+    def drain(self, max_ticks: int = 100_000) -> List[Dict]:
+        """Flush every in-flight cohort without dispatching new work:
+        remaining ``complete`` events are processed and their deltas
+        applied through buffered aggregates — each a real server step,
+        recorded in history like any other. Used by ``set_mode('sync')``
+        so a mode switch never drops an arrived update or leaves a
+        client flagged pending."""
+        recs: List[Dict] = []
+        self._draining = True
+        try:
+            for _ in range(max_ticks):
+                if not self.groups:
+                    return recs
+                rec = self.tick()
+                if rec is not None:
+                    recs.append(rec)
+        finally:
+            self._draining = False
+        raise RuntimeError(f"drain incomplete after {max_ticks} ticks")
+
     # -- dispatch ----------------------------------------------------------
     def _select_available(self, round_idx: int,
                           avail: np.ndarray) -> Selection:
@@ -200,6 +227,8 @@ class FleetRuntime:
                               m_fleet)
 
     def _on_dispatch(self, t: float) -> None:
+        if self._draining:
+            return              # the post-drain idle guard re-dispatches
         server, fl = self.server, self.server.fl
         avail = ~self.tracker.pending_mask()
         if not avail.any():
@@ -251,16 +280,17 @@ class FleetRuntime:
             consumed=np.zeros((m,), bool),
             complete_t=np.zeros((m,), np.float64),
             full_parity=full_parity)
-        gi = len(self.groups)
-        self.groups.append(group)
+        gid = self._next_gid
+        self._next_gid += 1
+        self.groups[gid] = group
         self._cohort_slots = len(participants)
         self.tracker.mark_pending(participants)
         for slot in np.flatnonzero(sel.valid > 0):
-            self._push(t + times[slot], COMPLETE, (gi, int(slot)))
+            self._push(t + times[slot], COMPLETE, (gid, int(slot)))
 
     # -- complete ----------------------------------------------------------
-    def _on_complete(self, t: float, gi: int, slot: int) -> None:
-        g = self.groups[gi]
+    def _on_complete(self, t: float, gid: int, slot: int) -> None:
+        g = self.groups[gid]
         g.completed[slot] = True
         g.complete_t[slot] = t
         self.tracker.record([int(g.sel.idx[slot])],
@@ -309,7 +339,7 @@ class FleetRuntime:
     def _on_aggregate(self, t: float) -> Optional[Dict]:
         self._agg_scheduled = False
         server = self.server
-        contribs = [(g, g.pending_slots()) for g in self.groups
+        contribs = [(g, g.pending_slots()) for g in self.groups.values()
                     if len(g.pending_slots())]
         if not contribs:
             return None
@@ -336,7 +366,8 @@ class FleetRuntime:
             lags.extend(t - float(g.complete_t[s]) for s in slots)
             stale.extend([r - g.version] * len(slots))
             self.tracker.clear_pending(ids)
-        self.groups = [g for g in self.groups if not g.all_consumed()]
+        self.groups = {gid: g for gid, g in self.groups.items()
+                       if not g.all_consumed()}
 
         server.round_idx += 1
         self.tracker.bump_staleness()

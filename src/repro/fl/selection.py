@@ -414,6 +414,21 @@ class FairnessSelection(SelectionPolicy):
         raw = w * mult
         return raw * (jnp.sum(w) / jnp.maximum(jnp.sum(raw), 1e-12))
 
+    def select_arrays(self, arrays: FleetArrays, round_idx: int,
+                      key) -> Selection:
+        # the jitted weight program indexes a (N_QUALITY_LEVELS,) group
+        # table, and jax clamps out-of-range indices silently — validate
+        # on the host so the device path can never quietly diverge from
+        # the numpy path (which handles arbitrary quality values)
+        qmax = int(jnp.max(arrays.quality))
+        if qmax >= self.N_QUALITY_LEVELS:
+            raise ValueError(
+                f"fairness device path supports quality levels < "
+                f"{self.N_QUALITY_LEVELS}, fleet has quality {qmax}; "
+                f"raise FairnessSelection.N_QUALITY_LEVELS or use the "
+                f"numpy path (device_select=False)")
+        return super().select_arrays(arrays, round_idx, key)
+
 
 class LatencySelection(SelectionPolicy):
     """Deadline-aware selection: drop predicted stragglers.
@@ -515,7 +530,9 @@ class FleetTracker:
     ``np.random.SeedSequence(entropy=seed, spawn_key=(r,))`` —
     collision-free across nearby seeds, unlike the old ad-hoc modular
     mixing. ``rng_mode="legacy"`` restores the pre-runtime mixing so
-    recorded benches stay reproducible.
+    recorded benches stay reproducible — it pins selection to the numpy
+    policy path (the jitted device path draws differently, so legacy
+    never auto-routes through it and rejects ``device_select=True``).
 
     ``predicted_times_fn`` is called once, lazily, the first time a
     policy asks for latency predictions (so servers that never run the
@@ -598,6 +615,17 @@ class FleetTracker:
         return np.random.RandomState(ss.generate_state(4))
 
     def _use_device_path(self) -> bool:
+        if self.rng_mode == "legacy":
+            # the device path draws via gumbel-top-k from a PRNGKey — it
+            # cannot reproduce the legacy numpy draws, so legacy mode
+            # never auto-routes and an explicit request is an error
+            # rather than a silently different cohort sequence
+            if self.device_select:
+                raise ValueError(
+                    "rng_mode='legacy' reproduces the pre-runtime numpy "
+                    "RNG draws; the device selection path cannot — drop "
+                    "device_select=True or use rng_mode='seedseq'")
+            return False
         if self.device_select is not None:
             return bool(self.device_select)
         return len(self.clients) >= DEVICE_SELECT_THRESHOLD

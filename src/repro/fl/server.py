@@ -128,12 +128,16 @@ class CFLServer:
     def set_mode(self, mode: str) -> None:
         """Switch round scheduling for the rounds that follow: 'sync'
         (barrier rounds) | 'async' (event-driven buffered rounds,
-        fl.runtime). Switching to sync with deltas still in flight waits
-        for them: the runtime flushes at the next aggregate, so no
-        arrived update is dropped."""
+        fl.runtime). Switching to sync with deltas still in flight
+        drains the runtime first — remaining completions are aggregated
+        (each a server step, recorded in ``history``) before the first
+        sync round, so no arrived update is dropped and no client stays
+        flagged pending."""
         if mode not in ("sync", "async"):
             raise ValueError(f"mode must be 'sync' or 'async', "
                              f"got {mode!r}")
+        if mode == "sync" and self._runtime is not None:
+            self._runtime.drain()
         self.fl.mode = mode
 
     @property

@@ -132,7 +132,65 @@ def test_async_small_buffer_interleaves_and_ages():
     tracker = sess.server.tracker
     assert tracker.pending_mask().sum() == sum(
         int((~g.consumed & (g.sel.valid > 0)).sum())
-        for g in sess.server.runtime.groups)
+        for g in sess.server.runtime.groups.values())
+
+
+def test_async_group_compaction_keeps_event_addresses_stable():
+    """Regression: COMPLETE events must survive group compaction. With
+    B=1 and uniform selection over a straggler-skewed fleet, earlier
+    groups drain and are deleted while later groups still have events in
+    flight — every pending event must still resolve to *its* group (no
+    IndexError, no starved clients, accuracies recorded for the right
+    clients), across many interleavings."""
+    fl = CFLConfig(n_workers=4, local_epochs=1, batch_size=32, lr=0.05,
+                   seed=5, selection="uniform", mode="async",
+                   async_buffer=1, staleness_decay=0.5)
+    sess = CFLSession.from_synthetic(
+        CFG, kind="synthmnist", n_workers=4, n_samples=400,
+        heterogeneity="quality", fl_cfg=fl, seed=5)
+    hist = sess.run(16)                 # enough rounds to force compaction
+    assert len(hist) == 16
+    rt = sess.server.runtime
+    assert rt._next_gid > len(rt.groups)    # groups were compacted away
+    # no slot was double-consumed or dropped: every applied participant
+    # count matches, and live groups are internally consistent
+    for g in rt.groups.values():
+        assert not np.any(g.consumed & ~g.completed)
+    # no starvation: the pending flags match exactly the live groups'
+    # unconsumed valid slots (a misaddressed complete would leak one)
+    pending = set(np.flatnonzero(sess.server.tracker.pending_mask()))
+    inflight = set()
+    for g in rt.groups.values():
+        inflight.update(int(g.sel.idx[s]) for s in
+                        np.flatnonzero(~g.consumed & (g.sel.valid > 0)))
+    assert pending == inflight
+    # every client got aggregated at least once — starved clients never
+    # reappear in participants
+    seen = {i for r in hist for i in r["participants"]}
+    assert seen == {0, 1, 2, 3}
+
+
+def test_set_mode_sync_drains_in_flight_deltas():
+    """Switching async -> sync flushes the runtime: every in-flight
+    delta is aggregated (recorded in history), no client stays flagged
+    pending, and the following sync rounds run clean."""
+    fl = CFLConfig(n_workers=4, local_epochs=1, batch_size=32, lr=0.05,
+                   seed=6, selection="uniform", mode="async",
+                   async_buffer=1, staleness_decay=0.5)
+    sess = CFLSession.from_synthetic(
+        CFG, kind="synthmnist", n_workers=4, n_samples=400,
+        heterogeneity="quality", fl_cfg=fl, seed=6)
+    sess.run(2)                          # B=1 leaves deltas in flight
+    server = sess.server
+    assert server.tracker.pending_mask().any()   # something to flush
+    n_before = len(server.history)
+    server.set_mode("sync")
+    assert not server.runtime.groups             # fully drained
+    assert not server.tracker.pending_mask().any()
+    assert len(server.history) > n_before        # flush steps recorded
+    hist = sess.run(1)                           # sync rounds run clean
+    assert hist[-1]["mode"] == "sync"
+    assert not server.tracker.pending_mask().any()
 
 
 def test_async_buffer_flush_guard():
@@ -339,6 +397,46 @@ def test_legacy_rng_flag_reproduces_old_mixing():
     np.testing.assert_array_equal(tr.select(5).participants, expect)
     with pytest.raises(ValueError):
         FleetTracker(_clients(), "uniform", seed=0, rng_mode="bogus")
+
+
+def test_legacy_rng_never_routes_through_device_path():
+    """rng_mode='legacy' promises the recorded numpy draws; the device
+    path draws differently, so legacy must pin the numpy path even on
+    fleets past the auto-routing threshold, and explicitly combining
+    legacy with device_select=True is an error, not a silent switch."""
+    from repro.fl.selection import DEVICE_SELECT_THRESHOLD
+    big = _clients(DEVICE_SELECT_THRESHOLD)
+    assert FleetTracker(big, "uniform", seed=0)._use_device_path()
+    tr = FleetTracker(big, "uniform", seed=0, rng_mode="legacy")
+    assert not tr._use_device_path()
+    # and the draws really are the legacy ones
+    rng = np.random.RandomState((0 * 9176 + 31 * 2 + 7) % (2 ** 31))
+    expect = rng.choice(len(big), size=len(big) // 2, replace=False)
+    np.testing.assert_array_equal(tr.select(2).participants, expect)
+    bad = FleetTracker(_clients(), "uniform", seed=0, rng_mode="legacy",
+                       device_select=True)
+    with pytest.raises(ValueError, match="legacy"):
+        bad.select(0)
+
+
+def test_fairness_device_path_rejects_out_of_range_quality():
+    """The jitted group-weight table has N_QUALITY_LEVELS rows and jax
+    clamps out-of-range gathers silently — the device path must refuse
+    qualities past the bound instead of quietly disagreeing with the
+    numpy path."""
+    K = 16
+    arrays = _arrays(K)
+    policy = FairnessSelection(fraction=0.5)
+    bad = FleetArrays(
+        arrays.n_samples,
+        arrays.quality.at[3].set(policy.N_QUALITY_LEVELS),
+        arrays.last_accs, arrays.participation_counts,
+        arrays.predicted_times, arrays.staleness, arrays.pending)
+    with pytest.raises(ValueError, match="quality"):
+        policy.select_arrays(bad, 0, jax.random.PRNGKey(0))
+    # in-range fleets still select fine
+    sel = policy.select_arrays(arrays, 0, jax.random.PRNGKey(0))
+    assert len(sel.participants) == policy.cohort_size(K)
 
 
 def test_predicted_times_cache_invalidation():
