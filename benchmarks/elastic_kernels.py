@@ -1,26 +1,40 @@
-"""Elastic-kernel bench: spec width vs compute, tile-skipping vs dense.
+"""Elastic-kernel bench + roofline CI gate: spec width vs compute & DMA.
 
-Sweeps the active fraction for every tile-skipping kernel (MLP
+Sweeps the active fraction for every tile-skipping kernel — MLP
 output-prefix up/gate, MLP contraction-prefix down, MoE grouped
-expert-prefix, SSD head-prefix, CNN channel-prefix conv) and records, per
-sweep point:
+expert-prefix, MoE dispatch/combine row movement, SSD head-prefix
+(forward *and* transposed-scan backward), flash-attention head-prefix
+(forward and dq/dkv backward), CNN channel-prefix conv — and records,
+per sweep point and per pass (``fwd`` / ``bwd``):
 
-* ``wall_us`` — measured wall-clock of the kernel (Pallas interpret mode
-  on this CPU container: dominated by the interpreter's fixed per-tile
+* ``wall_us`` — measured wall-clock of the op (Pallas interpret mode on
+  this CPU container: dominated by the interpreter's fixed per-tile
   overhead, so it does *not* show FLOP proportionality — on a TPU host
   rerun with ``--backend tpu`` for the headline number);
 * ``tiles_executed`` / ``tiles_total`` — the exact grid-tile counts the
   kernel's ``pl.when`` predicates execute vs skip (mirrors the launch
-  geometry; on TPU each executed tile is one MXU block issue + its DMA,
-  so this *is* the compute-scaling evidence, backend-independent);
+  geometry; on TPU each executed tile is one MXU block issue, so this
+  *is* the compute-scaling evidence, backend-independent);
+* ``dma_blocks`` — input block loads measured by walking the kernel's
+  *actual* BlockSpec index maps (``launch.roofline.count_block_loads``):
+  skipped tiles whose clamped maps re-request the resident block issue
+  no DMA, and reverting a clamp changes this count;
 * ``flop_frac`` — analytic active-FLOP fraction of the op;
 * ``max_err`` — parity vs the dense masked oracle (must stay ≤ 1e-5:
-  skipping must be numerically free).
+  skipping must be numerically free; bwd rows compare VJP cotangents).
 
 Rows carry a ``kernel_path`` column ('tile-skipping' vs 'dense-masked')
 and land in ``BENCH_elastic_kernels.json`` at the repo root.
 
-  PYTHONPATH=src python -m benchmarks.elastic_kernels
+  PYTHONPATH=src python -m benchmarks.elastic_kernels            # record
+  PYTHONPATH=src python -m benchmarks.elastic_kernels --check    # CI gate
+
+``--check`` is the roofline gate: it recomputes every tile-skipping
+row's launch geometry (tiles + DMA blocks) from the checked-out kernel
+source and fails if it drifts from the recorded JSON, then runs
+``launch.roofline.gate_elastic_rows`` over the recorded rows (parity,
+fwd+bwd executed-tile proportionality, DMA monotonicity, arithmetic-
+intensity floor). No kernels are executed, so the gate runs in seconds.
 """
 from __future__ import annotations
 
@@ -28,34 +42,75 @@ import argparse
 import functools
 import json
 import os
-from typing import List
+import sys
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import Row, emit, json_row, parse_json_rows, timed
 from repro.kernels import (elastic_conv2d, elastic_dense,
                            grouped_elastic_matmul, ref, ssd_scan)
+from repro.kernels.elastic_matmul import edense_index_maps
+from repro.kernels.flash_attention import (attn_block_contributes,
+                                           attn_dkv_index_maps,
+                                           attn_dq_index_maps,
+                                           attn_fwd_index_maps,
+                                           flash_attention)
+from repro.kernels.grouped_matmul import grouped_index_maps
+from repro.kernels.moe_dispatch import (gather_index_map,
+                                        gather_reduce_index_maps,
+                                        moe_combine, moe_dispatch)
+from repro.kernels.ssd_scan import (ssd_bwd_index_maps, ssd_fwd_index_maps)
+from repro.launch.roofline import count_block_loads, gate_elastic_rows
 
 FRACS = (0.25, 0.5, 0.75, 1.0)
 BM = BN = BK = 128
+
+# op shapes (module constants: the timed legs and the --check geometry
+# recomputation must stay in lockstep)
+MLP_UP = (512, 512, 2048)            # M, K, N — x @ wi, output prefix
+MLP_DOWN = (512, 2048, 512)          # M, K, N — h @ wo, contraction prefix
+MOE = (8, 128, 256, 512)             # G, cap, d, ff — grouped expert prefix
+SSD = (2, 128, 8, 32, 32, 32)        # B, S, H, P, N, chunk — head prefix
+ATTN = (2, 128, 8, 64, 32, 32)       # B, S, H, D, bq, bk — causal, KV=H
+DISP = (256, 2, 8, 64, 256)          # T, k, E, cap, d — token movement
+
+# every (op, pass) sweep the gate must see — a leg silently dropped from
+# the JSON is a gate failure, not a silent coverage hole
+REQUIRED_GROUPS = {
+    ("mlp_up", "fwd"), ("mlp_up", "bwd"),
+    ("mlp_down", "fwd"), ("mlp_down", "bwd"),
+    ("moe_grouped", "fwd"), ("moe_grouped", "bwd"),
+    ("moe_dispatch", "fwd"), ("moe_dispatch", "bwd"),
+    ("ssd_heads", "fwd"), ("ssd_heads", "bwd"),
+    ("attention", "fwd"), ("attention", "bwd"),
+    ("conv_channels", "fwd"),
+}
 
 
 def _round_up(n, m):
     return -(-n // m) * m
 
 
-def _matmul_tiles(M, K, N, ka=None, na=None):
+def _pct(f):
+    return int(f * 100)
+
+
+def _matmul_tiles(M, K, N, ka=None, na=None, ma=None):
     """Executed / total K-accumulation tiles for one elastic_dense launch
     (mirrors the kernel's `live & (k0 < ka)` predicate and tile padding)."""
     ka = K if ka is None else ka
     na = N if na is None else na
+    ma = M if ma is None else ma
     mi = _round_up(M, BM) // BM
     nj = _round_up(N, BN) // BN
     nk = _round_up(K, BK) // BK
+    live_i = min(-(-ma // BM), mi) if ma > 0 else 0
     live_j = min(-(-na // BN), nj) if na > 0 else 0
     live_k = min(-(-ka // BK), nk) if ka > 0 else 0
-    return mi * live_j * live_k, mi * nj * nk
+    return live_i * live_j * live_k, mi * nj * nk
 
 
 def _bench(fn, *args):
@@ -73,67 +128,265 @@ def _err(a, b):
     return float(jnp.max(jnp.abs(a - b)) / scale)
 
 
+def _grad_err(ga, gb):
+    return max(_err(a, b) for a, b in zip(jax.tree.leaves(ga),
+                                          jax.tree.leaves(gb)))
+
+
 # ---------------------------------------------------------------------------
-# legs — each returns rows for the frac sweep
+# launch geometry (tiles + DMA-block loads from the real index maps) —
+# shared by the timed legs and the --check gate
 # ---------------------------------------------------------------------------
-def leg_mlp_up(interpret: bool) -> List[Row]:
-    M, K, N = 512, 512, 2048                   # x @ wi, output prefix
-    key = jax.random.PRNGKey(0)
-    x = jax.random.normal(key, (M, K))
-    w = jax.random.normal(jax.random.fold_in(key, 1), (K, N))
-    rows = []
+def _edense_geom(M, K, N, ka, na, ma):
+    """(executed, total, dma_blocks) of one elastic_dense launch."""
+    grid = (_round_up(M, BM) // BM, _round_up(N, BN) // BN,
+            _round_up(K, BK) // BK)
+    tex, tot = _matmul_tiles(M, K, N, ka=ka, na=na, ma=ma)
+    xm, wm, _ = edense_index_maps(BM, BN, BK)
+    dma = sum(count_block_loads(grid, [xm, wm], [ka, na, ma]))
+    return tex, tot, dma
+
+
+def _grouped_geom(G, M, K, N, ga):
+    grid = (G, _round_up(M, BM) // BM, _round_up(N, BN) // BN,
+            _round_up(K, BK) // BK)
+    per_ex, per_tot = _matmul_tiles(M, K, N)
+    dma = sum(count_block_loads(grid, list(grouped_index_maps()), [ga]))
+    return ga * per_ex, G * per_tot, dma
+
+
+def geom_mlp_up() -> Dict[str, Dict]:
+    M, K, N = MLP_UP
+    out = {}
     for f in FRACS:
         na = int(f * N)
-        kern = functools.partial(elastic_dense, n_active=na,
+        tex, tot, dma = _edense_geom(M, K, N, K, na, M)
+        out[f"elastic_mlp_up_{_pct(f)}"] = dict(
+            op="mlp_up", frac=f, tiles_executed=tex, tiles_total=tot,
+            dma_blocks=dma, **{"pass": "fwd"})
+        # VJP launches: dx = edense(dy, wT) (contraction prefix na),
+        # dw = edense(xT, dy) (output prefix na)
+        gx = _edense_geom(M, N, K, na, K, M)
+        gw = _edense_geom(K, M, N, M, na, K)
+        out[f"elastic_mlp_up_bwd_{_pct(f)}"] = dict(
+            op="mlp_up", frac=f, tiles_executed=gx[0] + gw[0],
+            tiles_total=gx[1] + gw[1], dma_blocks=gx[2] + gw[2],
+            **{"pass": "bwd"})
+    return out
+
+
+def geom_mlp_down() -> Dict[str, Dict]:
+    M, K, N = MLP_DOWN
+    out = {}
+    for f in FRACS:
+        ka = int(f * K)
+        tex, tot, dma = _edense_geom(M, K, N, ka, N, M)
+        out[f"elastic_mlp_down_{_pct(f)}"] = dict(
+            op="mlp_down", frac=f, tiles_executed=tex, tiles_total=tot,
+            dma_blocks=dma, **{"pass": "fwd"})
+        gx = _edense_geom(M, N, K, N, ka, M)     # dx: output prefix ka
+        gw = _edense_geom(K, M, N, M, N, ka)     # dw: row prefix ka
+        out[f"elastic_mlp_down_bwd_{_pct(f)}"] = dict(
+            op="mlp_down", frac=f, tiles_executed=gx[0] + gw[0],
+            tiles_total=gx[1] + gw[1], dma_blocks=gx[2] + gw[2],
+            **{"pass": "bwd"})
+    return out
+
+
+def geom_moe() -> Dict[str, Dict]:
+    G, cap, d, ff = MOE
+    out = {}
+    for f in FRACS:
+        ga = max(1, int(f * G))
+        tex, tot, dma = _grouped_geom(G, cap, d, ff, ga)
+        out[f"elastic_moe_{_pct(f)}"] = dict(
+            op="moe_grouped", frac=ga / G, tiles_executed=tex,
+            tiles_total=tot, dma_blocks=dma, **{"pass": "fwd"})
+        gx = _grouped_geom(G, cap, ff, d, ga)    # dxs = dy @ wsT
+        gw = _grouped_geom(G, d, cap, ff, ga)    # dws = xsT @ dy
+        out[f"elastic_moe_bwd_{_pct(f)}"] = dict(
+            op="moe_grouped", frac=ga / G, tiles_executed=gx[0] + gw[0],
+            tiles_total=gx[1] + gw[1], dma_blocks=gx[2] + gw[2],
+            **{"pass": "bwd"})
+    return out
+
+
+def geom_ssd() -> Dict[str, Dict]:
+    B, S, H, P, N, chunk = SSD
+    nc = S // chunk
+    grid = (B * H, nc)
+    out = {}
+    for f in FRACS:
+        ha = max(1, int(f * H))
+        fwd_dma = sum(count_block_loads(grid, ssd_fwd_index_maps(H), [ha]))
+        out[f"elastic_ssd_{_pct(f)}"] = dict(
+            op="ssd_heads", frac=ha / H, tiles_executed=ha * B * nc,
+            tiles_total=H * B * nc, dma_blocks=fwd_dma, **{"pass": "fwd"})
+        # bwd = state-recompute forward + transposed-scan kernel
+        bwd_dma = sum(count_block_loads(grid, ssd_bwd_index_maps(H, nc),
+                                        [ha]))
+        out[f"elastic_ssd_bwd_{_pct(f)}"] = dict(
+            op="ssd_heads", frac=ha / H, tiles_executed=2 * ha * B * nc,
+            tiles_total=2 * H * B * nc, dma_blocks=fwd_dma + bwd_dma,
+            **{"pass": "bwd"})
+    return out
+
+
+def geom_attention() -> Dict[str, Dict]:
+    B, S, H, D, bq, bk = ATTN
+    nq, nk = S // bq, S // bk
+    contrib = sum(attn_block_contributes(qi, ki, bq=bq, bk=bk, causal=True,
+                                         window=None)
+                  for qi in range(nq) for ki in range(nk))
+    kw = dict(bq=bq, bk=bk, causal=True, window=None)
+    out = {}
+    for f in FRACS:
+        ha = max(1, int(f * H))
+        fwd_dma = sum(count_block_loads(
+            (B * H, nq, nk), attn_fwd_index_maps(H, 1, nk=nk, **kw), [ha]))
+        out[f"elastic_attn_{_pct(f)}"] = dict(
+            op="attention", frac=ha / H, tiles_executed=B * ha * contrib,
+            tiles_total=B * H * nq * nk, dma_blocks=fwd_dma,
+            **{"pass": "fwd"})
+        dq_dma = sum(count_block_loads(
+            (B * H, nq, nk), attn_dq_index_maps(H, 1, nk=nk, **kw), [ha]))
+        dkv_dma = sum(count_block_loads(
+            (B * H, nk, nq), attn_dkv_index_maps(H, 1, nq=nq, **kw), [ha]))
+        out[f"elastic_attn_bwd_{_pct(f)}"] = dict(
+            op="attention", frac=ha / H,
+            tiles_executed=2 * B * ha * contrib,
+            tiles_total=2 * B * H * nq * nk, dma_blocks=dq_dma + dkv_dma,
+            **{"pass": "bwd"})
+    return out
+
+
+def _route(e_act):
+    """Deterministic synthetic routing for the dispatch leg: T*k
+    assignments spread round-robin over the first ``e_act`` experts,
+    overflow past ``cap`` dropped (sentinel dest = E*cap, the clamp
+    target). Valid slots = e_act * cap exactly — the per-cohort
+    row-movement budget the kernels must track."""
+    T, k, E, cap, d = DISP
+    a = np.arange(T * k) % e_act
+    order = np.argsort(a, kind="stable")
+    fill = np.zeros(E, np.int64)
+    dest = np.empty(T * k, np.int64)
+    for aid in order:
+        e = a[aid]
+        dest[aid] = e * cap + fill[e] if fill[e] < cap else E * cap
+        fill[e] += 1
+    kept = (dest < E * cap).astype(np.int64)
+    slot_src = np.zeros(E * cap, np.int64)
+    slot_valid = np.zeros(E * cap, np.int64)
+    for aid in np.nonzero(kept)[0]:
+        slot_src[dest[aid]] = aid // k
+        slot_valid[dest[aid]] = 1
+    return dest, kept, slot_src, slot_valid
+
+
+def geom_moe_dispatch() -> Dict[str, Dict]:
+    T, k, E, cap, d = DISP
+    out = {}
+    for f in FRACS:
+        ea = max(1, int(f * E))
+        dest, kept, slot_src, slot_valid = _route(ea)
+        valid_n, kept_n = int(slot_valid.sum()), int(kept.sum())
+        # wide (·, d) row streams only — the (1, k) gate block and the
+        # int32 scalar operands are narrow and excluded from the count
+        disp_dma = sum(count_block_loads(
+            (E * cap,), [gather_index_map(T, E * cap)],
+            np.concatenate([slot_src, slot_valid])))
+        comb_dma = sum(count_block_loads(
+            (T,), gather_reduce_index_maps(E * cap, k), dest))
+        out[f"elastic_moe_disp_{_pct(f)}"] = dict(
+            op="moe_dispatch", frac=ea / E,
+            tiles_executed=valid_n + kept_n, tiles_total=2 * E * cap,
+            dma_blocks=disp_dma + comb_dma, **{"pass": "fwd"})
+        # bwd: dy gather (slot<-token), dxt gather-reduce, dgate re-gather
+        dgate_dma = sum(count_block_loads(
+            (T * k,), [gather_index_map(E * cap, T * k)],
+            np.concatenate([dest, kept])))
+        out[f"elastic_moe_disp_bwd_{_pct(f)}"] = dict(
+            op="moe_dispatch", frac=ea / E,
+            tiles_executed=valid_n + 2 * kept_n, tiles_total=3 * E * cap,
+            dma_blocks=disp_dma + comb_dma + dgate_dma, **{"pass": "bwd"})
+    return out
+
+
+GEOMS = {"mlp_up": geom_mlp_up, "mlp_down": geom_mlp_down,
+         "moe": geom_moe, "ssd": geom_ssd, "attention": geom_attention,
+         "moe_dispatch": geom_moe_dispatch}
+
+
+# ---------------------------------------------------------------------------
+# legs — each returns rows for the frac sweep (geometry + timing + parity)
+# ---------------------------------------------------------------------------
+def _mlp_leg(name, shapes, prefix_kw, interpret):
+    M, K, N = shapes
+    key = jax.random.PRNGKey(0 if name == "mlp_up" else 1)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (K, N))
+    cot = jax.random.normal(jax.random.fold_in(key, 2), (M, N))
+    geom = GEOMS[name]()
+    leg_tag = "mlp_up" if name == "mlp_up" else "mlp_down"
+    rows = []
+    for f in FRACS:
+        act = int(f * (N if prefix_kw == "n_active" else K))
+        x = jax.random.normal(key, (M, K))
+        if prefix_kw == "k_active":
+            # activations already masked past ka (the up projection's
+            # output)
+            x = x * (jnp.arange(K) < act)
+        kern = functools.partial(elastic_dense, **{prefix_kw: act},
                                  interpret=interpret)
-        dense = functools.partial(ref.elastic_dense_ref, n_active=na)
-        tex, ttot = _matmul_tiles(M, K, N, na=na)
+        dense = functools.partial(ref.elastic_dense_ref, **{prefix_kw: act})
+        g = geom[f"elastic_{leg_tag}_{_pct(f)}"]
         err = _err(kern(x, w), dense(x, w))
         rows.append(json_row(
-            f"elastic_mlp_up_{int(f * 100)}", _bench(kern, x, w),
-            kernel_path="tile-skipping", op="mlp_up", frac=f,
-            tiles_executed=tex, tiles_total=ttot, flop_frac=f,
-            max_err=err, interpret=interpret))
+            f"elastic_{leg_tag}_{_pct(f)}", _bench(kern, x, w),
+            kernel_path="tile-skipping", flop_frac=f, max_err=err,
+            interpret=interpret, **g))
         rows.append(json_row(
-            f"dense_mlp_up_{int(f * 100)}", _bench(dense, x, w),
-            kernel_path="dense-masked", op="mlp_up", frac=f,
-            tiles_executed=ttot, tiles_total=ttot, flop_frac=1.0,
-            max_err=0.0, interpret=False))
+            f"dense_{leg_tag}_{_pct(f)}", _bench(dense, x, w),
+            kernel_path="dense-masked", op=g["op"], frac=f,
+            tiles_executed=g["tiles_total"], tiles_total=g["tiles_total"],
+            flop_frac=1.0, max_err=0.0, interpret=False,
+            **{"pass": "fwd"}))
+        # backward: dx + dw tile-skipping launches under the custom VJP
+        kloss = lambda x, w: jnp.vdot(kern(x, w), cot)
+        dloss = lambda x, w: jnp.vdot(dense(x, w), cot)
+        gerr = _grad_err(jax.grad(kloss, (0, 1))(x, w),
+                         jax.grad(dloss, (0, 1))(x, w))
+        gb = geom[f"elastic_{leg_tag}_bwd_{_pct(f)}"]
+        rows.append(json_row(
+            f"elastic_{leg_tag}_bwd_{_pct(f)}",
+            _bench(jax.grad(kloss, (0, 1)), x, w),
+            kernel_path="tile-skipping", flop_frac=f, max_err=gerr,
+            interpret=interpret, **gb))
+        rows.append(json_row(
+            f"dense_{leg_tag}_bwd_{_pct(f)}",
+            _bench(jax.grad(dloss, (0, 1)), x, w),
+            kernel_path="dense-masked", op=gb["op"], frac=f,
+            tiles_executed=gb["tiles_total"],
+            tiles_total=gb["tiles_total"], flop_frac=1.0, max_err=0.0,
+            interpret=False, **{"pass": "bwd"}))
     return rows
+
+
+def leg_mlp_up(interpret: bool) -> List[Row]:
+    return _mlp_leg("mlp_up", MLP_UP, "n_active", interpret)
 
 
 def leg_mlp_down(interpret: bool) -> List[Row]:
-    M, K, N = 512, 2048, 512                   # h @ wo, contraction prefix
-    key = jax.random.PRNGKey(1)
-    w = jax.random.normal(jax.random.fold_in(key, 1), (K, N))
-    rows = []
-    for f in FRACS:
-        ka = int(f * K)
-        # activations already masked past ka (the up projection's output)
-        h = jax.random.normal(key, (M, K)) * (jnp.arange(K) < ka)
-        kern = functools.partial(elastic_dense, k_active=ka,
-                                 interpret=interpret)
-        dense = functools.partial(ref.elastic_dense_ref, k_active=ka)
-        tex, ttot = _matmul_tiles(M, K, N, ka=ka)
-        err = _err(kern(h, w), dense(h, w))
-        rows.append(json_row(
-            f"elastic_mlp_down_{int(f * 100)}", _bench(kern, h, w),
-            kernel_path="tile-skipping", op="mlp_down", frac=f,
-            tiles_executed=tex, tiles_total=ttot, flop_frac=f,
-            max_err=err, interpret=interpret))
-        rows.append(json_row(
-            f"dense_mlp_down_{int(f * 100)}", _bench(dense, h, w),
-            kernel_path="dense-masked", op="mlp_down", frac=f,
-            tiles_executed=ttot, tiles_total=ttot, flop_frac=1.0,
-            max_err=0.0, interpret=False))
-    return rows
+    return _mlp_leg("mlp_down", MLP_DOWN, "k_active", interpret)
 
 
 def leg_moe(interpret: bool) -> List[Row]:
-    G, cap, d, ff = 8, 128, 256, 512           # grouped expert prefix
+    G, cap, d, ff = MOE
     key = jax.random.PRNGKey(2)
     xs = jax.random.normal(key, (G, cap, d))
     ws = jax.random.normal(jax.random.fold_in(key, 1), (G, d, ff))
+    cot = jax.random.normal(jax.random.fold_in(key, 2), (G, cap, ff))
+    geom = GEOMS["moe"]()
     rows = []
     for f in FRACS:
         ga = max(1, int(f * G))
@@ -141,34 +394,50 @@ def leg_moe(interpret: bool) -> List[Row]:
                                  interpret=interpret)
         dense = functools.partial(ref.grouped_elastic_matmul_ref,
                                   g_active=ga)
-        per_g = _matmul_tiles(cap, d, ff)
+        g = geom[f"elastic_moe_{_pct(f)}"]
         err = _err(kern(xs, ws), dense(xs, ws))
         rows.append(json_row(
-            f"elastic_moe_{int(f * 100)}", _bench(kern, xs, ws),
-            kernel_path="tile-skipping", op="moe_grouped", frac=ga / G,
-            tiles_executed=ga * per_g[0], tiles_total=G * per_g[1],
-            flop_frac=ga / G, max_err=err, interpret=interpret))
+            f"elastic_moe_{_pct(f)}", _bench(kern, xs, ws),
+            kernel_path="tile-skipping", flop_frac=ga / G, max_err=err,
+            interpret=interpret, **g))
         rows.append(json_row(
-            f"dense_moe_{int(f * 100)}", _bench(dense, xs, ws),
-            kernel_path="dense-masked", op="moe_grouped", frac=ga / G,
-            tiles_executed=G * per_g[1], tiles_total=G * per_g[1],
-            flop_frac=1.0, max_err=0.0, interpret=False))
+            f"dense_moe_{_pct(f)}", _bench(dense, xs, ws),
+            kernel_path="dense-masked", op=g["op"], frac=ga / G,
+            tiles_executed=g["tiles_total"], tiles_total=g["tiles_total"],
+            flop_frac=1.0, max_err=0.0, interpret=False,
+            **{"pass": "fwd"}))
+        kloss = lambda xs, ws: jnp.vdot(kern(xs, ws), cot)
+        dloss = lambda xs, ws: jnp.vdot(dense(xs, ws), cot)
+        gerr = _grad_err(jax.grad(kloss, (0, 1))(xs, ws),
+                         jax.grad(dloss, (0, 1))(xs, ws))
+        gb = geom[f"elastic_moe_bwd_{_pct(f)}"]
+        rows.append(json_row(
+            f"elastic_moe_bwd_{_pct(f)}",
+            _bench(jax.grad(kloss, (0, 1)), xs, ws),
+            kernel_path="tile-skipping", flop_frac=ga / G, max_err=gerr,
+            interpret=interpret, **gb))
     return rows
 
 
 def leg_ssd(interpret: bool) -> List[Row]:
-    B, S, H, P, N, chunk = 2, 512, 8, 64, 64, 128   # head prefix
+    B, S, H, P, N, chunk = SSD
     key = jax.random.PRNGKey(3)
-    ks = jax.random.split(key, 5)
+    ks = jax.random.split(key, 6)
     xh = jax.random.normal(ks[0], (B, S, H, P))
     dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
     A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
     Bm = jax.random.normal(ks[3], (B, S, H, N))
     Cm = jax.random.normal(ks[4], (B, S, H, N))
+    cot = jax.random.normal(ks[5], (B, S, H, P))
+    from repro.kernels.dispatch import kernel_dispatch
     from repro.models.ssm import ssd_chunked
+    ssd_op = kernel_dispatch("interpret" if interpret else "tpu").table(
+        "transformer")["ssd"]
+    geom = GEOMS["ssd"]()
     rows = []
     for f in FRACS:
         ha = max(1, int(f * H))
+        hm = (jnp.arange(H) < ha).astype(jnp.float32)
         kern = functools.partial(ssd_scan, chunk=chunk, h_active=ha,
                                  interpret=interpret)
 
@@ -176,19 +445,134 @@ def leg_ssd(interpret: bool) -> List[Row]:
             y, _ = ssd_chunked(xh, dt, A, Bm, Cm, chunk)
             return y * (jnp.arange(H) < ha)[None, None, :, None]
 
+        g = geom[f"elastic_ssd_{_pct(f)}"]
         err = _err(kern(xh, dt, A, Bm, Cm), dense(xh, dt, A, Bm, Cm))
-        cells = (S // chunk) * B
         rows.append(json_row(
-            f"elastic_ssd_{int(f * 100)}",
-            _bench(kern, xh, dt, A, Bm, Cm),
-            kernel_path="tile-skipping", op="ssd_heads", frac=ha / H,
-            tiles_executed=ha * cells, tiles_total=H * cells,
-            flop_frac=ha / H, max_err=err, interpret=interpret))
+            f"elastic_ssd_{_pct(f)}", _bench(kern, xh, dt, A, Bm, Cm),
+            kernel_path="tile-skipping", flop_frac=ha / H, max_err=err,
+            interpret=interpret, **g))
         rows.append(json_row(
-            f"dense_ssd_{int(f * 100)}", _bench(dense, xh, dt, A, Bm, Cm),
-            kernel_path="dense-masked", op="ssd_heads", frac=ha / H,
-            tiles_executed=H * cells, tiles_total=H * cells,
-            flop_frac=1.0, max_err=0.0, interpret=False))
+            f"dense_ssd_{_pct(f)}", _bench(dense, xh, dt, A, Bm, Cm),
+            kernel_path="dense-masked", op=g["op"], frac=ha / H,
+            tiles_executed=g["tiles_total"], tiles_total=g["tiles_total"],
+            flop_frac=1.0, max_err=0.0, interpret=False,
+            **{"pass": "fwd"}))
+        # backward: the dispatch op's custom VJP (state-recompute forward
+        # + transposed chunk-scan kernel), against the masked dense ref
+        kloss = lambda *a: jnp.vdot(ssd_op(*a, chunk, head_mask=hm)[0],
+                                    cot)
+        dloss = lambda *a: jnp.vdot(dense(*a), cot)
+        argnums = (0, 1, 2, 3, 4)
+        gerr = _grad_err(jax.grad(kloss, argnums)(xh, dt, A, Bm, Cm),
+                         jax.grad(dloss, argnums)(xh, dt, A, Bm, Cm))
+        gb = geom[f"elastic_ssd_bwd_{_pct(f)}"]
+        rows.append(json_row(
+            f"elastic_ssd_bwd_{_pct(f)}",
+            _bench(jax.grad(kloss, argnums), xh, dt, A, Bm, Cm),
+            kernel_path="tile-skipping", flop_frac=ha / H, max_err=gerr,
+            interpret=interpret, **gb))
+    return rows
+
+
+def leg_attention(interpret: bool) -> List[Row]:
+    B, S, H, D, bq, bk = ATTN
+    key = jax.random.PRNGKey(6)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    cot = jax.random.normal(ks[3], (B, S, H, D))
+    from repro.models.attention import chunked_attention
+    geom = GEOMS["attention"]()
+    rows = []
+    for f in FRACS:
+        ha = max(1, int(f * H))
+        hm = (jnp.arange(H) < ha).astype(jnp.float32)
+        kern = lambda q, k, v: flash_attention(
+            q, k, v, hm, causal=True, bq=bq, bk=bk, interpret=interpret)
+        dense = lambda q, k, v: chunked_attention(q, k, v, causal=True) * \
+            hm[None, None, :, None]
+        g = geom[f"elastic_attn_{_pct(f)}"]
+        err = _err(kern(q, k, v), dense(q, k, v))
+        rows.append(json_row(
+            f"elastic_attn_{_pct(f)}", _bench(kern, q, k, v),
+            kernel_path="tile-skipping", flop_frac=ha / H, max_err=err,
+            interpret=interpret, **g))
+        rows.append(json_row(
+            f"dense_attn_{_pct(f)}", _bench(dense, q, k, v),
+            kernel_path="dense-masked", op=g["op"], frac=ha / H,
+            tiles_executed=g["tiles_total"], tiles_total=g["tiles_total"],
+            flop_frac=1.0, max_err=0.0, interpret=False,
+            **{"pass": "fwd"}))
+        kloss = lambda q, k, v: jnp.vdot(kern(q, k, v), cot)
+        dloss = lambda q, k, v: jnp.vdot(dense(q, k, v), cot)
+        gerr = _grad_err(jax.grad(kloss, (0, 1, 2))(q, k, v),
+                         jax.grad(dloss, (0, 1, 2))(q, k, v))
+        gb = geom[f"elastic_attn_bwd_{_pct(f)}"]
+        rows.append(json_row(
+            f"elastic_attn_bwd_{_pct(f)}",
+            _bench(jax.grad(kloss, (0, 1, 2)), q, k, v),
+            kernel_path="tile-skipping", flop_frac=ha / H, max_err=gerr,
+            interpret=interpret, **gb))
+    return rows
+
+
+def leg_moe_dispatch(interpret: bool) -> List[Row]:
+    T, kk, E, cap, d = DISP
+    key = jax.random.PRNGKey(5)
+    xt = jax.random.normal(key, (T, d))
+    gates = jax.nn.softmax(
+        jax.random.normal(jax.random.fold_in(key, 1), (T, kk)), axis=-1)
+    cot = jax.random.normal(jax.random.fold_in(key, 2), (T, d))
+    geom = GEOMS["moe_dispatch"]()
+    rows = []
+    for f in FRACS:
+        ea = max(1, int(f * E))
+        dest, kept, slot_src, slot_valid = _route(ea)
+        destj = jnp.asarray(dest, jnp.int32)
+        keptj = jnp.asarray(kept, jnp.int32)
+        srcj = jnp.asarray(slot_src, jnp.int32)
+        validj = jnp.asarray(slot_valid, jnp.int32)
+        slot_gate = jnp.zeros((E * cap + 1,)).at[destj].set(
+            gates.reshape(-1) * keptj)[:-1]
+
+        def chain(xt, gate_eff):
+            eb = moe_dispatch(xt, srcj, validj, destj, keptj,
+                              n_experts=E, cap=cap, interpret=interpret)
+            y_flat = (eb * 1.5).reshape(E * cap, d)
+            return moe_combine(y_flat, gate_eff, destj, srcj, validj,
+                               slot_gate, interpret=interpret)
+
+        def dense(xt, gate_eff):
+            ebr = jnp.where(validj[:, None] > 0,
+                            xt[jnp.clip(srcj, 0, T - 1)], 0.0)
+            yk = (ebr * 1.5)[jnp.clip(destj, 0, E * cap - 1)]
+            return jnp.einsum("tj,tjd->td", gate_eff,
+                              yk.reshape(T, kk, d))
+
+        gate_eff = gates * keptj.reshape(T, kk)
+        g = geom[f"elastic_moe_disp_{_pct(f)}"]
+        err = _err(chain(xt, gate_eff), dense(xt, gate_eff))
+        rows.append(json_row(
+            f"elastic_moe_disp_{_pct(f)}", _bench(chain, xt, gate_eff),
+            kernel_path="tile-skipping", flop_frac=ea / E, max_err=err,
+            interpret=interpret, **g))
+        rows.append(json_row(
+            f"dense_moe_disp_{_pct(f)}", _bench(dense, xt, gate_eff),
+            kernel_path="dense-masked", op=g["op"], frac=ea / E,
+            tiles_executed=g["tiles_total"], tiles_total=g["tiles_total"],
+            flop_frac=1.0, max_err=0.0, interpret=False,
+            **{"pass": "fwd"}))
+        kloss = lambda xt, ge: jnp.vdot(chain(xt, ge), cot)
+        dloss = lambda xt, ge: jnp.vdot(dense(xt, ge), cot)
+        gerr = _grad_err(jax.grad(kloss, (0, 1))(xt, gate_eff),
+                         jax.grad(dloss, (0, 1))(xt, gate_eff))
+        gb = geom[f"elastic_moe_disp_bwd_{_pct(f)}"]
+        rows.append(json_row(
+            f"elastic_moe_disp_bwd_{_pct(f)}",
+            _bench(jax.grad(kloss, (0, 1)), xt, gate_eff),
+            kernel_path="tile-skipping", flop_frac=ea / E, max_err=gerr,
+            interpret=interpret, **gb))
     return rows
 
 
@@ -208,20 +592,22 @@ def leg_conv(interpret: bool) -> List[Row]:
         tex, ttot = _matmul_tiles(B * HW * HW, C * 9, C, ka=ca * 9, na=ca)
         err = _err(kern(x, w, b), dense(x, w, b))
         rows.append(json_row(
-            f"elastic_conv_{int(f * 100)}", _bench(kern, x, w, b),
+            f"elastic_conv_{_pct(f)}", _bench(kern, x, w, b),
             kernel_path="tile-skipping", op="conv_channels", frac=ca / C,
             tiles_executed=tex, tiles_total=ttot,
-            flop_frac=(ca / C) ** 2, max_err=err, interpret=interpret))
+            flop_frac=(ca / C) ** 2, max_err=err, interpret=interpret,
+            **{"pass": "fwd"}))
         rows.append(json_row(
-            f"dense_conv_{int(f * 100)}", _bench(dense, x, w, b),
+            f"dense_conv_{_pct(f)}", _bench(dense, x, w, b),
             kernel_path="dense-masked", op="conv_channels", frac=ca / C,
             tiles_executed=ttot, tiles_total=ttot, flop_frac=1.0,
-            max_err=0.0, interpret=False))
+            max_err=0.0, interpret=False, **{"pass": "fwd"}))
     return rows
 
 
 LEGS = {"mlp_up": leg_mlp_up, "mlp_down": leg_mlp_down, "moe": leg_moe,
-        "ssd": leg_ssd, "conv": leg_conv}
+        "moe_dispatch": leg_moe_dispatch, "ssd": leg_ssd,
+        "attention": leg_attention, "conv": leg_conv}
 
 
 def run(interpret: bool = True) -> List[Row]:
@@ -232,38 +618,96 @@ def run(interpret: bool = True) -> List[Row]:
     return rows
 
 
+def _bench_path() -> str:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    return os.path.join(root, "BENCH_elastic_kernels.json")
+
+
+def check() -> int:
+    """The CI roofline gate (no kernel execution — seconds, not minutes).
+
+    1. recompute every tile-skipping row's launch geometry (executed
+       tiles + DMA-block loads from the checked-out index maps) and
+       diff against the recorded JSON;
+    2. assert every required (op, pass) sweep is present;
+    3. run ``gate_elastic_rows`` over the recorded rows (parity ≤ 1e-5,
+       fwd+bwd tile proportionality, DMA monotonicity, AI floor)."""
+    path = _bench_path()
+    if not os.path.exists(path):
+        print(f"GATE FAIL: {path} missing — run the bench to record it")
+        return 1
+    with open(path) as f:
+        rows = json.load(f)
+    fails: List[str] = []
+    rec = {r["name"]: r for r in rows
+           if r.get("kernel_path") == "tile-skipping"}
+    measured: Dict[str, Dict] = {}
+    for fn in GEOMS.values():
+        measured.update(fn())
+    for nm, g in sorted(measured.items()):
+        r = rec.get(nm)
+        if r is None:
+            fails.append(f"{nm}: missing from recorded JSON — regenerate "
+                         f"the bench")
+            continue
+        for key in ("tiles_executed", "tiles_total", "dma_blocks"):
+            if r.get(key) != g[key]:
+                fails.append(
+                    f"{nm}: {key} recorded {r.get(key)} != measured "
+                    f"{g[key]} — launch geometry changed (index-map "
+                    f"clamp or skip-predicate regression?)")
+    groups = {(r.get("op"), r.get("pass", "fwd")) for r in rec.values()}
+    for need in sorted(REQUIRED_GROUPS):
+        if need not in groups:
+            fails.append(f"required sweep {need} absent from the bench")
+    fails.extend(gate_elastic_rows(rows))
+    if fails:
+        print(f"ROOFLINE GATE FAIL ({len(fails)}):")
+        for msg in fails:
+            print(f"  - {msg}")
+        return 1
+    print(f"roofline gate PASS: {len(measured)} tile-skipping rows, "
+          f"{len(groups)} (op, pass) sweeps")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", choices=("interpret", "tpu"),
                     default="interpret")
+    ap.add_argument("--check", action="store_true",
+                    help="roofline CI gate: verify recorded JSON against "
+                         "recomputed launch geometry (no kernel runs)")
     args = ap.parse_args()
+    if args.check:
+        sys.exit(check())
     rows = run(interpret=args.backend != "tpu")
     emit(rows)
-    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    out_path = os.path.join(root, "BENCH_elastic_kernels.json")
+    dicts = [dict(json.loads(derived), name=name, us=us)
+             for name, us, derived in rows]
+    out_path = _bench_path()
     with open(out_path, "w") as f:
-        json.dump([dict(json.loads(derived), name=name, us=us)
-                   for name, us, derived in rows], f, indent=1)
+        json.dump(dicts, f, indent=1)
         f.write("\n")
     print(f"wrote {out_path}")
 
-    # acceptance: relative parity ≤ 1e-5 against the dense masked path
-    # everywhere, and executed compute strictly increasing with the active
-    # fraction (tile counts — the backend-independent scaling evidence;
-    # wall-clock proportionality is a TPU-run claim, see module docstring)
+    # acceptance: the same gate CI runs, on the fresh rows
+    fails = gate_elastic_rows(dicts)
+    assert not fails, "\n".join(fails)
     by = parse_json_rows(rows)
-    for name, d in by.items():
-        assert d["max_err"] <= 1e-5, (name, d)
     for op, leg_names in (
             ("mlp_up", "elastic_mlp_up"), ("mlp_down", "elastic_mlp_down"),
             ("moe_grouped", "elastic_moe"), ("ssd_heads", "elastic_ssd"),
-            ("conv_channels", "elastic_conv")):
-        tex = [by[f"{leg_names}_{int(f * 100)}"]["tiles_executed"]
-               for f in FRACS]
-        assert all(a < b for a, b in zip(tex, tex[1:])), (op, tex)
-        full = by[f"{leg_names}_100"]
-        print(f"{op}: tiles at 25% width = "
-              f"{tex[0] / full['tiles_total']:.2%} of dense")
+            ("attention", "elastic_attn"),
+            ("moe_dispatch", "elastic_moe_disp")):
+        for suffix in ("", "_bwd"):
+            full = by[f"{leg_names}{suffix}_100"]
+            quarter = by[f"{leg_names}{suffix}_25"]
+            print(f"{op}{suffix or '/fwd'}: tiles at 25% width = "
+                  f"{quarter['tiles_executed'] / full['tiles_total']:.2%}"
+                  f" of dense, dma = "
+                  f"{quarter.get('dma_blocks', 0)}/"
+                  f"{full.get('dma_blocks', 0)} blocks")
 
 
 if __name__ == "__main__":

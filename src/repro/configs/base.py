@@ -40,6 +40,13 @@ class MoEConfig:
     capacity_factor: float = 1.25
     router_z_loss: float = 1e-3
     aux_loss: float = 1e-2
+    # per-cohort capacity sizing: size per-expert capacity as if this many
+    # experts were active (None = n_experts). A cohort whose widest client
+    # keeps E' < E experts sets this to E' so the dispatch buffer — and the
+    # Pallas gather-reduce row traffic — scales with the *active* expert
+    # count while staying in parent coordinates (static: part of the
+    # compiled program, like capacity_factor).
+    capacity_experts: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)

@@ -44,8 +44,10 @@ from repro.core.submodel import (SubmodelSpec, TransformerSubSpec,
                                  full_transformer_spec, mask_cnn,
                                  minimal_spec, minimal_transformer_spec,
                                  pad_cnn, pad_transformer, sub_cnn_config,
-                                 sub_transformer_config, transformer_experts,
-                                 transformer_ff, transformer_ssm_heads)
+                                 sub_transformer_config,
+                                 transformer_attn_heads,
+                                 transformer_experts, transformer_ff,
+                                 transformer_ssm_heads)
 from repro.data.loader import eval_batches
 from repro.models import cnn
 from repro.models import transformer as T
@@ -563,9 +565,11 @@ class TransformerElasticFamily(ElasticFamily):
 
     Elastic dims (all prefix slices, matching ``extract_transformer``):
     d_ff (``ff_frac``), routed experts (``expert_frac``), SSD heads
-    (``ssm_head_frac``), and per-segment kept layers (depth gates scanned
-    with the stacked layer params — a gated residual block with gate 0 is
-    exactly the identity).
+    (``ssm_head_frac``), GQA attention heads (``attn_head_frac`` — whole
+    query groups, carried to the elastic flash kernel as a scalar head
+    prefix), and per-segment kept layers (depth gates scanned with the
+    stacked layer params — a gated residual block with gate 0 is exactly
+    the identity).
 
     The local objective is per-sequence causal CE (no MoE aux terms —
     identical in the masked and extracted paths, so batched == sequential
@@ -599,6 +603,12 @@ class TransformerElasticFamily(ElasticFamily):
             lambda: T.init_params(jax.random.PRNGKey(0), self.cfg))
         return jax.tree.map(lambda s: np.ones(s.shape, np.float32), shapes)
 
+    @property
+    def _attn_elastic(self) -> bool:
+        """Whether this arch has a GQA attention-head elastic dim (the
+        kept-head resolver returns None for MLA / shared-block-only)."""
+        return transformer_attn_heads(self.cfg, 1.0) is not None
+
     # -- spec algebra ------------------------------------------------------
     def full_spec(self) -> TransformerSubSpec:
         return full_transformer_spec(self.cfg)
@@ -619,7 +629,9 @@ class TransformerElasticFamily(ElasticFamily):
             layers=tuple(layers),
             ff_frac=rng.choice(widths),
             expert_frac=rng.choice(widths) if cfg.moe is not None else 1.0,
-            ssm_head_frac=rng.choice(widths) if cfg.ssm is not None else 1.0)
+            ssm_head_frac=rng.choice(widths) if cfg.ssm is not None else 1.0,
+            attn_head_frac=(rng.choice(widths) if self._attn_elastic
+                            else 1.0))
 
     # -- spec-space surface ------------------------------------------------
     def mutate(self, spec: TransformerSubSpec, rng,
@@ -638,7 +650,10 @@ class TransformerElasticFamily(ElasticFamily):
         sh = spec.ssm_head_frac
         if cfg.ssm is not None and rng.random() < p:
             sh = rng.choice(widths)
-        return TransformerSubSpec(tuple(layers), ff, ex, sh)
+        ah = spec.attn_head_frac
+        if self._attn_elastic and rng.random() < p:
+            ah = rng.choice(widths)
+        return TransformerSubSpec(tuple(layers), ff, ex, sh, ah)
 
     def crossover(self, a: TransformerSubSpec, b: TransformerSubSpec,
                   rng) -> TransformerSubSpec:
@@ -648,19 +663,21 @@ class TransformerElasticFamily(ElasticFamily):
             layers,
             ff_frac=rng.choice([a.ff_frac, b.ff_frac]),
             expert_frac=rng.choice([a.expert_frac, b.expert_frac]),
-            ssm_head_frac=rng.choice([a.ssm_head_frac, b.ssm_head_frac]))
+            ssm_head_frac=rng.choice([a.ssm_head_frac, b.ssm_head_frac]),
+            attn_head_frac=rng.choice([a.attn_head_frac, b.attn_head_frac]))
 
     def featurize(self, spec: TransformerSubSpec) -> np.ndarray:
         cfg = self.cfg
         depth_f = [len(keep) / seg.n_layers
                    for seg, keep in zip(cfg.segments, spec.layers)]
-        width_f = [spec.ff_frac, spec.expert_frac, spec.ssm_head_frac]
+        width_f = [spec.ff_frac, spec.expert_frac, spec.ssm_head_frac,
+                   spec.attn_head_frac]
         return np.asarray(depth_f + width_f + [self.flops_fraction(spec)],
                           np.float32)
 
     @property
     def feature_dim(self) -> int:
-        return len(self.cfg.segments) + 4
+        return len(self.cfg.segments) + 5
 
     def flops(self, spec: TransformerSubSpec) -> float:
         sub_cfg = sub_transformer_config(self.cfg, spec)
@@ -697,6 +714,14 @@ class TransformerElasticFamily(ElasticFamily):
             m = np.zeros((nh,), np.float32)
             m[:nh_keep] = 1.0
             fwd["ssm_heads"] = m
+        if self._attn_elastic:
+            # all-ones at frac 1.0 (never absent) so every cohort member's
+            # mask pytree has the same structure under vmap
+            ah = (cfg.n_heads if spec.attn_head_frac >= 1.0
+                  else transformer_attn_heads(cfg, spec.attn_head_frac))
+            m = np.zeros((cfg.n_heads,), np.float32)
+            m[:ah] = 1.0
+            fwd["heads"] = m
         depth = []
         for seg, keep in zip(cfg.segments, spec.layers):
             dm = np.zeros((seg.n_layers,), np.float32)

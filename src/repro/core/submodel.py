@@ -209,13 +209,15 @@ class TransformerSubSpec:
     ff_frac: float = 1.0
     expert_frac: float = 1.0
     ssm_head_frac: float = 1.0
+    attn_head_frac: float = 1.0
 
     def genes(self) -> Tuple:
         """Hashable spec identity — the ElasticFamily spec-table key."""
         return (tuple(tuple(k) for k in self.layers),
                 int(round(self.ff_frac * 100)),
                 int(round(self.expert_frac * 100)),
-                int(round(self.ssm_head_frac * 100)))
+                int(round(self.ssm_head_frac * 100)),
+                int(round(self.attn_head_frac * 100)))
 
 
 def full_transformer_spec(cfg: ModelConfig) -> TransformerSubSpec:
@@ -232,7 +234,9 @@ def minimal_transformer_spec(cfg: ModelConfig) -> TransformerSubSpec:
         layers=tuple((0,) for _ in cfg.segments),
         ff_frac=w,
         expert_frac=w if cfg.moe is not None else 1.0,
-        ssm_head_frac=w if cfg.ssm is not None else 1.0)
+        ssm_head_frac=w if cfg.ssm is not None else 1.0,
+        attn_head_frac=w if transformer_attn_heads(cfg, 1.0) is not None
+        else 1.0)
 
 
 def _round8(x: int) -> int:
@@ -261,10 +265,25 @@ def transformer_ssm_heads(cfg: ModelConfig, frac: float) -> Optional[int]:
     return max(ng, (int(round(nh * frac)) // ng) * ng)
 
 
+def transformer_attn_heads(cfg: ModelConfig, frac: float) -> Optional[int]:
+    """Kept attention query heads: a multiple of the GQA group size (every
+    kept KV head keeps its whole query group, so the kernel's
+    ``hcl // G`` KV mapping and the extracted submodel agree), at least
+    one group. None when the dim is inapplicable — MLA attention (latent
+    heads are not prefix-sliceable) and architectures whose only
+    attention is the shared hybrid block (kept whole by every submodel)."""
+    if cfg.attn_type != "gqa":
+        return None
+    if not any(s.kind in ("attn", "attn_pair") for s in cfg.segments):
+        return None
+    g = cfg.n_heads // max(cfg.n_kv_heads, 1)
+    return max(g, (int(round(cfg.n_heads * frac)) // g) * g)
+
+
 def _elastic_dims(cfg: ModelConfig, spec: TransformerSubSpec):
-    """Resolved (ff, n_exp, nh_keep) for a spec; None where the dim is
-    inapplicable or kept whole (frac == 1.0 keeps every entry even when the
-    parent count doesn't divide the grid)."""
+    """Resolved (ff, n_exp, nh_keep, ah_keep) for a spec; None where the
+    dim is inapplicable or kept whole (frac == 1.0 keeps every entry even
+    when the parent count doesn't divide the grid)."""
     ff = transformer_ff(cfg, spec.ff_frac)
     n_exp = None
     if cfg.moe is not None and spec.expert_frac < 1.0:
@@ -272,7 +291,10 @@ def _elastic_dims(cfg: ModelConfig, spec: TransformerSubSpec):
     nh_keep = None
     if cfg.ssm is not None and spec.ssm_head_frac < 1.0:
         nh_keep = transformer_ssm_heads(cfg, spec.ssm_head_frac)
-    return ff, n_exp, nh_keep
+    ah_keep = None
+    if spec.attn_head_frac < 1.0:
+        ah_keep = transformer_attn_heads(cfg, spec.attn_head_frac)
+    return ff, n_exp, nh_keep, ah_keep
 
 
 def sub_transformer_config(cfg: ModelConfig,
@@ -282,7 +304,7 @@ def sub_transformer_config(cfg: ModelConfig,
     produces exactly this config, so analytic FLOPs / param counts
     (``configs.base.flops_per_token`` / ``param_count``) of the submodel
     the latency model prices agree with the one the engine trains."""
-    ff, n_exp, nh_keep = _elastic_dims(cfg, spec)
+    ff, n_exp, nh_keep, ah_keep = _elastic_dims(cfg, spec)
     segs = tuple(dataclasses.replace(seg, n_layers=len(keep))
                  for seg, keep in zip(cfg.segments, spec.layers))
     moe = cfg.moe
@@ -292,22 +314,26 @@ def sub_transformer_config(cfg: ModelConfig,
     if ssm is not None and nh_keep is not None:
         ssm = dataclasses.replace(
             ssm, d_inner_override=nh_keep * ssm.head_dim)
+    heads = {}
+    if ah_keep is not None:
+        g = cfg.n_heads // max(cfg.n_kv_heads, 1)
+        heads = dict(n_heads=ah_keep, n_kv_heads=ah_keep // g)
     return dataclasses.replace(
         cfg, name=cfg.name + "-sub", segments=segs,
         n_layers=sum(len(k) for k in spec.layers),
-        d_ff=ff or cfg.d_ff, moe=moe, ssm=ssm)
+        d_ff=ff or cfg.d_ff, moe=moe, ssm=ssm, **heads)
 
 
 def extract_transformer(params: Dict, cfg: ModelConfig,
                         spec: TransformerSubSpec):
     """Returns (sub_params, sub_cfg). Slices stacked per-layer arrays on the
     leading axis (depth) and d_ff / expert / SSD-head axes (width)."""
-    ff, n_exp, nh_keep = _elastic_dims(cfg, spec)
+    ff, n_exp, nh_keep, ah_keep = _elastic_dims(cfg, spec)
 
     def slice_block(tree, keep_idx):
         idx = np.asarray(keep_idx, np.int32)
         sliced = jax.tree.map(lambda a: a[idx], tree)
-        return _slice_width(sliced, ff, n_exp, cfg, nh_keep)
+        return _slice_width(sliced, ff, n_exp, cfg, nh_keep, ah_keep)
 
     sub_segs = []
     for seg_p, seg, keep in zip(params["segments"], cfg.segments,
@@ -328,10 +354,11 @@ def extract_transformer(params: Dict, cfg: ModelConfig,
 
 
 def _slice_width(block_tree, ff: Optional[int], n_exp: Optional[int],
-                 cfg: ModelConfig, nh_keep: Optional[int] = None):
+                 cfg: ModelConfig, nh_keep: Optional[int] = None,
+                 ah_keep: Optional[int] = None):
     """Width-slice mlp d_ff (wi/wg last axis, wo first-after-stack), MoE
-    expert axis, and mamba SSD-head dims inside a (stacked or unstacked)
-    block tree."""
+    expert axis, mamba SSD-head dims, and GQA attention-head dims inside
+    a (stacked or unstacked) block tree."""
     def walk(d):
         if not isinstance(d, dict):
             return d
@@ -344,6 +371,10 @@ def _slice_width(block_tree, ff: Optional[int], n_exp: Optional[int],
                 out[k] = _slice_moe(v, n_exp)
             elif k == "mamba" and nh_keep is not None:
                 out[k] = _slice_mamba(v, nh_keep, cfg.ssm.head_dim)
+            elif k == "attn" and ah_keep is not None:
+                out[k] = _slice_attn(
+                    v, ah_keep,
+                    ah_keep // (cfg.n_heads // max(cfg.n_kv_heads, 1)))
             elif isinstance(v, dict):
                 out[k] = walk(v)
             else:
@@ -373,6 +404,26 @@ def _slice_moe(tree, n_exp):
         elif isinstance(v, dict):
             out[k] = v  # shared experts kept whole
         else:
+            out[k] = v
+    return out
+
+
+def _slice_attn(tree, ah: int, kv: int):
+    """Prefix-slice a GQA attention block to its first ``ah`` query heads
+    (``kv = ah // group`` KV heads — whole query groups only, so the
+    q→kv head mapping is unchanged). Per-head-dim RMS norms (q_norm /
+    k_norm) are shared across heads and stay whole. Leaves may carry a
+    stacked leading layer axis; sliced axes are addressed from the back.
+    """
+    out = {}
+    for k, v in tree.items():
+        if k == "wq":                               # (L?, d, H, hd)
+            out[k] = jax.lax.slice_in_dim(v, 0, ah, axis=v.ndim - 2)
+        elif k in ("wk", "wv"):                     # (L?, d, KV, hd)
+            out[k] = jax.lax.slice_in_dim(v, 0, kv, axis=v.ndim - 2)
+        elif k == "wo":                             # (L?, H, hd, d)
+            out[k] = jax.lax.slice_in_dim(v, 0, ah, axis=v.ndim - 3)
+        else:                                       # q_norm, k_norm
             out[k] = v
     return out
 

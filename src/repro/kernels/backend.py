@@ -1,0 +1,34 @@
+"""Backend resolution shared by the kernel modules.
+
+Lives in its own leaf module (not ``dispatch``) so the kernels
+themselves — ``flash_attention``, ``ssd_scan`` — can derive their
+default ``interpret`` flag from the host without importing the dispatch
+layer that imports them back.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+BACKENDS = ("xla", "interpret", "tpu")
+
+
+def resolve_backend(backend: Optional[str] = "auto") -> str:
+    """'auto' -> 'tpu' on TPU hosts, 'interpret' elsewhere."""
+    if backend in (None, "auto", True):
+        return "tpu" if jax.default_backend() == "tpu" else "interpret"
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got "
+                         f"{backend!r}")
+    return backend
+
+
+def default_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve a kernel's ``interpret`` argument: ``None`` (the default
+    for standalone callers) follows ``resolve_backend("auto")`` —
+    compiled Pallas on TPU hosts, the CPU-safe interpreter elsewhere.
+    ``kernels.dispatch`` always passes an explicit bool."""
+    if interpret is None:
+        return resolve_backend("auto") != "tpu"
+    return bool(interpret)

@@ -35,20 +35,30 @@ op         contract
            matmul that skips routed-expert blocks ``>= g_active``
            (= sum of the expert mask). Injected into
            ``models.moe._dispatch_compute_combine``; differentiable.
+           The op also carries ``op.dispatch`` / ``op.combine`` — the
+           scalar-prefetched gather / gather-reduce token-movement pair
+           (``kernels.moe_dispatch``) whose VJPs are gathers again, so
+           per-cohort row traffic scales with what the router routed in
+           both passes.
 ``ssd``    ``op(xh, dt, A, Bm, Cm, chunk, head_mask=None)`` — SSD chunk
-           scan skipping head blocks past ``sum(head_mask)``. Forward is
-           the Pallas kernel; backward runs the dense masked XLA
-           reference (``models.ssm.ssd_chunked``) under ``jax.vjp`` — the
-           scan transpose is not worth a hand-written kernel yet (the
-           op sits under ``jax.checkpoint`` anyway, so the reference
-           recompute is already the backward's cost model).
+           scan skipping head blocks past ``sum(head_mask)``. Forward
+           *and* backward are Pallas kernels: the custom VJP re-runs the
+           forward for the per-chunk initial states, then calls the
+           transposed chunk-scan kernel (``kernels.ssd_scan.
+           ssd_scan_bwd``) under the same head prefix — masked heads are
+           skipped, not zeroed, in both passes.
+``attention`` ``op(q, k, v, causal=..., window=..., cap=...,
+           head_mask=None)`` — elastic flash attention
+           (``kernels.flash_attention``): query-head blocks past
+           ``sum(head_mask)`` are skipped in the forward and in the
+           dedicated dq and dk/dv backward kernels. The prefix is a
+           scalar-prefetch operand, so the vmapped cohort carries
+           per-client head prefixes with zero recompiles. GQA maps each
+           query head to its KV head inside the kernel.
 ``conv``   ``op(params, x, stride, cin_active, cout_active)`` — im2col
            channel-prefix conv (``kernels.elastic_conv``): input-channel
            prefix becomes a contraction prefix, output-channel prefix an
            output prefix, bias fused; differentiable end to end.
-``attention`` (model_kernels back-compat only) — flash attention; not
-           elastic and forward-only, so it is *not* part of the family
-           tables the training engine uses.
 =========  ==================================================================
 """
 from __future__ import annotations
@@ -60,22 +70,13 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import BACKENDS, resolve_backend
 from repro.kernels.elastic_conv import elastic_conv2d
 from repro.kernels.elastic_matmul import elastic_dense
+from repro.kernels.flash_attention import flash_attention
 from repro.kernels.grouped_matmul import grouped_elastic_matmul
-from repro.kernels.ssd_scan import ssd_scan
-
-BACKENDS = ("xla", "interpret", "tpu")
-
-
-def resolve_backend(backend: Optional[str] = "auto") -> str:
-    """'auto' -> 'tpu' on TPU hosts, 'interpret' elsewhere."""
-    if backend in (None, "auto", True):
-        return "tpu" if jax.default_backend() == "tpu" else "interpret"
-    if backend not in BACKENDS:
-        raise ValueError(f"backend must be one of {BACKENDS}, got "
-                         f"{backend!r}")
-    return backend
+from repro.kernels.moe_dispatch import moe_combine, moe_dispatch
+from repro.kernels.ssd_scan import ssd_scan, ssd_scan_bwd
 
 
 def _active_len(mask) -> jax.Array:
@@ -107,14 +108,24 @@ def _make_moe_op(interpret: bool):
     def op(eb, w, g_active):
         return grouped_elastic_matmul(eb, w.astype(eb.dtype), g_active,
                                       interpret=interpret)
+    # the fused token-movement pair: models.moe routes its wide (·,d)
+    # dispatch/combine row traffic through these when present
+    op.dispatch = functools.partial(moe_dispatch, interpret=interpret)
+    op.combine = functools.partial(moe_combine, interpret=interpret)
     return op
 
 
 @functools.lru_cache(maxsize=None)
 def _make_ssd_prefix(chunk: int, interpret: bool, has_mask: bool):
-    """custom-vjp SSD op: Pallas head-prefix forward, dense masked XLA
-    reference backward (see module docstring)."""
-    from repro.models.ssm import ssd_chunked
+    """custom-vjp SSD op: Pallas head-prefix forward, Pallas transposed
+    chunk-scan backward (``ssd_scan_bwd``) closed under the same head
+    prefix — masked heads are skipped, not zeroed, in both passes."""
+    def _bwd_from(res, dy, ha):
+        xh, dt, A, Bm, Cm = res
+        _, states = ssd_scan(xh, dt, A, Bm, Cm, chunk, h_active=ha,
+                             interpret=interpret, return_states=True)
+        return ssd_scan_bwd(xh, dt, A, Bm, Cm, states, dy, chunk,
+                            h_active=ha, interpret=interpret)
 
     if has_mask:
         @jax.custom_vjp
@@ -128,14 +139,9 @@ def _make_ssd_prefix(chunk: int, interpret: bool, has_mask: bool):
                 (xh, dt, A, Bm, Cm, head_mask)
 
         def bwd(res, dy):
-            xh, dt, A, Bm, Cm, head_mask = res
-
-            def g(xh, dt, A, Bm, Cm):
-                y, _ = ssd_chunked(xh, dt, A, Bm, Cm, chunk)
-                return y * head_mask[None, None, :, None].astype(y.dtype)
-
-            _, vjp = jax.vjp(g, xh, dt, A, Bm, Cm)
-            return vjp(dy) + (jnp.zeros_like(head_mask),)
+            *prim, head_mask = res
+            grads = _bwd_from(tuple(prim), dy, _active_len(head_mask))
+            return grads + (jnp.zeros_like(head_mask),)
     else:
         @jax.custom_vjp
         def f(xh, dt, A, Bm, Cm):
@@ -145,10 +151,7 @@ def _make_ssd_prefix(chunk: int, interpret: bool, has_mask: bool):
             return f(xh, dt, A, Bm, Cm), (xh, dt, A, Bm, Cm)
 
         def bwd(res, dy):
-            xh, dt, A, Bm, Cm = res
-            _, vjp = jax.vjp(
-                lambda *a: ssd_chunked(*a, chunk)[0], xh, dt, A, Bm, Cm)
-            return vjp(dy)
+            return _bwd_from(res, dy, None)
 
     f.defvjp(fwd, bwd)
     return f
@@ -161,6 +164,13 @@ def _make_ssd_op(interpret: bool):
         if head_mask is None:
             return f(xh, dt, A, Bm, Cm), None
         return f(xh, dt, A, Bm, Cm, head_mask), None
+    return op
+
+
+def _make_attention_op(interpret: bool):
+    def op(q, k, v, *, causal=True, window=None, cap=None, head_mask=None):
+        return flash_attention(q, k, v, head_mask, causal=causal,
+                               window=window, cap=cap, interpret=interpret)
     return op
 
 
@@ -194,7 +204,8 @@ class KernelDispatch:
             return {"conv": _make_conv_op(self.interpret)}
         return {"mlp": _make_mlp_op(self.interpret),
                 "moe": _make_moe_op(self.interpret),
-                "ssd": _make_ssd_op(self.interpret)}
+                "ssd": _make_ssd_op(self.interpret),
+                "attention": _make_attention_op(self.interpret)}
 
 
 def kernel_dispatch(backend: Optional[str] = "auto") -> KernelDispatch:

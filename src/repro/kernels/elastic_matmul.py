@@ -68,6 +68,35 @@ def _last_block(active, b):
     return jnp.maximum((active + b - 1) // b - 1, 0)
 
 
+def edense_index_maps(bm, bn, bk):
+    """The (x, w, bias) BlockSpec index maps of one elastic_dense launch
+    — exported for the roofline gate's DMA accounting.
+
+    Scalars: s[0]=k_active, s[1]=n_active, s[2]=m_active. Live tiles
+    clamp each axis to its last active block; *dead* output tiles
+    (row/col past the m/n prefixes) freeze the whole request at K-block
+    0, so a skipped tile re-requests the resident block and Pallas
+    issues no DMA at all — skipping saves HBM bandwidth, not just MXU
+    issue slots."""
+    def dead(i, j, s):
+        return (i * bm >= s[2]) | (j * bn >= s[1])
+
+    def kcl(i, j, kk, s):
+        return jnp.where(dead(i, j, s), 0,
+                         jnp.minimum(kk, _last_block(s[0], bk)))
+
+    def xmap(i, j, kk, s):
+        return (jnp.minimum(i, _last_block(s[2], bm)), kcl(i, j, kk, s))
+
+    def wmap(i, j, kk, s):
+        return (kcl(i, j, kk, s), jnp.minimum(j, _last_block(s[1], bn)))
+
+    def bmap(i, j, kk, s):
+        return (0, jnp.minimum(j, _last_block(s[1], bn)))
+
+    return xmap, wmap, bmap
+
+
 # ---------------------------------------------------------------------------
 # the kernel
 # ---------------------------------------------------------------------------
@@ -138,20 +167,16 @@ def _edense_call(x, w, bias, ka, na, ma, *, act, bm, bn, bk, interpret):
                          jnp.asarray(ma, jnp.int32)])
 
     # clamped index maps: tiles outside the active prefixes re-request the
-    # last active block — an unchanged index between consecutive grid
-    # steps, i.e. no DMA is issued for skipped tiles
+    # resident block — an unchanged index between consecutive grid steps,
+    # i.e. no DMA is issued for skipped tiles (see edense_index_maps)
+    xmap, wmap, bmap = edense_index_maps(bm, bn, bk)
     in_specs = [
-        pl.BlockSpec((bm, bk), lambda i, j, kk, s: (
-            jnp.minimum(i, _last_block(s[2], bm)),
-            jnp.minimum(kk, _last_block(s[0], bk)))),
-        pl.BlockSpec((bk, bn), lambda i, j, kk, s: (
-            jnp.minimum(kk, _last_block(s[0], bk)),
-            jnp.minimum(j, _last_block(s[1], bn)))),
+        pl.BlockSpec((bm, bk), xmap),
+        pl.BlockSpec((bk, bn), wmap),
     ]
     args = [x, w]
     if has_bias:
-        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk, s: (
-            0, jnp.minimum(j, _last_block(s[1], bn)))))
+        in_specs.append(pl.BlockSpec((1, bn), bmap))
         args.append(bias.reshape(1, Np))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(

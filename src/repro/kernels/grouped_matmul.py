@@ -51,6 +51,27 @@ def _kernel(s_ref, xs_ref, ws_ref, o_ref, acc_ref, *, nk):
         o_ref[0] = jnp.where(g < ga, acc_ref[...], 0.0).astype(o_ref.dtype)
 
 
+def grouped_index_maps():
+    """BlockSpec index maps of one grouped launch, in operand order
+    (xs, ws). A dead expert (g >= g_active) freezes the whole block
+    request — group clamped to the last active expert *and* the (i, kk) /
+    (kk, j) stream coordinates pinned to 0 — so skipped expert blocks
+    issue no DMA at all. Exported for the roofline gate's DMA
+    accounting."""
+    def gcl(g, s):
+        return jnp.minimum(g, _last_block(s[0], 1))
+
+    def xs_map(g, i, j, kk, s):
+        live = g < s[0]
+        return (gcl(g, s), jnp.where(live, i, 0), jnp.where(live, kk, 0))
+
+    def ws_map(g, i, j, kk, s):
+        live = g < s[0]
+        return (gcl(g, s), jnp.where(live, kk, 0), jnp.where(live, j, 0))
+
+    return xs_map, ws_map
+
+
 def _grouped_call(xs, ws, ga, *, bm, bn, bk, interpret):
     G, M, K = xs.shape
     G2, K2, N = ws.shape
@@ -66,17 +87,13 @@ def _grouped_call(xs, ws, ga, *, bm, bn, bk, interpret):
     nk = Kp // bk
     scalars = jnp.asarray(ga, jnp.int32).reshape(1)
 
-    def gcl(g, s):
-        return jnp.minimum(g, _last_block(s[0], 1))
-
+    xs_map, ws_map = grouped_index_maps()
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(G, Mp // bm, Np // bn, nk),
         in_specs=[
-            pl.BlockSpec((1, bm, bk),
-                         lambda g, i, j, kk, s: (gcl(g, s), i, kk)),
-            pl.BlockSpec((1, bk, bn),
-                         lambda g, i, j, kk, s: (gcl(g, s), kk, j)),
+            pl.BlockSpec((1, bm, bk), xs_map),
+            pl.BlockSpec((1, bk, bn), ws_map),
         ],
         out_specs=pl.BlockSpec((1, bm, bn),
                                lambda g, i, j, kk, s: (g, i, j)),

@@ -8,8 +8,6 @@ width kernel was previously exported but unreachable from
 """
 from __future__ import annotations
 
-import functools
-
 import jax.numpy as jnp
 
 from repro.kernels.dispatch import kernel_dispatch
@@ -19,11 +17,13 @@ from repro.kernels.ssd_scan import ssd_scan
 
 
 def attention_op(q, k, v, *, causal=True, window=None, cap=None,
-                 interpret=True, bq=128, bk=256):
+                 head_mask=None, interpret=True, bq=128, bk=256):
     """(B,Sq,H,D)x(B,Sk,KV,D) -> (B,Sq,H,D); contract matches
-    models.attention.chunked_attention."""
-    return flash_attention(q, k, v, causal=causal, window=window, cap=cap,
-                           bq=bq, bk=bk, interpret=interpret)
+    models.attention.chunked_attention. Differentiable and elastic over
+    ``head_mask`` (runtime head prefix) — thin alias over the dispatch
+    table's ``attention`` op."""
+    return flash_attention(q, k, v, head_mask, causal=causal, window=window,
+                           cap=cap, bq=bq, bk=bk, interpret=interpret)
 
 
 def ssd_op(xh, dt, A, Bm, Cm, chunk, *, head_mask=None, interpret=True):
@@ -44,10 +44,8 @@ def elastic_mlp_matmul(x, w, k_active, *, interpret=True):
 
 
 def model_kernels(interpret: bool = True):
-    """Back-compat model-facing dict: the dispatch table (mlp / moe / ssd
-    elastic ops) plus flash attention (not elastic, forward-only)."""
-    table = kernel_dispatch("interpret" if interpret else "tpu").table(
+    """Back-compat model-facing dict: the dispatch table (mlp / moe / ssd /
+    attention elastic ops — attention included since the flash kernel grew
+    its head prefix + backward)."""
+    return kernel_dispatch("interpret" if interpret else "tpu").table(
         "transformer")
-    table["attention"] = functools.partial(attention_op,
-                                           interpret=interpret)
-    return table

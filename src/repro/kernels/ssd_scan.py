@@ -1,4 +1,5 @@
-"""Mamba2 SSD chunk scan (Pallas TPU), with a head-prefix skip.
+"""Mamba2 SSD chunk scan (Pallas TPU), forward *and* backward, with a
+head-prefix skip.
 
 One grid cell = one (batch, head) × one chunk; the chunk axis is the
 innermost *sequential* grid dimension and the SSM state h (P×N, fp32)
@@ -7,13 +8,22 @@ SSD: intra-chunk compute is dense (Q×Q decay-masked score matmul on the
 MXU), inter-chunk is a rank-preserving state pass, no HBM round-trip for
 the state.
 
+The backward (``ssd_scan_bwd``) is the transposed scan: chunks are
+visited in *reverse* order (the index maps flip the chunk axis, the grid
+itself stays forward-ordered), and the decay-weighted state cotangent
+``dh`` (P×N, fp32) persists in VMEM scratch exactly like ``h`` does in
+the forward. Each chunk needs the state the forward *entered* it with,
+so ``ssd_scan(..., return_states=True)`` also emits the per-chunk
+initial states — the backward caller reruns the forward once (flash
+style) instead of saving O(S·P) activations.
+
 CFL elasticity: a submodel keeps a *prefix* of SSD heads
 (``core.submodel.extract_transformer``). ``h_active`` is a runtime int32
 scalar-prefetch operand — grid cells whose head index is past the prefix
 issue no compute and write zeros, and their BlockSpec index maps clamp to
 the last active head so no DMA is spent on the inactive suffix. Masked
-compute is therefore *skipped*, not zeroed, and spec churn never
-recompiles (the scalar is traced).
+compute is therefore *skipped*, not zeroed, in both passes, and spec
+churn never recompiles (the scalar is traced).
 
 Block shapes: x (Q,P), B/C (Q,N), dt (Q,) with Q=chunk (≤256), P=head_dim
 (64..128), N=d_state (64..128) — everything fits VMEM with room for
@@ -28,13 +38,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.backend import default_interpret
+
 # jax renamed TPUCompilerParams -> CompilerParams across releases
 _CompilerParams = getattr(pltpu, "CompilerParams",
                           getattr(pltpu, "TPUCompilerParams", None))
 
 
-def _kernel(s_ref, x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
-            q, n_heads):
+def _kernel(s_ref, x_ref, dt_ref, a_ref, b_ref, c_ref, *refs, q, n_heads,
+            with_states):
+    if with_states:
+        y_ref, st_ref, h_ref = refs
+    else:
+        y_ref, h_ref = refs
     bh, ci = pl.program_id(0), pl.program_id(1)
     head = jax.lax.rem(bh, n_heads)
     ha = s_ref[0]
@@ -42,6 +58,8 @@ def _kernel(s_ref, x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
     @pl.when(head >= ha)
     def _skip():
         y_ref[...] = jnp.zeros_like(y_ref)
+        if with_states:
+            st_ref[...] = jnp.zeros_like(st_ref)
 
     @pl.when(head < ha)
     def _compute():
@@ -67,6 +85,8 @@ def _kernel(s_ref, x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
         y_intra = jax.lax.dot_general(CB * M, xdt, (((1,), (0,)), ((), ())),
                                       preferred_element_type=jnp.float32)
         h = h_ref[...]                                   # (P,N)
+        if with_states:
+            st_ref[0, 0, 0] = h.astype(st_ref.dtype)     # chunk-initial state
         y_inter = jnp.exp(cum)[:, None] * jax.lax.dot_general(
             Cm, h, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -79,16 +99,63 @@ def _kernel(s_ref, x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
         h_ref[...] = h * jnp.exp(cum[-1]) + S_c
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _head_clamp(H):
+    def hcl(bh, s):
+        # clamp the head index to the last active head: skipped cells
+        # re-request a resident block (no DMA)
+        return jnp.minimum(jax.lax.rem(bh, H),
+                           jnp.maximum(s[0] - 1, 0))
+    return hcl
+
+
+def _chunk_clamp(H):
+    def cc(bh, ci, s):
+        # skipped heads also freeze the chunk stream: a dead (bh, ci)
+        # cell re-requests chunk 0 of the clamped head — resident, no DMA
+        return jnp.where(jax.lax.rem(bh, H) < s[0], ci, 0)
+    return cc
+
+
+def ssd_fwd_index_maps(H):
+    """The forward kernel's input index maps, in ``pallas_call`` order
+    (x, dt, A, B, C) — exported so the roofline gate can measure DMA
+    block requests from the *actual* maps the kernel runs with."""
+    hcl, cc = _head_clamp(H), _chunk_clamp(H)
+    xm = lambda bh, ci, s: (bh // H, cc(bh, ci, s), hcl(bh, s), 0)
+    return [xm,
+            lambda bh, ci, s: (bh // H, cc(bh, ci, s), hcl(bh, s)),
+            lambda bh, ci, s: (hcl(bh, s),),
+            xm, xm]
+
+
+def ssd_bwd_index_maps(H, nc):
+    """The backward kernel's input index maps (x, dt, A, B, C, states,
+    dy): the chunk axis is flipped (``nc-1-ci``) — the transposed scan
+    walks chunks in reverse while the grid stays forward-ordered."""
+    hcl, cc = _head_clamp(H), _chunk_clamp(H)
+    rc = lambda bh, ci, s: cc(bh, nc - 1 - ci, s)
+    xm = lambda bh, ci, s: (bh // H, rc(bh, ci, s), hcl(bh, s), 0)
+    return [xm,
+            lambda bh, ci, s: (bh // H, rc(bh, ci, s), hcl(bh, s)),
+            lambda bh, ci, s: (hcl(bh, s),),
+            xm, xm,
+            lambda bh, ci, s: (bh // H, rc(bh, ci, s), hcl(bh, s), 0, 0),
+            xm]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "interpret", "return_states"))
 def ssd_scan(xh, dt, A, Bm, Cm, chunk: int = 128, *, h_active=None,
-             interpret: bool = True):
+             interpret: bool | None = None, return_states: bool = False):
     """xh: (B,S,H,P)  dt: (B,S,H)  A: (H,)  Bm/Cm: (B,S,G,N).
 
     h_active: runtime int32 head prefix (None = all heads); heads past it
-    are skipped (zero output, no matmul, no DMA). Returns y (B,S,H,P).
-    (Final state stays in scratch; the training path doesn't need it —
-    decode uses ssm.mamba_decode.)
+    are skipped (zero output, no matmul, no DMA). Returns y (B,S,H,P); with
+    ``return_states=True`` also the per-chunk *initial* states
+    (B, S/chunk, H, P, N) — the residual ``ssd_scan_bwd`` consumes.
+    (Decode uses ssm.mamba_decode.)
     """
+    interpret = default_interpret(interpret)
     B, S, H, P = xh.shape
     G, N = Bm.shape[2], Bm.shape[3]
     assert S % chunk == 0
@@ -101,35 +168,212 @@ def ssd_scan(xh, dt, A, Bm, Cm, chunk: int = 128, *, h_active=None,
     ha = jnp.asarray(H if h_active is None else h_active,
                      jnp.int32).reshape(1)
 
-    def hcl(bh, s):
-        # clamp the head index to the last active head: skipped cells
-        # re-request a resident block (no DMA)
-        return jnp.minimum(jax.lax.rem(bh, H),
-                           jnp.maximum(s[0] - 1, 0))
-
+    maps = ssd_fwd_index_maps(H)
+    in_specs = [
+        pl.BlockSpec((1, chunk, 1, P), maps[0]),
+        pl.BlockSpec((1, chunk, 1), maps[1]),
+        pl.BlockSpec((1,), maps[2]),
+        pl.BlockSpec((1, chunk, 1, N), maps[3]),
+        pl.BlockSpec((1, chunk, 1, N), maps[4]),
+    ]
+    y_spec = pl.BlockSpec((1, chunk, 1, P),
+                          lambda bh, ci, s: (bh // H, ci, bh % H, 0))
+    out_specs = y_spec
+    out_shape = jax.ShapeDtypeStruct(xh.shape, xh.dtype)
+    if return_states:
+        st_spec = pl.BlockSpec(
+            (1, 1, 1, P, N),
+            lambda bh, ci, s: (bh // H, ci, bh % H, 0, 0))
+        out_specs = [y_spec, st_spec]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((B, nc, H, P, N), jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, chunk, 1, P),
-                         lambda bh, ci, s: (bh // H, ci, hcl(bh, s), 0)),
-            pl.BlockSpec((1, chunk, 1),
-                         lambda bh, ci, s: (bh // H, ci, hcl(bh, s))),
-            pl.BlockSpec((1,), lambda bh, ci, s: (hcl(bh, s),)),
-            pl.BlockSpec((1, chunk, 1, N),
-                         lambda bh, ci, s: (bh // H, ci, hcl(bh, s), 0)),
-            pl.BlockSpec((1, chunk, 1, N),
-                         lambda bh, ci, s: (bh // H, ci, hcl(bh, s), 0)),
-        ],
-        out_specs=pl.BlockSpec((1, chunk, 1, P),
-                               lambda bh, ci, s: (bh // H, ci, bh % H, 0)),
+        in_specs=in_specs,
+        out_specs=out_specs,
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
     )
     return pl.pallas_call(
-        functools.partial(_kernel, q=chunk, n_heads=H),
+        functools.partial(_kernel, q=chunk, n_heads=H,
+                          with_states=return_states),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct(xh.shape, xh.dtype),
+        out_shape=out_shape,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(ha, xh, dt, A, Bm, Cm)
+
+
+def _bwd_kernel(s_ref, x_ref, dt_ref, a_ref, b_ref, c_ref, st_ref, dy_ref,
+                dx_ref, ddt_ref, du_ref, db_ref, dc_ref, dh_ref, *,
+                q, n_heads):
+    """One reverse-order chunk of the transposed SSD scan.
+
+    dh (the cotangent of the state *entering* the next-later chunk) lives
+    in VMEM scratch; each step consumes the incoming dh, emits this
+    chunk's dx/ddt/du/dB/dC blocks, and leaves ``dh = E_Q·dh + dh_y`` for
+    the chunk before it. ``du`` is the cotangent of ``u = dt·A`` — the
+    host reduces it to dA (and folds it into ddt) so the kernel never
+    needs a cross-chunk reduction.
+    """
+    bh, ci = pl.program_id(0), pl.program_id(1)
+    head = jax.lax.rem(bh, n_heads)
+    ha = s_ref[0]
+
+    @pl.when(head >= ha)
+    def _skip():
+        dx_ref[...] = jnp.zeros_like(dx_ref)
+        ddt_ref[...] = jnp.zeros_like(ddt_ref)
+        du_ref[...] = jnp.zeros_like(du_ref)
+        db_ref[...] = jnp.zeros_like(db_ref)
+        dc_ref[...] = jnp.zeros_like(dc_ref)
+
+    @pl.when(head < ha)
+    def _compute():
+        @pl.when(ci == 0)
+        def _init():
+            dh_ref[...] = jnp.zeros_like(dh_ref)
+
+        x = x_ref[0, :, 0, :].astype(jnp.float32)       # (Q,P)
+        dt = dt_ref[0, :, 0].astype(jnp.float32)        # (Q,)
+        A = a_ref[0]
+        Bm = b_ref[0, :, 0, :].astype(jnp.float32)      # (Q,N)
+        Cm = c_ref[0, :, 0, :].astype(jnp.float32)      # (Q,N)
+        h_in = st_ref[0, 0, 0].astype(jnp.float32)      # (P,N)
+        dy = dy_ref[0, :, 0, :].astype(jnp.float32)     # (Q,P)
+
+        cum = jnp.cumsum(dt * A)
+        diff = cum[:, None] - cum[None, :]
+        tri = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+            jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+        L = jnp.where(tri, jnp.exp(diff), 0.0)
+        CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        xdt = x * dt[:, None]
+        e = jnp.exp(cum)                                 # (Q,)
+        E_Q = jnp.exp(cum[-1])
+        w_end = jnp.exp(cum[-1] - cum)                   # (Q,)
+
+        dh_out = dh_ref[...]                             # (P,N)
+
+        # intra-chunk: y_intra = (CB∘L) @ xdt
+        dG = jax.lax.dot_general(dy, xdt, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        dCB = dG * L
+        DL = dCB * CB                                    # dG∘CB∘L
+        dxdt = jax.lax.dot_general(CB * L, dy, (((0,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+        dC = jax.lax.dot_general(dCB, Bm, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        dB = jax.lax.dot_general(dCB, Cm, (((0,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+        # inter-chunk read: y_inter = e ∘ (C @ h_inᵀ)
+        CH = jax.lax.dot_general(Cm, h_in, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        dcum = DL.sum(1) - DL.sum(0) + jnp.sum(dy * CH, axis=1) * e
+        dC = dC + e[:, None] * jax.lax.dot_general(
+            dy, h_in, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dh_y = jax.lax.dot_general(dy * e[:, None], Cm,
+                                   (((0,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+
+        # state write: h_out = E_Q·h_in + Σ_s w_s·(xdt_s ⊗ B_s)
+        XD = jax.lax.dot_general(xdt, dh_out, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        T = jnp.sum(XD * Bm, axis=1)                     # (Q,)
+        dxdt = dxdt + w_end[:, None] * jax.lax.dot_general(
+            Bm, dh_out, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dB = dB + w_end[:, None] * XD
+        dcum = dcum - T * w_end
+        last = E_Q * jnp.sum(dh_out * h_in) + jnp.sum(T * w_end)
+
+        # cum = cumsum(u): du_s = Σ_{t≥s} dcum_t; `last` is the cum[-1]
+        # term (decay-to-end + carried state), which lands on every s.
+        du = (jnp.sum(dcum) + last) - jnp.cumsum(dcum) + dcum
+
+        dh_ref[...] = dh_out * E_Q + dh_y
+
+        dx_ref[0, :, 0, :] = (dxdt * dt[:, None]).astype(dx_ref.dtype)
+        ddt_ref[0, :, 0] = (jnp.sum(dxdt * x, axis=1) +
+                            du * A).astype(ddt_ref.dtype)
+        du_ref[0, :, 0] = du.astype(du_ref.dtype)
+        db_ref[0, :, 0, :] = dB.astype(db_ref.dtype)
+        dc_ref[0, :, 0, :] = dC.astype(dc_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_bwd(xh, dt, A, Bm, Cm, states, dy, chunk: int = 128, *,
+                 h_active=None, interpret: bool | None = None):
+    """VJP of ``ssd_scan`` w.r.t. (xh, dt, A, Bm, Cm).
+
+    ``states`` is the (B, S/chunk, H, P, N) per-chunk initial-state array
+    from ``ssd_scan(..., return_states=True)``; ``dy`` the output
+    cotangent. Heads past ``h_active`` produce exactly-zero cotangents
+    (and clamp their DMA like the forward). GQA (G < H) group-sums dB/dC
+    on the host. Returns (dxh, ddt, dA, dBm, dCm).
+    """
+    interpret = default_interpret(interpret)
+    B, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert S % chunk == 0
+    nc = S // chunk
+    rep = H // G
+    Bf, Cf = Bm, Cm
+    if rep != 1:
+        Bf = jnp.repeat(Bm, rep, axis=2)
+        Cf = jnp.repeat(Cm, rep, axis=2)
+    grid = (B * H, nc)
+    ha = jnp.asarray(H if h_active is None else h_active,
+                     jnp.int32).reshape(1)
+
+    maps = ssd_bwd_index_maps(H, nc)
+    flip = lambda bh, ci, s: (bh // H, nc - 1 - ci, bh % H, 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), maps[0]),
+            pl.BlockSpec((1, chunk, 1), maps[1]),
+            pl.BlockSpec((1,), maps[2]),
+            pl.BlockSpec((1, chunk, 1, N), maps[3]),
+            pl.BlockSpec((1, chunk, 1, N), maps[4]),
+            pl.BlockSpec((1, 1, 1, P, N), maps[5]),
+            pl.BlockSpec((1, chunk, 1, P), maps[6]),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), flip),
+            pl.BlockSpec((1, chunk, 1),
+                         lambda bh, ci, s: (bh // H, nc - 1 - ci, bh % H)),
+            pl.BlockSpec((1, chunk, 1),
+                         lambda bh, ci, s: (bh // H, nc - 1 - ci, bh % H)),
+            pl.BlockSpec((1, chunk, 1, N), flip),
+            pl.BlockSpec((1, chunk, 1, N), flip),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+    )
+    dxh, ddt, du, dBf, dCf = pl.pallas_call(
+        functools.partial(_bwd_kernel, q=chunk, n_heads=H),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(xh.shape, xh.dtype),
+            jax.ShapeDtypeStruct(dt.shape, dt.dtype),
+            jax.ShapeDtypeStruct(dt.shape, jnp.float32),
+            jax.ShapeDtypeStruct(Bf.shape, Bm.dtype),
+            jax.ShapeDtypeStruct(Cf.shape, Cm.dtype),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(ha, xh, dt, A, Bf, Cf, states, dy)
+    # u = dt·A: the A cotangent is a host-side reduction of du (zero for
+    # skipped heads, so dA inherits the prefix for free).
+    dA = jnp.einsum("bsh,bsh->h", du,
+                    dt.astype(jnp.float32)).astype(A.dtype)
+    if rep != 1:
+        dBf = dBf.reshape(B, S, G, rep, N).sum(axis=3)
+        dCf = dCf.reshape(B, S, G, rep, N).sum(axis=3)
+    return dxh, ddt, dA, dBf, dCf

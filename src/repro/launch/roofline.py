@@ -414,6 +414,103 @@ def model_flops_for(cfg, shape_name: str, kind: str) -> float:
     return 2.0 * n * s.global_batch      # decode: one token
 
 
+# ---------------------------------------------------------------------------
+# Pallas launch-geometry accounting — the elastic-kernel CI gate
+# ---------------------------------------------------------------------------
+def count_block_loads(grid, index_maps, scalars) -> List[int]:
+    """Per-input DMA block loads of a Pallas launch, measured from its
+    *actual* BlockSpec index maps.
+
+    Walks the grid in row-major order (last axis fastest — the TPU
+    iteration order) evaluating each map with the real scalar-prefetch
+    operand; a load is counted whenever the map's block index differs
+    from the previous grid step's (Pallas's pipeline elides re-requests
+    of the resident block — the tile-skipping kernels' no-DMA contract).
+    Reverting a clamp in a kernel's index map changes these counts, which
+    is exactly what the bench ``--check`` gate compares against the
+    recorded JSON. Returns one count per index map."""
+    import itertools
+
+    import numpy as np
+
+    s = np.asarray(scalars, dtype=np.int32).reshape(-1)
+    loads = [0] * len(index_maps)
+    prev: List[Optional[tuple]] = [None] * len(index_maps)
+    for idx in itertools.product(*[range(int(g)) for g in grid]):
+        for m, imap in enumerate(index_maps):
+            blk = imap(*idx, s)
+            blk = tuple(int(v) for v in blk)
+            if blk != prev[m]:
+                loads[m] += 1
+                prev[m] = blk
+    return loads
+
+
+def tile_arithmetic_intensity(row: Dict) -> Optional[float]:
+    """Executed compute tiles per DMA block load — the launch-geometry
+    analogue of FLOPs/byte. Proportional tile-skipping keeps it roughly
+    flat across active fractions; a reverted index-map clamp keeps the
+    DMA at the dense level while tiles shrink, cratering it."""
+    dma = row.get("dma_blocks")
+    if not dma:
+        return None
+    return row["tiles_executed"] / dma
+
+
+def gate_elastic_rows(rows: List[Dict], *, err_tol: float = 1e-5,
+                      prop_slack: float = 0.16,
+                      ai_floor: float = 0.45) -> List[str]:
+    """Pass/fail the elastic-kernel bench rows (the CI roofline gate).
+
+    Per (op, pass) sweep of ``kernel_path == 'tile-skipping'`` rows:
+
+    * parity: every row's ``max_err`` ≤ ``err_tol`` (forward AND vjp);
+    * monotonicity: ``tiles_executed`` strictly increasing in ``frac``;
+    * FLOP proportionality: executed-tile share ≤ frac + ``prop_slack``;
+    * DMA: block loads never exceed the full-width row's;
+    * arithmetic intensity: tiles/DMA-block at any fraction stays ≥
+      ``ai_floor`` × the full-width value.
+
+    Returns a list of failure messages (empty == gate passes)."""
+    fails: List[str] = []
+    groups: Dict[Tuple[str, str], List[Dict]] = defaultdict(list)
+    for r in rows:
+        if r.get("kernel_path") != "tile-skipping":
+            continue
+        if r.get("max_err", 0.0) > err_tol:
+            fails.append(f"{r.get('name', '?')}: max_err "
+                         f"{r['max_err']:.2e} > {err_tol:.0e}")
+        groups[(r.get("op", "?"), r.get("pass", "fwd"))].append(r)
+    for (op, pas), rs in sorted(groups.items()):
+        rs = sorted(rs, key=lambda r: r["frac"])
+        tex = [r["tiles_executed"] for r in rs]
+        if not all(a < b for a, b in zip(tex, tex[1:])):
+            fails.append(f"{op}/{pas}: tiles_executed not strictly "
+                         f"increasing across fractions: {tex}")
+        full = rs[-1]
+        full_ai = tile_arithmetic_intensity(full)
+        for r in rs:
+            share = r["tiles_executed"] / max(full["tiles_executed"], 1)
+            if share > r["frac"] + prop_slack:
+                fails.append(
+                    f"{op}/{pas}@{r['frac']:g}: executed-tile share "
+                    f"{share:.3f} exceeds frac+{prop_slack:g}")
+            dma = r.get("dma_blocks")
+            if dma is not None and full.get("dma_blocks") is not None \
+                    and dma > full["dma_blocks"]:
+                fails.append(
+                    f"{op}/{pas}@{r['frac']:g}: dma_blocks {dma} exceeds "
+                    f"full-width {full['dma_blocks']}")
+            ai = tile_arithmetic_intensity(r)
+            if ai is not None and full_ai is not None \
+                    and ai < ai_floor * full_ai:
+                fails.append(
+                    f"{op}/{pas}@{r['frac']:g}: arithmetic intensity "
+                    f"{ai:.2f} tiles/block < {ai_floor:g}x full-width "
+                    f"{full_ai:.2f} — skipped tiles are still paying DMA")
+    return fails
+
+
 def build_roofline(arch: str, shape: str, mesh_name: str, chips: int,
                    cost: Dict, hlo_text: str, model_flops: float) -> Roofline:
     st = parse_hlo(hlo_text)

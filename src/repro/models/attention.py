@@ -265,9 +265,10 @@ def gqa_forward(p, x, positions, *, n_heads, n_kv, head_dim, rope_theta,
     q = apply_rope(q, positions, rope_theta)
     k = apply_rope(k, positions, rope_theta)
     if kernel is not None:
-        o = kernel(q, k, v, causal=causal, window=window, cap=cap)
-        if head_mask is not None:
-            o = o * head_mask[None, None, :, None].astype(o.dtype)
+        # elastic flash kernel: the head prefix is skipped inside the
+        # kernel (fwd + bwd), not masked after the fact
+        o = kernel(q, k, v, causal=causal, window=window, cap=cap,
+                   head_mask=head_mask)
     else:
         o = dispatch_attention(q, k, v, causal=causal, window=window,
                                cap=cap, head_mask=head_mask)

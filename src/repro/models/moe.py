@@ -61,7 +61,11 @@ def _dispatch_compute_combine(xt, gate_vals, idx, wi, wg, wo, *, E, k, cap,
     kernel: optional grouped-matmul op (repro.kernels.dispatch 'moe'
     contract) — expert blocks past the active prefix are then *skipped*
     (the router never dispatches to them; see moe_forward), not merely
-    zeroed by ``expert_mask``.
+    zeroed by ``expert_mask``. When the op carries ``.dispatch`` /
+    ``.combine`` (the dispatch table's ops do), the wide (·,d) token
+    gather/scatter around the matmul runs as Pallas gather-reduce kernels
+    too (``kernels.moe_dispatch``) — row movement, like the matmul tiles,
+    is then proportional to what the router routed, forward and backward.
     """
     T, d = xt.shape
     E_loc = wi.shape[0]
@@ -76,7 +80,11 @@ def _dispatch_compute_combine(xt, gate_vals, idx, wi, wg, wo, *, E, k, cap,
     gate_of = gate_vals.reshape(-1)[order]
     start = jnp.searchsorted(se, jnp.arange(E_loc), side="left")
     pos_in_e = jnp.arange(T * k) - start[jnp.minimum(se, E_loc - 1)]
-    kept = (se < E_loc) & (pos_in_e < cap)
+    # masked experts (the elastic suffix) count as dropped: their slots
+    # stay empty and their assignments carry gate 0 on every path below
+    ga_i = E_loc if expert_mask is None else \
+        jnp.sum(expert_mask > 0).astype(jnp.int32)
+    kept = (se < ga_i) & (pos_in_e < cap)
     dest = jnp.where(kept, se * cap + pos_in_e, E_loc * cap)
 
     # slot-centric formulation: all wide (·,d) gathers/scatters are sized by
@@ -87,12 +95,25 @@ def _dispatch_compute_combine(xt, gate_vals, idx, wi, wg, wo, *, E, k, cap,
         token_of.astype(jnp.int32), mode="drop")[:-1]
     slot_gate = jnp.zeros((n_slots + 1,), xt.dtype).at[dest].set(
         (kept * gate_of).astype(xt.dtype), mode="drop")[:-1]
-    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
-    eb = xt_pad[jnp.minimum(slot_src, T)].reshape(E_loc, cap, d)
+
+    disp = getattr(kernel, "dispatch", None)
+    comb = getattr(kernel, "combine", None)
+    if disp is not None and comb is not None:
+        # the (t,j)-ordered transpose of the slot tables: the VJPs run
+        # each direction's gather as the other's gather-reduce
+        dest_tj = jnp.zeros((T * k,), jnp.int32).at[order].set(
+            dest.astype(jnp.int32))
+        kept_tj = jnp.zeros((T * k,), jnp.int32).at[order].set(
+            kept.astype(jnp.int32))
+        slot_valid = (slot_src < T).astype(jnp.int32)
+        eb = disp(xt, slot_src, slot_valid, dest_tj, kept_tj,
+                  n_experts=E_loc, cap=cap)
+    else:
+        xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+        eb = xt_pad[jnp.minimum(slot_src, T)].reshape(E_loc, cap, d)
 
     if kernel is not None:
-        g_active = None if expert_mask is None else \
-            jnp.sum(expert_mask > 0).astype(jnp.int32)
+        g_active = None if expert_mask is None else ga_i
         h = kernel(eb, wi, g_active)
         if wg is not None:
             h = a(kernel(eb, wg, g_active)) * h
@@ -109,7 +130,12 @@ def _dispatch_compute_combine(xt, gate_vals, idx, wi, wg, wo, *, E, k, cap,
     if expert_mask is not None:
         y = y * expert_mask[:, None, None].astype(y.dtype)
 
-    y_flat = y.reshape(n_slots, d) * slot_gate[:, None]
+    y_flat = y.reshape(n_slots, d)
+    if disp is not None and comb is not None:
+        gate_eff = gate_vals * kept_tj.reshape(T, k).astype(gate_vals.dtype)
+        return comb(y_flat, gate_eff, dest_tj, slot_src, slot_valid,
+                    slot_gate)
+    y_flat = y_flat * slot_gate[:, None]
     return jnp.zeros((T + 1, d), xt.dtype).at[slot_src].add(
         y_flat, mode="drop")[:-1]
 
@@ -222,7 +248,10 @@ def moe_forward(p, x, moe_cfg, *, act="silu",
             return out.reshape(B, S, d), {"aux_loss": aux_loss,
                                           "z_loss": z_loss}
     else:
-        cap = int(math.ceil(T * k / E * moe_cfg.capacity_factor))
+        # per-cohort capacity: size per-expert slots by the experts the
+        # cohort can actually use (capacity_experts, default all of E)
+        e_cap = moe_cfg.capacity_experts or E
+        cap = int(math.ceil(T * k / e_cap * moe_cfg.capacity_factor))
         cap = max(8, -(-cap // 8) * 8)
         out = _dispatch_compute_combine(
             xt, gate_vals, idx, p["wi"], wg, p["wo"], E=E, k=k, cap=cap,

@@ -304,10 +304,11 @@ def forward(params: Params, cfg: ModelConfig, batch: Dict[str, Any], *,
     aux = jnp.zeros((), jnp.float32)
     depth_masks = None if masks is None else masks.get("depth")
     # the shared (hybrid) block is kept whole by every submodel: its d_ff
-    # differs from cfg.d_ff and its params are shared, so width/depth masks
-    # must not leak into it
+    # differs from cfg.d_ff and its params are shared, so width/depth/head
+    # masks must not leak into it
     shared_masks = None if masks is None else (
-        {k: v for k, v in masks.items() if k not in ("ff", "depth")} or None)
+        {k: v for k, v in masks.items()
+         if k not in ("ff", "depth", "heads")} or None)
     for si, (seg_p, seg) in enumerate(zip(params["segments"], cfg.segments)):
         dm = None if depth_masks is None else depth_masks[si]
         x, a = _segment_forward(seg_p, seg, x, positions, cfg, masks,

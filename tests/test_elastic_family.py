@@ -80,6 +80,23 @@ def test_ssm_masked_forward_matches_extracted(bits, heads):
     _check_masked_equals_extracted(SSMCFG, spec)
 
 
+HEADS = dataclasses.replace(reduced(ARCHS["granite-3-8b"], n_layers=2,
+                                    d_model=64),
+                            name="attn-heads-test", n_heads=8, n_kv_heads=4,
+                            head_dim=8)
+
+
+@settings(max_examples=8, deadline=None)
+@given(bits=st.integers(1, 3),
+       heads=st.sampled_from([0.25, 0.5, 0.75, 1.0]))
+def test_attn_heads_masked_forward_matches_extracted(bits, heads):
+    """GQA head-prefix masking == the sliced submodel (whole query groups:
+    kept KV heads keep their full groups, so the q→kv mapping agrees)."""
+    spec = TransformerSubSpec(layers=(_layers_from_bitmask(2, bits),),
+                              attn_head_frac=heads)
+    _check_masked_equals_extracted(HEADS, spec)
+
+
 def test_moe_masked_forward_matches_extracted():
     """Expert-width masking: exact vs the sliced submodel when neither
     path drops tokens (capacity_factor high enough to hold every token —

@@ -302,3 +302,44 @@ def test_elastic_kernels_keep_two_programs_under_spec_churn():
             batch_size=8, epochs=1, seeds=[r, r + 1])
     assert cache_size(eng._train_eval) == 1
     assert cache_size(agg_mod.aggregate_apply) - agg0 <= 1
+
+
+def test_transformer_kernels_two_programs_under_head_churn():
+    """Attention-head elasticity keeps the engine invariant: per-round
+    churn of attn_head_frac (and ff_frac) with the kernel path on stays
+    at one compiled train+eval program — the elastic flash kernel's head
+    prefix is a vmapped runtime scalar, not a shape."""
+    import dataclasses as dc
+    import importlib
+    from repro.configs import ARCHS, reduced
+    from repro.core.submodel import full_transformer_spec
+    from repro.data import make_lm_dataset
+    from repro.models import transformer as T
+    agg_mod = importlib.import_module("repro.core.aggregate")
+
+    def cache_size(fn):
+        get = getattr(fn, "_cache_size", None)
+        if not callable(get):
+            pytest.skip("jit._cache_size accessor unavailable")
+        return get()
+
+    cfg = reduced(ARCHS["granite-3-8b"], n_layers=2, d_model=64)
+    # widen the head grid so fractional prefixes are non-trivial
+    cfg = dc.replace(cfg, n_heads=8, n_kv_heads=4, head_dim=8)
+    params = T.init_params(jax.random.PRNGKey(2), cfg)
+    datasets = [make_lm_dataset(16, 16, cfg.vocab_size, seed=41 + k)
+                for k in range(2)]
+    eng = BatchedRoundEngine(cfg, lr=0.05, momentum=0.9,
+                             elastic_kernels="interpret")
+    full = full_transformer_spec(cfg)
+    churn = [[dc.replace(full, attn_head_frac=0.5), full],
+             [dc.replace(full, attn_head_frac=0.25, ff_frac=0.5),
+              dc.replace(full, attn_head_frac=0.75)],
+             [full, dc.replace(full, attn_head_frac=0.5, ff_frac=0.25)]]
+    agg0 = cache_size(agg_mod.aggregate_apply)
+    for r, specs in enumerate(churn):
+        params, _, _ = eng.run_fl_round(
+            params, specs, datasets, datasets, [16.0, 16.0],
+            batch_size=8, epochs=1, seeds=[r, r + 1])
+    assert cache_size(eng._train_eval) == 1
+    assert cache_size(agg_mod.aggregate_apply) - agg0 <= 1

@@ -13,6 +13,8 @@ from repro.kernels import (elastic_conv2d, elastic_dense, elastic_matmul,
                            elastic_mlp_matmul, flash_attention,
                            grouped_elastic_matmul, kernel_dispatch,
                            model_kernels, resolve_backend, ssd_scan, ref)
+from repro.kernels.moe_dispatch import moe_combine, moe_dispatch
+from repro.models.attention import chunked_attention
 from repro.models.ssm import ssd_chunked
 
 jax.config.update("jax_enable_x64", False)
@@ -269,6 +271,90 @@ def test_flash_attention_bf16():
                                np.asarray(yr, np.float32), atol=3e-2)
 
 
+@settings(max_examples=8, deadline=None)
+@given(
+    h=st.sampled_from([2, 4]),
+    g=st.sampled_from([1, 2]),
+    ha=st.sampled_from([0, 1, 3, 4]),
+    causal=st.booleans(),
+    window=st.sampled_from([None, 64]),
+)
+def test_flash_attention_head_prefix_matches_masked_ref(h, g, ha, causal,
+                                                        window):
+    """Elastic fwd: heads past the runtime prefix are skipped (exactly
+    zero, no matmul, no DMA); active heads equal the unmasked kernel.
+    ha need not be a group multiple — the q→kv mapping is per-head."""
+    ha = min(ha, h)
+    kv = h // g
+    key = jax.random.PRNGKey(h * 11 + g + ha)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (2, 128, h, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 128, kv, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 128, kv, 32), jnp.float32)
+    mask = (jnp.arange(h) < ha).astype(jnp.float32)
+    y = flash_attention(q, k, v, mask, causal=causal, window=window,
+                        bq=64, bk=64)
+    yr = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    yr = yr * mask[None, None, :, None]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-5)
+    if ha < h:
+        assert float(jnp.abs(y[:, :, ha:, :]).max()) == 0.0
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    ha=st.sampled_from([0, 1, 2, 4]),
+    causal=st.booleans(),
+    window=st.sampled_from([None, 48]),
+)
+def test_flash_attention_grads_match_ref(ha, causal, window):
+    """Elastic bwd: the head-prefix flash VJP (Pallas dq + dkv kernels)
+    == autodiff of the masked reference, including ha ∈ {0, H}."""
+    h, kv = 4, 2
+    key = jax.random.PRNGKey(ha * 7 + int(causal))
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 128, h, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 128, kv, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 128, kv, 32), jnp.float32)
+    mask = (jnp.arange(h) < ha).astype(jnp.float32)
+
+    def loss_k(q, k, v):
+        y = flash_attention(q, k, v, mask, causal=causal, window=window,
+                            bq=64, bk=64)
+        return jnp.sum(jnp.sin(y))
+
+    def loss_r(q, k, v):
+        y = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+        return jnp.sum(jnp.sin(y * mask[None, None, :, None]))
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(q, k, v)
+    for a, r in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r), atol=2e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    bq=st.sampled_from([32, 64, 128]),
+    bk=st.sampled_from([32, 64, 128]),
+    window=st.sampled_from([None, 32, 96]),
+    causal=st.booleans(),
+)
+def test_flash_attention_block_sweep_matches_chunked(bq, bk, window, causal):
+    """Regression (satellite): fully-masked (q,k) tiles — a sliding window
+    whose diagonal band misses a whole block at some (bq, bk) shapes —
+    must contribute exactly nothing, matching the XLA blockwise path."""
+    key = jax.random.PRNGKey(bq + bk * 3 + (window or 0))
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 256, 2, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 256, 2, 32), jnp.float32)
+    y = flash_attention(q, k, v, causal=causal, window=window, bq=bq, bk=bk)
+    yr = chunked_attention(q, k, v, causal=causal, window=window,
+                           q_chunk=64, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-5)
+
+
 # ---------------------------------------------------------------------------
 # SSD scan
 # ---------------------------------------------------------------------------
@@ -325,6 +411,41 @@ def test_ssd_scan_head_prefix_matches_masked_ref(h, g_div, ha_frac, chunk):
     assert float(jnp.abs(y[:, :, ha:, :]).max() if ha < h else 0.0) == 0.0
 
 
+@settings(max_examples=6, deadline=None)
+@given(
+    ha=st.sampled_from([0, 1, 3, 4]),
+    chunk=st.sampled_from([16, 32]),
+)
+def test_ssd_backward_matches_masked_ref_grads(ha, chunk):
+    """The transposed chunk-scan Pallas backward (dispatch 'ssd' op) ==
+    autodiff of the dense masked reference, under the same head prefix —
+    including ha ∈ {0, H} and prefixes off the group grid."""
+    op = kernel_dispatch("interpret").table("transformer")["ssd"]
+    b, s, h, g, p, n = 2, 64, 4, 2, 32, 16
+    key = jax.random.PRNGKey(ha * 13 + chunk)
+    ks = jax.random.split(key, 5)
+    xh = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (b, s, g, n), jnp.float32)
+    Cm = jax.random.normal(ks[4], (b, s, g, n), jnp.float32)
+    mask = (jnp.arange(h) < ha).astype(jnp.float32)
+
+    def loss_k(xh, dt, A, Bm, Cm):
+        y, _ = op(xh, dt, A, Bm, Cm, chunk, head_mask=mask)
+        return jnp.sum(jnp.sin(y))
+
+    def loss_r(xh, dt, A, Bm, Cm):
+        y, _ = ssd_chunked(xh, dt, A, Bm, Cm, chunk)
+        return jnp.sum(jnp.sin(y * mask[None, None, :, None]))
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2, 3, 4))(xh, dt, A, Bm, Cm)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2, 3, 4))(xh, dt, A, Bm, Cm)
+    for a, r in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r),
+                                   atol=5e-3, rtol=1e-3)
+
+
 def test_ssd_chunked_reference_matches_sequential():
     key = jax.random.PRNGKey(7)
     ks = jax.random.split(key, 5)
@@ -343,6 +464,76 @@ def test_ssd_chunked_reference_matches_sequential():
 
 
 # ---------------------------------------------------------------------------
+# MoE token dispatch / combine (gather-reduce row movement)
+# ---------------------------------------------------------------------------
+def _route_tables(T, k, E, cap, ga, seed):
+    """Slot/assignment tables the models.moe router would build: random
+    expert choices, stable first-come-first-kept capacity, experts >= ga
+    masked. Returns numpy int32 arrays."""
+    rng = np.random.RandomState(seed)
+    e_tj = rng.randint(0, E, size=(T, k))
+    flat = e_tj.reshape(-1)
+    pos = np.zeros(T * k, np.int64)
+    counts = np.zeros(E, np.int64)
+    for a in np.argsort(flat, kind="stable"):
+        pos[a] = counts[flat[a]]
+        counts[flat[a]] += 1
+    kept = (pos < cap) & (flat < ga)
+    dest = np.where(kept, flat * cap + pos, E * cap)
+    slot_src = np.zeros(E * cap, np.int64)
+    slot_valid = np.zeros(E * cap, np.int64)
+    for a in range(T * k):
+        if kept[a]:
+            slot_src[dest[a]] = a // k
+            slot_valid[dest[a]] = 1
+    return (e_tj, kept.astype(np.int32), dest.astype(np.int32),
+            slot_src.astype(np.int32), slot_valid.astype(np.int32))
+
+
+@settings(max_examples=6, deadline=None)
+@given(ga=st.sampled_from([0, 1, 2, 4]), cap=st.sampled_from([3, 8]))
+def test_moe_dispatch_combine_chain_grads_match_ref(ga, cap):
+    """The dispatch→compute→combine chain (both Pallas gather ops and
+    their gather-closed VJPs) == the dense jnp gather/scatter reference,
+    in value and in grads wrt tokens and gates — including dropped tokens
+    (cap < demand), masked experts (ga < E), and ga ∈ {0, E}."""
+    T, k, E, d = 16, 2, 4, 32
+    _, kept, dest, slot_src, slot_valid = _route_tables(
+        T, k, E, cap, ga, seed=ga * 5 + cap)
+    key = jax.random.PRNGKey(ga + cap)
+    xt = jax.random.normal(key, (T, d), jnp.float32)
+    gates = jax.nn.softmax(
+        jax.random.normal(jax.random.fold_in(key, 1), (T, k)), axis=-1)
+    keptj = jnp.asarray(kept, jnp.float32)
+    destj, srcj, validj = map(jnp.asarray, (dest, slot_src, slot_valid))
+
+    def chain_k(xt, gates):
+        eb = moe_dispatch(xt, srcj, validj, destj, kept,
+                          n_experts=E, cap=cap, interpret=True)
+        y = (eb * 1.5).reshape(E * cap, d)
+        ge = gates * keptj.reshape(T, k)
+        sg = jnp.zeros((E * cap + 1,)).at[destj].set(
+            gates.reshape(-1) * keptj)[:-1]
+        return moe_combine(y, ge, destj, srcj, validj, sg, interpret=True)
+
+    def chain_r(xt, gates):
+        eb = jnp.where(validj[:, None] > 0, xt[jnp.clip(srcj, 0, T - 1)], 0.)
+        y = (eb * 1.5)
+        ypad = jnp.concatenate([y, jnp.zeros((1, d))])   # sentinel row
+        ge = gates * keptj.reshape(T, k)
+        return jnp.einsum("tj,tjd->td", ge, ypad[destj.reshape(T, k)])
+
+    yk, yr = chain_k(xt, gates), chain_r(xt, gates)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), atol=1e-5)
+    gk = jax.grad(lambda x, g: jnp.sum(jnp.sin(chain_k(x, g))),
+                  argnums=(0, 1))(xt, gates)
+    gr = jax.grad(lambda x, g: jnp.sum(jnp.sin(chain_r(x, g))),
+                  argnums=(0, 1))(xt, gates)
+    for a, r in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
 # dispatch layer
 # ---------------------------------------------------------------------------
 def test_resolve_backend_rules():
@@ -358,7 +549,7 @@ def test_resolve_backend_rules():
 def test_dispatch_tables_per_family():
     d = kernel_dispatch("interpret")
     t = d.table("transformer")
-    assert set(t) == {"mlp", "moe", "ssd"}
+    assert set(t) == {"mlp", "moe", "ssd", "attention"}
     assert set(d.table("cnn")) == {"conv"}
     # 'xla' backend = no kernel table: callers use the dense masked paths
     assert kernel_dispatch("xla").table("transformer") is None
