@@ -1,0 +1,149 @@
+"""Serving bench: multi-tenant masked decode vs per-tenant programs.
+
+Serves a mixed-width tenant load (ff_frac 0.25 / 0.5 / 0.75 / 1.0)
+through the multi-tenant :class:`repro.serving.EdgeServer` — one
+compiled parent-space decode program for every spec — and against the
+per-tenant baseline (each tenant's extracted dense submodel decoding in
+its own program, one compile per distinct spec). Rows record aggregate
+tok/s (steady-state and compile-inclusive), compiled-program counts,
+and each tenant's analytic executed-tile count on the decode MLP (the
+``elastic_matmul`` 128-wide k-tile grid the dispatch path skips over).
+
+  PYTHONPATH=src:. python benchmarks/serve_bench.py
+
+Writes BENCH_serving.json at the repo root.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, json_row
+from repro.configs import ARCHS, reduced
+from repro.core.elastic import family_for
+from repro.core.submodel import TransformerSubSpec, transformer_ff
+from repro.models import transformer as T
+from repro.serving.batcher import Request
+from repro.serving.server import EdgeServer
+
+FF_FRACS = (0.25, 0.5, 0.75, 1.0)
+TILE_K = 128            # elastic_matmul contraction-tile width
+
+
+def _specs(fam):
+    full = fam.full_spec()
+    return [TransformerSubSpec(layers=full.layers, ff_frac=f)
+            for f in FF_FRACS]
+
+
+def _mlp_tiles(cfg, frac: float) -> int:
+    """Executed k-tiles per decode-MLP matmul at this width fraction."""
+    keep = transformer_ff(cfg, frac)
+    return -(-keep // TILE_K)
+
+
+def _serve_multi(fam, params, specs, prompts, gen):
+    """Multi-tenant path: all tenants in one parent-space program."""
+    server = EdgeServer(fam, params, slots=len(specs),
+                        prompt_len=prompts.shape[1], max_new_tokens=gen)
+    reqs = [Request(uid=i, spec=s, prompt=prompts[i], max_new_tokens=gen)
+            for i, s in enumerate(specs)]
+    t0 = time.perf_counter()
+    server.run(reqs)
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    server.run(reqs)
+    warm = time.perf_counter() - t0
+    return cold, warm, server.compiled_programs()
+
+
+def _serve_per_tenant(fam, params, specs, prompts, gen):
+    """Baseline: each tenant's extracted submodel in its own program —
+    one prefill + one step program compiled *per distinct spec shape*."""
+    subs = [fam.extract(params, s) for s in specs]
+    max_len = prompts.shape[1] + gen
+    fns = [(jax.jit(lambda p, t, c=sub_cfg: T.prefill(p, c, t, max_len)),
+            jax.jit(lambda p, c, t, i_, cc=sub_cfg:
+                    T.decode_step(p, cc, c, t, i_)))
+           for _, sub_cfg in subs]
+
+    def one_pass():
+        for i, (sub_p, sub_cfg) in enumerate(subs):
+            prefill_fn, step = fns[i]
+            caches = T.init_decode_caches(sub_cfg, 1, max_len, jnp.float32)
+            logits, caches = prefill_fn(sub_p, jnp.asarray(prompts[i][None]))
+            tok = jnp.argmax(logits, -1)[:, None]
+            for g in range(gen - 1):
+                logits, caches = step(sub_p, caches, tok,
+                                      jnp.int32(prompts.shape[1] + g))
+                tok = jnp.argmax(logits, -1)[:, None]
+            tok.block_until_ready()
+
+    t0 = time.perf_counter()
+    one_pass()
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    one_pass()
+    warm = time.perf_counter() - t0
+    return cold, warm
+
+
+def run(arch="granite-3-8b", n_layers=2, d_model=128, prompt_len=16,
+        gen=16):
+    cfg = reduced(ARCHS[arch], n_layers=n_layers, d_model=d_model)
+    fam = family_for(cfg)
+    params = fam.init_params(jax.random.PRNGKey(0))
+    specs = _specs(fam)
+    n = len(specs)
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (n, prompt_len), 0, cfg.vocab_size))
+    total_tokens = n * gen
+
+    mt_cold, mt_warm, programs = _serve_multi(fam, params, specs, prompts,
+                                              gen)
+    pt_cold, pt_warm = _serve_per_tenant(fam, params, specs, prompts, gen)
+
+    tiles = {f"ff_{f}": _mlp_tiles(cfg, f) for f in FF_FRACS}
+    full_tiles = _mlp_tiles(cfg, 1.0)
+    rows = [
+        json_row("serve/multi_tenant", mt_warm * 1e6,
+                 tok_per_s=total_tokens / mt_warm,
+                 tok_per_s_cold=total_tokens / mt_cold,
+                 tenants=n, gen=gen, prompt_len=prompt_len,
+                 programs=programs, arch=cfg.name,
+                 tenant_mlp_tiles=tiles, full_mlp_tiles=full_tiles),
+        json_row("serve/per_tenant_baseline", pt_warm * 1e6,
+                 tok_per_s=total_tokens / pt_warm,
+                 tok_per_s_cold=total_tokens / pt_cold,
+                 tenants=n, gen=gen, prompt_len=prompt_len,
+                 programs_lower_bound=2 * n, arch=cfg.name,
+                 speedup_vs_multi_cold=mt_cold / pt_cold),
+    ]
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    args = ap.parse_args()
+    rows = run(arch=args.arch, prompt_len=args.prompt_len, gen=args.gen)
+    emit(rows)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out_path = os.path.join(root, "BENCH_serving.json")
+    with open(out_path, "w") as f:
+        json.dump([dict(json.loads(derived), name=name, us=us)
+                   for name, us, derived in rows], f, indent=1)
+        f.write("\n")
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

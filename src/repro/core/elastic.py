@@ -303,6 +303,39 @@ class ElasticFamily:
     def _kernel_table(self, kernels):
         return self._kernels if kernels is _FAMILY_KERNELS else kernels
 
+    # -- decode / serving surface ------------------------------------------
+    @property
+    def supports_decode(self) -> bool:
+        """Whether this family has a cached token-decode path (the serving
+        subsystem's entry requirement)."""
+        return False
+
+    def decode_masks(self, spec):
+        """Forward-mask pytree for masked decode — same algebra as the
+        training path (``spec_masks(spec).fwd``)."""
+        return self.spec_masks(spec).fwd
+
+    def sub_ctx(self, spec):
+        """Submodel config for ``spec`` without extracting params (the
+        shape/ctx half of :meth:`extract`)."""
+        raise NotImplementedError
+
+    def sub_init_params(self, key, spec):
+        """Randomly initialised params in submodel coordinates — the
+        cold-start distillation student baseline."""
+        raise NotImplementedError
+
+    def masked_logits(self, params, fwd, x, kernels=_FAMILY_KERNELS):
+        """Forward logits of the masked submodel in parent coordinates
+        (the distillation teacher surface). Shapes are family-specific:
+        (B,S,V) for token models, (B,C) for the CNN."""
+        raise NotImplementedError
+
+    def sub_logits(self, sub_params, sub_ctx, x):
+        """Forward logits of an extracted/initialised submodel (the
+        distillation student surface)."""
+        raise NotImplementedError
+
     # -- sequential extract → train → pad reference ------------------------
     def extract(self, params, spec) -> Tuple[Any, Any]:
         """Returns (sub_params, sub_ctx); sub_ctx is the submodel config."""
@@ -527,6 +560,21 @@ class CNNElasticFamily(ElasticFamily):
                                 fwd["depth"],
                                 kernels=self._kernel_table(kernels))
         return _weighted_acc(logits, y, valid)
+
+    def sub_ctx(self, spec):
+        return sub_cnn_config(self.cfg, spec)
+
+    def sub_init_params(self, key, spec):
+        return cnn.init_params(key, self.sub_ctx(spec))
+
+    def masked_logits(self, params, fwd, x, kernels=_FAMILY_KERNELS):
+        return masked_forward(params, self.cfg, x, fwd["ch"], fwd["gn"],
+                              fwd["depth"],
+                              kernels=self._kernel_table(kernels))
+
+    def sub_logits(self, sub_params, sub_ctx, x):
+        logits, _ = cnn.forward(sub_params, sub_ctx, x)
+        return logits
 
     def extract(self, params, spec):
         return (extract_cnn(params, self.cfg, spec),
@@ -755,6 +803,26 @@ class TransformerElasticFamily(ElasticFamily):
         logits, _ = T.forward(params, self.cfg, {"tokens": x}, masks=fwd,
                               kernels=self._kernel_table(kernels))
         return _weighted_mean(_lm_per_sample_acc(logits, x), valid)
+
+    # -- decode / serving surface ------------------------------------------
+    @property
+    def supports_decode(self) -> bool:
+        return True
+
+    def sub_ctx(self, spec):
+        return sub_transformer_config(self.cfg, spec)
+
+    def sub_init_params(self, key, spec):
+        return T.init_params(key, self.sub_ctx(spec))
+
+    def masked_logits(self, params, fwd, x, kernels=_FAMILY_KERNELS):
+        logits, _ = T.forward(params, self.cfg, {"tokens": x}, masks=fwd,
+                              kernels=self._kernel_table(kernels))
+        return logits
+
+    def sub_logits(self, sub_params, sub_ctx, x):
+        logits, _ = T.forward(sub_params, sub_ctx, {"tokens": x})
+        return logits
 
     # -- sequential reference ----------------------------------------------
     def extract(self, params, spec):

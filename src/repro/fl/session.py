@@ -214,3 +214,11 @@ class CFLSession:
 
     def global_accuracy(self, data: Dict) -> float:
         return self.family.evaluate(self.params, data)
+
+    def serving(self, **kwargs):
+        """Hand the trained parent off to the elastic serving subsystem:
+        returns a ``serving.EdgeServer`` over this session's family and
+        aggregated params (kwargs forwarded — slots / prompt_len /
+        max_new_tokens / backend / ...). Token-decode families only."""
+        from repro.serving.server import EdgeServer
+        return EdgeServer(self.family, self.params, **kwargs)

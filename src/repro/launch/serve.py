@@ -1,4 +1,10 @@
-"""Batched serving driver: prefill (full forward) then cached decode.
+"""Serving CLI — a thin driver over ``repro.serving``.
+
+Batches requests through the multi-tenant :class:`serving.EdgeServer`
+(fused one-shot prefill + masked parent-space decode). ``--elastic``
+gives each request a random submodel spec, demonstrating distinct-spec
+tenants decoded in one compiled program; ``--check-prefill`` asserts
+the fused prefill matches the token-by-token decode path at ≤1e-5.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-2.7b \
       --batch 4 --prompt-len 64 --gen 32
@@ -6,6 +12,7 @@
 from __future__ import annotations
 
 import argparse
+import random
 import time
 
 import jax
@@ -13,62 +20,83 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, get_config, reduced
+from repro.core.elastic import family_for
 from repro.models import transformer as T
+from repro.serving.batcher import Request
+from repro.serving.server import EdgeServer
+
+
+def check_prefill_parity(params, cfg, tokens, max_len: int,
+                         tol: float = 1e-5) -> float:
+    """Assert the fused one-shot prefill leaves the same cache state (and
+    last-position logits) as stepping the prompt token by token."""
+    logits_f, caches_f = jax.jit(
+        lambda p, t: T.prefill(p, cfg, t, max_len))(params, tokens)
+    caches_s = T.init_decode_caches(cfg, tokens.shape[0], max_len,
+                                    jnp.float32)
+    step = jax.jit(lambda p, c, t, i: T.decode_step(p, cfg, c, t, i))
+    logits_s = None
+    for i in range(tokens.shape[1]):
+        logits_s, caches_s = step(params, caches_s, tokens[:, i:i + 1],
+                                  jnp.int32(i))
+    diffs = [float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                                   b.astype(jnp.float32))))
+             for a, b in zip(jax.tree.leaves(caches_f),
+                             jax.tree.leaves(caches_s))]
+    diffs.append(float(jnp.max(jnp.abs(logits_f - logits_s))))
+    worst = max(diffs)
+    if worst > tol:
+        raise AssertionError(
+            f"fused prefill diverges from stepwise decode: {worst:.2e}")
+    return worst
 
 
 def serve(arch: str, *, batch: int = 4, prompt_len: int = 64, gen: int = 32,
           use_reduced: bool = True, n_layers: int = 4, d_model: int = 256,
-          seed: int = 0, temperature: float = 0.0):
+          seed: int = 0, temperature: float = 0.0, elastic: bool = False,
+          check_prefill: bool = False, backend: str = None):
     cfg = get_config(arch)
     if cfg.encoder_only:
         raise SystemExit(f"{arch} is encoder-only; no decode path")
     if use_reduced:
         cfg = reduced(cfg, n_layers=n_layers, d_model=d_model)
+    # independent streams: params / prompts / sampling never share a key
     key = jax.random.PRNGKey(seed)
-    params = T.init_params(key, cfg)
-    max_len = prompt_len + gen
+    params_key, prompt_key, sample_key = jax.random.split(key, 3)
+    family = family_for(cfg)
+    params = family.init_params(params_key)
 
-    prompts = jax.random.randint(key, (batch, prompt_len), 0,
-                                 cfg.vocab_size)
+    prompts = np.asarray(jax.random.randint(
+        prompt_key, (batch, prompt_len), 0, cfg.vocab_size))
+    if check_prefill:
+        worst = check_prefill_parity(params, cfg, jnp.asarray(prompts),
+                                     prompt_len + gen)
+        print(f"fused-prefill parity: max|Δ| = {worst:.2e} (≤ 1e-5)")
 
-    # prefill: run the prompt through the decode path token-by-token to
-    # fill caches (simple, cache-correct; a fused prefill is the kernels'
-    # job on TPU), batched across requests.
-    caches = T.init_decode_caches(cfg, batch, max_len, dtype=jnp.float32)
-    step = jax.jit(lambda p, c, t, i: T.decode_step(p, cfg, c, t, i))
-
+    rng = random.Random(seed)
+    specs = [family.random_spec(rng) if elastic else None
+             for _ in range(batch)]
+    server = EdgeServer(family, params, slots=min(batch, 8),
+                        prompt_len=prompt_len, max_new_tokens=gen,
+                        temperature=temperature,
+                        seed=int(np.asarray(sample_key)[-1]),
+                        backend=backend)
+    reqs = [Request(uid=b, spec=specs[b], prompt=prompts[b],
+                    max_new_tokens=gen) for b in range(batch)]
     t0 = time.time()
-    logits = None
-    for i in range(prompt_len):
-        logits, caches = step(params, caches, prompts[:, i:i + 1],
-                              jnp.int32(i))
-    t_prefill = time.time() - t0
+    completions = server.run(reqs)
+    t_total = time.time() - t0
 
-    toks = []
-    t0 = time.time()
-    cur = jnp.argmax(logits[:, :cfg.vocab_size], -1)[:, None]
-    for i in range(gen):
-        toks.append(cur)
-        logits, caches = step(params, caches, cur,
-                              jnp.int32(prompt_len + i))
-        if temperature > 0:
-            key, sub = jax.random.split(key)
-            cur = jax.random.categorical(
-                sub, logits[:, :cfg.vocab_size] / temperature)[:, None]
-        else:
-            cur = jnp.argmax(logits[:, :cfg.vocab_size], -1)[:, None]
-    t_decode = time.time() - t0
-    out = jnp.concatenate(toks, axis=1)
-
-    tps = batch * gen / max(t_decode, 1e-9)
-    print(f"arch={cfg.name} batch={batch} prompt={prompt_len} gen={gen}")
-    print(f"prefill: {t_prefill:.2f}s   decode: {t_decode:.2f}s "
-          f"({tps:.1f} tok/s aggregate)")
+    tps = batch * gen / max(t_total, 1e-9)
+    mode = "elastic multi-tenant" if elastic else "full-parent"
+    print(f"arch={cfg.name} batch={batch} prompt={prompt_len} gen={gen} "
+          f"[{mode}]")
+    print(f"serve: {t_total:.2f}s ({tps:.1f} tok/s aggregate), "
+          f"programs={server.compiled_programs()}")
     print("sample generations (token ids):")
-    for b in range(min(batch, 2)):
-        print(f"  req{b}: {np.asarray(out[b])[:16].tolist()} ...")
-    return out, {"prefill_s": t_prefill, "decode_s": t_decode,
-                 "tokens_per_s": tps}
+    for c in completions[:2]:
+        print(f"  req{c.uid}: {c.tokens[:16]} ...")
+    return completions, {"serve_s": t_total, "tokens_per_s": tps}
 
 
 def main():
@@ -81,10 +109,18 @@ def main():
     ap.add_argument("--layers", type=int, default=4)
     ap.add_argument("--d-model", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--elastic", action="store_true",
+                    help="serve a random submodel spec per request")
+    ap.add_argument("--check-prefill", action="store_true",
+                    help="assert fused prefill == stepwise decode (≤1e-5)")
+    ap.add_argument("--backend", default=None,
+                    help="kernels.dispatch backend for decode tile-skipping")
     args = ap.parse_args()
     serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
           gen=args.gen, use_reduced=not args.full, n_layers=args.layers,
-          d_model=args.d_model, temperature=args.temperature)
+          d_model=args.d_model, temperature=args.temperature,
+          elastic=args.elastic, check_prefill=args.check_prefill,
+          backend=args.backend)
 
 
 if __name__ == "__main__":

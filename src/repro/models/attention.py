@@ -255,7 +255,11 @@ def dispatch_attention(q, k, v, **kw):
 # ---------------------------------------------------------------------------
 def gqa_forward(p, x, positions, *, n_heads, n_kv, head_dim, rope_theta,
                 causal=True, window=None, cap=None, qk_norm=False,
-                norm_eps=1e-6, head_mask=None, kernel=None):
+                norm_eps=1e-6, head_mask=None, kernel=None,
+                cache_len=None, cache_dtype=None):
+    """``cache_len``: when set, also return the post-rope K/V packed into a
+    ring-buffer :class:`KVCache` of that many slots — the fused one-shot
+    prefill path (cache state identical to stepwise ``gqa_decode``)."""
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
     k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
     v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
@@ -272,7 +276,24 @@ def gqa_forward(p, x, positions, *, n_heads, n_kv, head_dim, rope_theta,
     else:
         o = dispatch_attention(q, k, v, causal=causal, window=window,
                                cap=cap, head_mask=head_mask)
-    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    if cache_len is None:
+        return out
+    return out, _ring_pack(k, v, cache_len, cache_dtype or k.dtype)
+
+
+def _ring_pack(k, v, C: int, dtype):
+    """Pack full-prefill K/V (B,S,KV,D) into the ring-buffer cache layout:
+    slot j holds the *last* prompt position ≡ j (mod C) — exactly the state
+    stepwise ``gqa_decode`` leaves after writing positions 0..S-1."""
+    S = k.shape[1]
+    slots = jnp.arange(C)
+    idx = (S - 1) - ((S - 1 - slots) % C)
+    valid = (idx >= 0)[None, :, None, None]
+    gather = jnp.maximum(idx, 0)
+    kc = jnp.where(valid, jnp.take(k, gather, axis=1), 0).astype(dtype)
+    vc = jnp.where(valid, jnp.take(v, gather, axis=1), 0).astype(dtype)
+    return KVCache(kc, vc)
 
 
 # ---------------------------------------------------------------------------
@@ -292,8 +313,13 @@ def gqa_cache_init(batch, max_len, n_kv, head_dim, window=None,
 
 def gqa_decode(p, x, cache: KVCache, pos, *, n_heads, n_kv, head_dim,
                rope_theta, window=None, cap=None, qk_norm=False,
-               norm_eps=1e-6):
-    """x: (B,1,d). pos: scalar int32 (current position). Returns (out, cache)."""
+               norm_eps=1e-6, head_mask=None):
+    """x: (B,1,d). pos: scalar int32 (current position). Returns (out, cache).
+
+    head_mask: optional (H,) 0/1 query-head prefix (CFL elastic attention
+    width) — masked heads' outputs are zeroed before ``wo``, so the masked
+    parent decode equals the head-sliced submodel's (its ``wo`` keeps only
+    the kept heads' rows)."""
     B = x.shape[0]
     C = cache.k.shape[1]
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
@@ -324,6 +350,8 @@ def gqa_decode(p, x, cache: KVCache, pos, *, n_heads, n_kv, head_dim,
     pattn = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bskd->bkgd", pattn, cv.astype(jnp.float32))
     o = o.reshape(B, 1, n_heads, head_dim).astype(x.dtype)
+    if head_mask is not None:
+        o = o * head_mask[None, None, :, None].astype(o.dtype)
     out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
     return out, KVCache(ck, cv)
 
@@ -353,7 +381,9 @@ def _mla_qkv(p, x, positions, mla, norm_eps):
 
 
 def mla_forward(p, x, positions, *, n_heads, mla, causal=True, norm_eps=1e-6,
-                head_mask=None):
+                head_mask=None, cache_len=None, cache_dtype=None):
+    """``cache_len``: when set, also return the compressed-latent cache
+    (positions 0..S-1 filled, the rest zeros) — the fused prefill path."""
     q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, positions, mla, norm_eps)
     k_nope = jnp.einsum("bsc,chk->bshk", c_kv, p["w_uk"].astype(x.dtype))
     v = jnp.einsum("bsc,chk->bshk", c_kv, p["w_uv"].astype(x.dtype))
@@ -366,10 +396,21 @@ def mla_forward(p, x, positions, *, n_heads, mla, causal=True, norm_eps=1e-6,
     o = dispatch_attention(q, k, v, causal=causal, head_mask=head_mask,
                            scale=1.0 / math.sqrt(mla.qk_nope_dim +
                                                  mla.qk_rope_dim))
-    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    if cache_len is None:
+        return out
+    dt = cache_dtype or c_kv.dtype
+    S = x.shape[1]
+    ck = jnp.zeros((x.shape[0], cache_len, mla.kv_lora_rank), dt)
+    cr = jnp.zeros((x.shape[0], cache_len, mla.qk_rope_dim), dt)
+    ck = jax.lax.dynamic_update_slice_in_dim(ck, c_kv.astype(dt), 0, axis=1)
+    cr = jax.lax.dynamic_update_slice_in_dim(cr, k_rope.astype(dt), 0,
+                                             axis=1)
+    return out, MLACache(ck, cr)
 
 
-def mla_decode(p, x, cache: MLACache, pos, *, n_heads, mla, norm_eps=1e-6):
+def mla_decode(p, x, cache: MLACache, pos, *, n_heads, mla, norm_eps=1e-6,
+               head_mask=None):
     """Absorbed MLA decode: attention runs in the compressed latent space."""
     B = x.shape[0]
     posv = jnp.full((B, 1), pos, jnp.int32)
@@ -392,5 +433,7 @@ def mla_decode(p, x, cache: MLACache, pos, *, n_heads, mla, norm_eps=1e-6):
     o_c = jnp.einsum("bhs,bsc->bhc", pr, ck.astype(jnp.float32))
     o = jnp.einsum("bhc,chk->bhk", o_c.astype(x.dtype),
                    p["w_uv"].astype(x.dtype))
+    if head_mask is not None:
+        o = o * head_mask[None, :, None].astype(o.dtype)
     out = jnp.einsum("bhk,hkd->bd", o, p["wo"].astype(x.dtype))[:, None, :]
     return out, MLACache(ck, cr)

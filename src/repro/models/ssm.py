@@ -128,21 +128,54 @@ def _masked_gated_rmsnorm(p, x, dim_mask, eps):
     return (y * m).astype(x.dtype)
 
 
-def mamba_forward(p, x, ssm, *, norm_eps=1e-6, head_mask=None, kernel=None):
+def _ssd_final_state(xh, dt, A, Bm, Cm):
+    """Closed-form final SSD state after S tokens — the state the decode
+    recurrence reaches: h = Σ_s exp(Σ_{t>s} dA_t) · dt_s · x_s ⊗ B_s.
+    Used when the kernel path computed y (kernels return no states)."""
+    H = xh.shape[2]
+    rep = H // Bm.shape[2]
+    dA = dt.astype(jnp.float32) * A[None, None, :]          # (B,S,H)
+    cum = jnp.cumsum(dA, axis=1)
+    decay = jnp.exp(cum[:, -1:] - cum)                       # ≤ 1, stable
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+    Bh = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2)     # (B,S,H,N)
+    return jnp.einsum("bsh,bshp,bshn->bhpn", decay, xdt, Bh)
+
+
+def _conv_tail(raw, w: int, dtype):
+    """Last w-1 pre-conv rows of raw (B,S,C), front-zero-padded when the
+    prompt is shorter — the conv history stepwise decode accumulates."""
+    B, S, C = raw.shape
+    hist = jnp.zeros((B, w - 1, C), dtype)
+    n = min(w - 1, S)
+    if n:
+        hist = hist.at[:, w - 1 - n:].set(raw[:, S - n:].astype(dtype))
+    return hist
+
+
+def mamba_forward(p, x, ssm, *, norm_eps=1e-6, head_mask=None, kernel=None,
+                  return_cache=False, cache_dtype=None):
     """Full-sequence Mamba2 block. x: (B,S,d) -> (B,S,d).
 
     head_mask: (H,) 0/1 prefix mask over SSD heads (CFL elastic width) —
     masked heads contribute zero and are excluded from the gated-norm
     statistics, so the masked forward equals the head-sliced submodel's.
+
+    return_cache: also return the :class:`SSMCache` stepwise decode would
+    hold after these S tokens (final SSD state + conv histories) — the
+    fused one-shot prefill path.
     """
     B, S, d = x.shape
     di = ssm.d_inner(d)
     nh = ssm.n_heads(d)
     ng, N = ssm.n_groups, ssm.d_state
     z = x @ p["wz"].astype(x.dtype)
-    xc = _causal_conv(p["conv_x"], x @ p["wx"].astype(x.dtype), ssm.d_conv)
-    Bm = _causal_conv(p["conv_B"], x @ p["wB"].astype(x.dtype), ssm.d_conv)
-    Cm = _causal_conv(p["conv_C"], x @ p["wC"].astype(x.dtype), ssm.d_conv)
+    xc_raw = x @ p["wx"].astype(x.dtype)
+    Bm_raw = x @ p["wB"].astype(x.dtype)
+    Cm_raw = x @ p["wC"].astype(x.dtype)
+    xc = _causal_conv(p["conv_x"], xc_raw, ssm.d_conv)
+    Bm = _causal_conv(p["conv_B"], Bm_raw, ssm.d_conv)
+    Cm = _causal_conv(p["conv_C"], Cm_raw, ssm.d_conv)
     dt = x @ p["wdt"].astype(x.dtype)
 
     xh = xc.reshape(B, S, nh, ssm.head_dim)
@@ -150,14 +183,17 @@ def mamba_forward(p, x, ssm, *, norm_eps=1e-6, head_mask=None, kernel=None):
     Cm = Cm.reshape(B, S, ng, N)
     dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
     A = -jnp.exp(p["A_log"])
+    h_final = None
     if kernel is not None:
         # prefix-aware kernels (repro.kernels.dispatch 'ssd' contract)
         # skip masked head blocks instead of computing-then-zeroing them;
         # the head_mask multiply below stays (it also gates the D term)
         y, _ = kernel(xh, dtv, A, Bm, Cm, min(ssm.chunk, S),
                       head_mask=head_mask)
+        if return_cache:
+            h_final = _ssd_final_state(xh, dtv, A, Bm, Cm)
     else:
-        y, _ = ssd_chunked(xh, dtv, A, Bm, Cm, min(ssm.chunk, S))
+        y, h_final = ssd_chunked(xh, dtv, A, Bm, Cm, min(ssm.chunk, S))
     y = y.astype(x.dtype) + xh.astype(x.dtype) * \
         p["D"].astype(x.dtype)[None, None, :, None]
     if head_mask is not None:
@@ -169,7 +205,15 @@ def mamba_forward(p, x, ssm, *, norm_eps=1e-6, head_mask=None, kernel=None):
         y = _masked_gated_rmsnorm(p["norm"], gated, dim_mask, norm_eps)
     else:
         y = rmsnorm(p["norm"], gated, norm_eps)
-    return y.astype(x.dtype) @ p["out_proj"].astype(x.dtype)
+    out = y.astype(x.dtype) @ p["out_proj"].astype(x.dtype)
+    if not return_cache:
+        return out
+    cdt = cache_dtype or x.dtype
+    cache = SSMCache(h=h_final.astype(jnp.float32),
+                     conv_x=_conv_tail(xc_raw, ssm.d_conv, cdt),
+                     conv_B=_conv_tail(Bm_raw, ssm.d_conv, cdt),
+                     conv_C=_conv_tail(Cm_raw, ssm.d_conv, cdt))
+    return out, cache
 
 
 # ---------------------------------------------------------------------------
@@ -202,8 +246,14 @@ def _conv_step(cp, hist, new):
     return jax.nn.silu(out).astype(new.dtype), seq[:, 1:, :]
 
 
-def mamba_decode(p, x, cache: SSMCache, ssm, *, norm_eps=1e-6):
-    """x: (B,1,d). Returns (out (B,1,d), new cache)."""
+def mamba_decode(p, x, cache: SSMCache, ssm, *, norm_eps=1e-6,
+                 head_mask=None):
+    """x: (B,1,d). Returns (out (B,1,d), new cache).
+
+    head_mask: (H,) 0/1 SSD-head prefix — masked heads' outputs (incl. the
+    D skip term) are zeroed and excluded from the gated-norm statistics,
+    mirroring ``mamba_forward``'s masked path so the masked parent decode
+    equals the head-sliced submodel's."""
     B, _, d = x.shape
     di = ssm.d_inner(d)
     nh = ssm.n_heads(d)
@@ -229,10 +279,15 @@ def mamba_decode(p, x, cache: SSMCache, ssm, *, norm_eps=1e-6):
     h = cache.h * dA[:, :, None, None] + upd
     y = jnp.einsum("bhpn,bhn->bhp", h, Cm.astype(jnp.float32))
     y = y + xh.astype(jnp.float32) * p["D"][None, :, None]
+    if head_mask is not None:
+        y = y * head_mask[None, :, None].astype(y.dtype)
     y = y.reshape(B, 1, di)
-    y = rmsnorm(p["norm"],
-                (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
-                norm_eps)
+    gated = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    if head_mask is not None:
+        dim_mask = jnp.repeat(head_mask, ssm.head_dim)
+        y = _masked_gated_rmsnorm(p["norm"], gated, dim_mask, norm_eps)
+    else:
+        y = rmsnorm(p["norm"], gated, norm_eps)
     out = y @ p["out_proj"].astype(x.dtype)
     return out, SSMCache(h=h, conv_x=new_cx.astype(cache.conv_x.dtype),
                          conv_B=new_cB.astype(cache.conv_B.dtype),

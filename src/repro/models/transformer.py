@@ -121,26 +121,43 @@ def _ckpt(fn):
 
 
 def _apply_attn_block(bp, x, positions, cfg: ModelConfig, window, use_moe,
-                      masks, kernels, gate=None):
+                      masks, kernels, gate=None, cache_len=None,
+                      cache_dtype=None):
     """``gate`` (scalar 0/1) multiplies the block's residual contributions —
     the CFL depth-elastic dimension in parent coordinates: with gate=0 the
     block is exactly the identity (pure additive residual), matching an
-    extracted submodel that dropped this layer."""
+    extracted submodel that dropped this layer.
+
+    ``cache_len``: fused-prefill mode — the attention call also returns its
+    decode cache (KV ring buffer / MLA latents) and the block returns
+    ``(x, aux, cache)``; remat is skipped (prefill is inference-only)."""
     h = _norm(cfg, bp["ln1"], x)
     head_mask = None if masks is None else masks.get("heads")
+    cache = None
     if cfg.attn_type == "mla":
-        a = _ckpt(lambda p_, h_: attn_lib.mla_forward(
-            p_, h_, positions, n_heads=cfg.n_heads, mla=cfg.mla,
-            causal=cfg.causal, norm_eps=cfg.norm_eps, head_mask=head_mask))(
-                bp["attn"], h)
+        def attn_fn(p_, h_):
+            return attn_lib.mla_forward(
+                p_, h_, positions, n_heads=cfg.n_heads, mla=cfg.mla,
+                causal=cfg.causal, norm_eps=cfg.norm_eps,
+                head_mask=head_mask, cache_len=cache_len,
+                cache_dtype=cache_dtype)
     else:
         kern = None if kernels is None else kernels.get("attention")
-        a = _ckpt(lambda p_, h_: attn_lib.gqa_forward(
-            p_, h_, positions, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
-            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
-            causal=cfg.causal, window=window, cap=cfg.attn_softcap,
-            qk_norm=cfg.qk_norm, norm_eps=cfg.norm_eps, head_mask=head_mask,
-            kernel=kern))(bp["attn"], h)
+        kv_len = None if cache_len is None else (
+            min(cache_len, window) if window else cache_len)
+
+        def attn_fn(p_, h_):
+            return attn_lib.gqa_forward(
+                p_, h_, positions, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+                causal=cfg.causal, window=window, cap=cfg.attn_softcap,
+                qk_norm=cfg.qk_norm, norm_eps=cfg.norm_eps,
+                head_mask=head_mask, kernel=kern, cache_len=kv_len,
+                cache_dtype=cache_dtype)
+    if cache_len is None:
+        a = _ckpt(attn_fn)(bp["attn"], h)
+    else:
+        a, cache = attn_fn(bp["attn"], h)
     if cfg.post_norms:
         a = _norm(cfg, bp["post_ln1"], a)
     if gate is not None:
@@ -166,13 +183,24 @@ def _apply_attn_block(bp, x, positions, cfg: ModelConfig, window, use_moe,
     if gate is not None:
         m = m * gate.astype(m.dtype)
         aux = aux * gate.astype(aux.dtype)
-    return x + m, aux
+    if cache_len is None:
+        return x + m, aux
+    return x + m, aux, cache
 
 
-def _apply_ssm_block(bp, x, cfg: ModelConfig, masks, kernels, gate=None):
+def _apply_ssm_block(bp, x, cfg: ModelConfig, masks, kernels, gate=None,
+                     cache_len=None, cache_dtype=None):
     h = _norm(cfg, bp["ln"], x)
     head_mask = None if masks is None else masks.get("ssm_heads")
     kern = None if kernels is None else kernels.get("ssd")
+    if cache_len is not None:
+        y, cache = ssm_lib.mamba_forward(
+            bp["mamba"], h, cfg.ssm, norm_eps=cfg.norm_eps,
+            head_mask=head_mask, kernel=kern, return_cache=True,
+            cache_dtype=cache_dtype)
+        if gate is not None:
+            y = y * gate.astype(y.dtype)
+        return x + y, jnp.zeros((), jnp.float32), cache
     y = _ckpt(lambda p_, h_: ssm_lib.mamba_forward(
         p_, h_, cfg.ssm, norm_eps=cfg.norm_eps, head_mask=head_mask,
         kernel=kern))(bp["mamba"], h)
@@ -515,77 +543,120 @@ def init_decode_caches(cfg: ModelConfig, batch: int, max_len: int,
     return DecodeCaches(tuple(segs), shared)
 
 
-def _decode_attn_block(bp, x, cache, pos, cfg: ModelConfig, window):
+def _decode_attn_block(bp, x, cache, pos, cfg: ModelConfig, window,
+                       masks=None, kernels=None, gate=None):
     h = _norm(cfg, bp["ln1"], x)
+    head_mask = None if masks is None else masks.get("heads")
     if cfg.attn_type == "mla":
         a, cache = attn_lib.mla_decode(bp["attn"], h, cache, pos,
                                        n_heads=cfg.n_heads, mla=cfg.mla,
-                                       norm_eps=cfg.norm_eps)
+                                       norm_eps=cfg.norm_eps,
+                                       head_mask=head_mask)
     else:
         a, cache = attn_lib.gqa_decode(
             bp["attn"], h, cache, pos, n_heads=cfg.n_heads,
             n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
             rope_theta=cfg.rope_theta, window=window, cap=cfg.attn_softcap,
-            qk_norm=cfg.qk_norm, norm_eps=cfg.norm_eps)
+            qk_norm=cfg.qk_norm, norm_eps=cfg.norm_eps, head_mask=head_mask)
     if cfg.post_norms:
         a = _norm(cfg, bp["post_ln1"], a)
+    if gate is not None:
+        a = a * gate.astype(a.dtype)
     x = x + a
     h = _norm(cfg, bp["ln2"], x)
     if "moe" in bp:
-        m, _ = moe_lib.moe_forward(bp["moe"], h, cfg.moe, act=cfg.act)
+        expert_mask = None if masks is None else masks.get("experts")
+        moe_kern = None if kernels is None else kernels.get("moe")
+        m, _ = moe_lib.moe_forward(bp["moe"], h, cfg.moe, act=cfg.act,
+                                   expert_mask=expert_mask, kernel=moe_kern)
     else:
-        m = mlp(bp["mlp"], h, cfg.act)
+        width_mask = None if masks is None else masks.get("ff")
+        mlp_kern = None if kernels is None else kernels.get("mlp")
+        m = mlp(bp["mlp"], h, cfg.act, width_mask=width_mask,
+                kernel=mlp_kern)
     if cfg.post_norms:
         m = _norm(cfg, bp["post_ln2"], m)
+    if gate is not None:
+        m = m * gate.astype(m.dtype)
     return x + m, cache
 
 
 def decode_step(params: Params, cfg: ModelConfig, caches: DecodeCaches,
-                token, pos, activation_dtype=None):
-    """token: (B,1) int32; pos: scalar int32. -> (logits (B,V), caches)."""
+                token, pos, activation_dtype=None, masks=None, kernels=None):
+    """token: (B,1) int32; pos: scalar int32. -> (logits (B,V), caches).
+
+    ``masks``/``kernels`` mirror :func:`forward`'s elastic surface on the
+    decode path: per-dimension 0/1 fwd masks gate heads / experts / d_ff /
+    ssm-heads / depth in parent coordinates so a masked decode matches the
+    extracted submodel's decode exactly (the serving subsystem relies on
+    this to batch tenants with different specs in one program)."""
     x = embed(params["embed"], token, scale=cfg.embed_scale)
     if activation_dtype is not None:
         x = x.astype(activation_dtype)
+    depth_masks = None if masks is None else masks.get("depth")
+    # the shared (hybrid) block is kept whole by every submodel — see forward
+    shared_masks = None if masks is None else (
+        {k: v for k, v in masks.items()
+         if k not in ("ff", "depth", "heads")} or None)
     new_segs = []
     shared_idx = 0
     new_shared = caches.shared
-    for seg_p, seg, seg_c in zip(params["segments"], cfg.segments,
-                                 caches.segments):
+    for si, (seg_p, seg, seg_c) in enumerate(zip(
+            params["segments"], cfg.segments, caches.segments)):
+        dm = None if depth_masks is None else depth_masks[si]
+        gated = dm is not None
+
+        def split(inp):
+            return inp if gated else (inp[0], inp[1], None)
+
         if seg.kind == "ssm":
+            head_mask = None if masks is None else masks.get("ssm_heads")
+
             def body(x, inp):
-                lp, lc = inp
+                lp, lc, g = split(inp)
                 h = _norm(cfg, lp["ln"], x)
                 y, lc = ssm_lib.mamba_decode(lp["mamba"], h, lc, cfg.ssm,
-                                             norm_eps=cfg.norm_eps)
+                                             norm_eps=cfg.norm_eps,
+                                             head_mask=head_mask)
+                if g is not None:
+                    y = y * g.astype(y.dtype)
                 return x + y, lc
-            x, nc = jax.lax.scan(body, x, (seg_p["blocks"], seg_c))
+            xs = (seg_p["blocks"], seg_c, dm) if gated \
+                else (seg_p["blocks"], seg_c)
+            x, nc = jax.lax.scan(body, x, xs)
             new_segs.append(nc)
         elif seg.kind == "attn":
             window = seg.sliding_window or cfg.sliding_window
 
             def body(x, inp, window=window):
-                lp, lc = inp
-                return _decode_attn_block(lp, x, lc, pos, cfg, window)
-            x, nc = jax.lax.scan(body, x, (seg_p["blocks"], seg_c))
+                lp, lc, g = split(inp)
+                return _decode_attn_block(lp, x, lc, pos, cfg, window,
+                                          masks, kernels, gate=g)
+            xs = (seg_p["blocks"], seg_c, dm) if gated \
+                else (seg_p["blocks"], seg_c)
+            x, nc = jax.lax.scan(body, x, xs)
             new_segs.append(nc)
         else:  # attn_pair
             def body(x, inp):
-                lp, lc = inp
+                lp, lc, g = split(inp)
                 x, c_loc = _decode_attn_block(lp["local"], x, lc["local"],
                                               pos, cfg,
-                                              seg.pair_local_window)
+                                              seg.pair_local_window,
+                                              masks, kernels, gate=g)
                 x, c_glob = _decode_attn_block(lp["global"], x, lc["global"],
-                                               pos, cfg, None)
+                                               pos, cfg, None,
+                                               masks, kernels, gate=g)
                 return x, {"local": c_loc, "global": c_glob}
-            x, nc = jax.lax.scan(
-                body, x, ({"local": seg_p["local"],
-                           "global": seg_p["global"]}, seg_c))
+            lp_all = {"local": seg_p["local"], "global": seg_p["global"]}
+            xs = (lp_all, seg_c, dm) if gated else (lp_all, seg_c)
+            x, nc = jax.lax.scan(body, x, xs)
             new_segs.append(nc)
         if seg.shared_attn_after:
             site_cache = jax.tree.map(lambda a: a[shared_idx], new_shared)
             x, site_cache = _decode_attn_block(params["shared_attn"], x,
                                                site_cache, pos, cfg,
-                                               cfg.sliding_window)
+                                               cfg.sliding_window,
+                                               shared_masks, kernels)
             new_shared = jax.tree.map(
                 lambda full, upd: full.at[shared_idx].set(upd),
                 new_shared, site_cache)
@@ -597,3 +668,103 @@ def decode_step(params: Params, cfg: ModelConfig, caches: DecodeCaches,
         logits = x @ params["lm_head"]["w"].astype(x.dtype)
     logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
     return logits[:, 0], DecodeCaches(tuple(new_segs), new_shared)
+
+
+# ---------------------------------------------------------------------------
+# fused prefill (full forward that also fills DecodeCaches in one program)
+# ---------------------------------------------------------------------------
+def _segment_prefill(seg_p, seg: Segment, x, positions, cfg: ModelConfig,
+                     masks, kernels, depth_mask, max_len, cache_dtype):
+    """Scan the segment's layers, emitting each layer's decode cache as a
+    stacked ys output — the (n_layers, B, ...) layout `_stack_cache` uses."""
+    gated = depth_mask is not None
+
+    def split(inp):
+        return inp if gated else (inp, None)
+
+    def attn_body(x, inp):
+        layer_p, g = split(inp)
+        window = seg.sliding_window or cfg.sliding_window
+        x, _, c = _apply_attn_block(layer_p, x, positions, cfg, window,
+                                    seg.use_moe, masks, kernels, gate=g,
+                                    cache_len=max_len,
+                                    cache_dtype=cache_dtype)
+        return x, c
+
+    def pair_body(x, inp):
+        layer_p, g = split(inp)
+        x, _, cl = _apply_attn_block(layer_p["local"], x, positions, cfg,
+                                     seg.pair_local_window, seg.use_moe,
+                                     masks, kernels, gate=g,
+                                     cache_len=max_len,
+                                     cache_dtype=cache_dtype)
+        x, _, cg = _apply_attn_block(layer_p["global"], x, positions, cfg,
+                                     None, seg.use_moe, masks, kernels,
+                                     gate=g, cache_len=max_len,
+                                     cache_dtype=cache_dtype)
+        return x, {"local": cl, "global": cg}
+
+    def ssm_body(x, inp):
+        layer_p, g = split(inp)
+        x, _, c = _apply_ssm_block(layer_p, x, cfg, masks, kernels, gate=g,
+                                   cache_len=max_len,
+                                   cache_dtype=cache_dtype)
+        return x, c
+
+    if seg.kind == "attn":
+        body, xs = attn_body, seg_p["blocks"]
+    elif seg.kind == "attn_pair":
+        body, xs = pair_body, {"local": seg_p["local"],
+                               "global": seg_p["global"]}
+    else:
+        body, xs = ssm_body, seg_p["blocks"]
+    if gated:
+        xs = (xs, depth_mask)
+    return jax.lax.scan(body, x, xs)
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens, max_len: int, *,
+            masks=None, kernels=None, cache_dtype=jnp.float32,
+            activation_dtype=None):
+    """One-shot prefill: full forward over ``tokens`` (B,S) that fills
+    `DecodeCaches` for positions 0..S-1 in a single compiled program.
+
+    Returns ``(last_logits (B,V) fp32 softcapped, caches)`` — the caches
+    (and logits) match running :func:`decode_step` over the prompt token by
+    token, so generation continues at ``pos = S``."""
+    x = embed(params["embed"], tokens, scale=cfg.embed_scale)
+    if activation_dtype is not None:
+        x = x.astype(activation_dtype)
+    B, S = tokens.shape[0], tokens.shape[1]
+    if S > max_len:
+        raise ValueError(f"prompt length {S} exceeds max_len {max_len}")
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    depth_masks = None if masks is None else masks.get("depth")
+    shared_masks = None if masks is None else (
+        {k: v for k, v in masks.items()
+         if k not in ("ff", "depth", "heads")} or None)
+    new_segs = []
+    site_caches = []
+    for si, (seg_p, seg) in enumerate(zip(params["segments"], cfg.segments)):
+        dm = None if depth_masks is None else depth_masks[si]
+        x, seg_c = _segment_prefill(seg_p, seg, x, positions, cfg, masks,
+                                    kernels, dm, max_len, cache_dtype)
+        new_segs.append(seg_c)
+        if seg.shared_attn_after:
+            x, _, c = _apply_attn_block(params["shared_attn"], x, positions,
+                                        cfg, cfg.sliding_window, False,
+                                        shared_masks, kernels,
+                                        cache_len=max_len,
+                                        cache_dtype=cache_dtype)
+            site_caches.append(c)
+    shared = None
+    if site_caches:
+        shared = jax.tree.map(lambda *xs: jnp.stack(xs), *site_caches)
+    x = _norm(cfg, params["final_norm"], x)
+    x = x[:, -1:, :]
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T.astype(x.dtype)
+    else:
+        logits = x @ params["lm_head"]["w"].astype(x.dtype)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits[:, 0], DecodeCaches(tuple(new_segs), shared)

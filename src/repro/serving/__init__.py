@@ -1,0 +1,24 @@
+"""Elastic serving subsystem — the deployment half of the CFL stack.
+
+Turns a trained fleet (``CFLSession``) into inference three ways:
+
+* ``serving.export``  — extract-and-serve: spec → dense submodel
+  checkpoint, priced by the latency cost model, with a round-trip load.
+* ``serving.server`` + ``serving.batcher`` — multi-tenant masked decode:
+  many clients' *different* submodels batched in one compiled
+  parent-space decode program (per-tenant 0/1 masks over a shared
+  ``DecodeCaches`` batch; tenant churn never recompiles).
+* ``serving.distill`` — cold-start personalization: distil the parent
+  into an unseen client's spec so new clients skip round-zero training.
+"""
+from repro.serving.batcher import Completion, ContinuousBatcher, Request
+from repro.serving.distill import distill_to_spec
+from repro.serving.export import (export_submodel, load_submodel,
+                                  payload_spec, spec_payload)
+from repro.serving.server import EdgeServer
+
+__all__ = [
+    "Completion", "ContinuousBatcher", "Request", "EdgeServer",
+    "distill_to_spec", "export_submodel", "load_submodel",
+    "payload_spec", "spec_payload",
+]

@@ -1,0 +1,107 @@
+"""Extract-and-serve: spec → dense submodel checkpoint → load.
+
+The export path is the off-device half of serving: a client whose spec
+the control plane searched gets a *dense* submodel (``family.extract``)
+saved via ``checkpoint.io`` with a JSON sidecar that prices the artifact
+against the edge fleet (train-step seconds from the latency LUT and an
+analytic decode-step estimate per device profile). ``load_submodel``
+restores it without the parent — the template comes from
+``jax.eval_shape`` over the family's extract, so no real parent params
+are materialised on the serving host.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+
+from repro.checkpoint.io import (load_metadata, restore_checkpoint,
+                                 save_checkpoint)
+from repro.core.latency import EDGE_FLEET, DeviceProfile, LatencyTable
+from repro.core.submodel import SubmodelSpec, TransformerSubSpec
+
+
+# ---------------------------------------------------------------------------
+# spec <-> JSON payload (the sidecar's spec identity)
+# ---------------------------------------------------------------------------
+def spec_payload(spec) -> Dict[str, Any]:
+    """JSON-able dict naming ``spec`` (inverse: :func:`payload_spec`)."""
+    if isinstance(spec, TransformerSubSpec):
+        return {"kind": "transformer",
+                "layers": [list(k) for k in spec.layers],
+                "ff_frac": spec.ff_frac,
+                "expert_frac": spec.expert_frac,
+                "ssm_head_frac": spec.ssm_head_frac,
+                "attn_head_frac": spec.attn_head_frac}
+    if isinstance(spec, SubmodelSpec):
+        return {"kind": "cnn", "depth": list(spec.depth),
+                "width": list(spec.width)}
+    raise TypeError(f"unknown spec type {type(spec).__name__}")
+
+
+def payload_spec(payload: Dict[str, Any]):
+    if payload["kind"] == "transformer":
+        return TransformerSubSpec(
+            layers=tuple(tuple(k) for k in payload["layers"]),
+            ff_frac=payload["ff_frac"],
+            expert_frac=payload["expert_frac"],
+            ssm_head_frac=payload["ssm_head_frac"],
+            attn_head_frac=payload["attn_head_frac"])
+    if payload["kind"] == "cnn":
+        return SubmodelSpec(depth=tuple(payload["depth"]),
+                            width=tuple(payload["width"]))
+    raise ValueError(f"unknown spec payload kind {payload['kind']!r}")
+
+
+# ---------------------------------------------------------------------------
+# export / load
+# ---------------------------------------------------------------------------
+def _price(family, spec, fleet: Sequence[DeviceProfile]) -> Dict[str, Any]:
+    """Per-device cost rows: LUT train-step seconds + an analytic
+    single-token decode-step estimate (per-token FLOPs, full param read)."""
+    lut = LatencyTable(family, fleet=fleet)
+    flops = family.flops(spec)
+    pbytes = family.param_bytes(spec)
+    seq = getattr(family, "seq_len", 1) or 1
+    rows = {}
+    for prof in fleet:
+        rows[prof.name] = {
+            "train_step_s": lut.lookup(spec, prof.name),
+            "decode_step_ms": 1e3 * prof.step_latency(flops / seq, pbytes),
+        }
+    return rows
+
+
+def export_submodel(family, params, spec, path: str, *,
+                    fleet: Sequence[DeviceProfile] = EDGE_FLEET
+                    ) -> Dict[str, Any]:
+    """Extract ``spec``'s dense submodel from parent ``params`` and save it
+    at ``path`` (npz + .meta.json sidecar). Returns the metadata dict."""
+    sub_params, _ = family.extract(params, spec)
+    meta = {
+        "family": family.name,
+        "arch": getattr(family.cfg, "name", type(family.cfg).__name__),
+        "spec": spec_payload(spec),
+        "flops": family.flops(spec),
+        "flops_fraction": family.flops_fraction(spec),
+        "param_bytes": family.param_bytes(spec),
+        "latency": _price(family, spec, fleet),
+    }
+    save_checkpoint(path, sub_params, metadata=meta)
+    return meta
+
+
+def load_submodel(family, path: str,
+                  spec=None) -> Tuple[Any, Any, Dict[str, Any]]:
+    """Round-trip load: returns ``(sub_params, sub_ctx, metadata)``.
+
+    ``spec`` defaults to the sidecar's; the restore template is abstract
+    (``jax.eval_shape`` over extract), so no parent params are built."""
+    meta = load_metadata(path)
+    if spec is None:
+        spec = payload_spec(meta["spec"])
+    template = jax.eval_shape(
+        lambda k: family.extract(family.init_params(k), spec)[0],
+        jax.random.PRNGKey(0))
+    sub_params = restore_checkpoint(path, template)
+    return sub_params, family.sub_ctx(spec), meta
