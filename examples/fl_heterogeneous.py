@@ -33,7 +33,15 @@ Engine knobs (CFLConfig):
                      rounds over fl.runtime.FleetRuntime — FedBuff
                      staleness-decayed aggregation whenever
                      CFLConfig.async_buffer deltas arrive; IL has no
-                     rounds to schedule and always runs sync).
+                     rounds to schedule and always runs sync);
+  --faults SPEC      deterministic chaos (CFLConfig.faults / fl.faults):
+                     "drop=0.2,straggle=0.1,corrupt=0.05,seed=3" makes
+                     clients vanish mid-round, bust the deadline, or
+                     return NaN/Inf/outlier deltas — shed and
+                     quarantined updates are credited to the fairness
+                     tracker's participation debt and reported in the
+                     per-round dropped/retried/quarantined columns (IL
+                     aggregates nothing, so faults apply to cfl/fedavg).
 """
 import argparse
 import sys
@@ -60,6 +68,10 @@ ap.add_argument("--selection",
 ap.add_argument("--mode", choices=("sync", "async"), default="sync",
                 help="round scheduling: barrier rounds vs event-driven "
                      "buffered-async rounds (fl.runtime)")
+ap.add_argument("--faults", default=None,
+                help="fault-plan shorthand, e.g. "
+                     "'drop=0.2,straggle=0.1,corrupt=0.05,seed=3' "
+                     "(fl.faults.resolve_fault_plan)")
 ap.add_argument("--rounds", type=int, default=5)
 args = ap.parse_args()
 
@@ -79,15 +91,15 @@ else:
 fl = CFLConfig(n_workers=n_workers, local_epochs=epochs, batch_size=bs,
                lr=lr, seed=0, batched_rounds=(args.engine == "batched"),
                cohort_shards=args.shards, selection=args.selection,
-               mode=args.mode)
+               mode=args.mode, faults=args.faults)
 
 
 def session(algorithm, het, fl_cfg=fl):
     if algorithm == "il":
-        # IL has no rounds to subsample or schedule: it always trains the
-        # whole fleet in one sync shot (the session would reject a partial
-        # selection or async mode outright)
-        fl_cfg = dataclasses.replace(fl_cfg, selection="full", mode="sync")
+        # IL has no rounds to subsample or schedule (and no aggregation
+        # to shed/quarantine around): always the clean sync shot
+        fl_cfg = dataclasses.replace(fl_cfg, selection="full",
+                                     mode="sync", faults=None)
     return CFLSession.from_synthetic(
         family, n_workers=n_workers, n_samples=n_samples,
         heterogeneity=het, fl_cfg=fl_cfg, algorithm=algorithm)
@@ -97,12 +109,15 @@ for het in ("quality", "distribution"):
     print(f"\n== family: {args.family} · heterogeneity: {het} ==")
     cfl = session("cfl", het)
     for rec in cfl.run(args.rounds):
+        chaos = (f"  dropped {rec['dropped']}  retried {rec['retried']}  "
+                 f"quarantined {rec['quarantined']}"
+                 if args.faults else "")
         print(f"  round {rec['round']}: mean acc "
               f"{rec['fairness']['mean']:.3f}  worst "
               f"{rec['fairness']['min']:.3f}  jain "
               f"{rec['fairness']['jain_index']:.3f}  round time "
               f"{rec['timing']['round_time']:.2f}s  straggler gap "
-              f"{rec['timing']['straggler_gap']:.2f}s")
+              f"{rec['timing']['straggler_gap']:.2f}s{chaos}")
     fed = session("fedavg", het)
     fed.run(args.rounds)
     il = session("il", het)

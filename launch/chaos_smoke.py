@@ -1,0 +1,114 @@
+"""Kill-and-resume smoke: prove the fleet checkpoint survives a real
+process death, not just an in-process rebuild.
+
+The parent launches a child python process that trains under a
+FaultPlan with ``checkpoint_every=1`` and hard-kills itself
+(``os._exit``) right after round ``--kill-at`` — no atexit, no
+finalisers, exactly what a preempted host looks like. The parent then
+builds a fresh same-config session, restores the newest checkpoint,
+finishes the remaining rounds, and diffs params + history against an
+uninterrupted reference run. Sync must match bit-for-bit; async too
+(the runtime snapshot carries the event heap and in-flight deltas).
+
+  PYTHONPATH=src python launch/chaos_smoke.py                # sync
+  PYTHONPATH=src python launch/chaos_smoke.py --mode async
+  PYTHONPATH=src python launch/chaos_smoke.py --rounds 6 --kill-at 3
+
+Used by the ``faults`` CI job as the kill-resume gate; exits non-zero
+on any parity violation.
+"""
+import argparse
+import glob
+import os
+import subprocess
+import sys
+
+sys.path.insert(0, "src")
+
+CHILD_ENV = "CHAOS_SMOKE_CHILD"
+CHILD_EXIT = 17          # sentinel: the child really died where we asked
+FAULTS = "drop=0.2,corrupt=0.15,seed=5"
+
+
+def build_session(args, ckpt_dir=None):
+    from repro.configs.paper_cnn import CNNConfig
+    from repro.fl import CFLConfig, CFLSession
+    family = CNNConfig(name="chaos-smoke", in_channels=1, image_size=28,
+                       stem_channels=8, stages=((16, 2), (32, 2)),
+                       groupnorm_groups=4, elastic_widths=(0.5, 1.0))
+    fl = CFLConfig(n_workers=4, local_epochs=1, batch_size=32, lr=0.05,
+                   seed=3, mode=args.mode, faults=args.faults,
+                   async_buffer=2 if args.mode == "async" else None,
+                   checkpoint_every=1 if ckpt_dir else None,
+                   checkpoint_dir=ckpt_dir or "checkpoints/fleet")
+    return CFLSession.from_synthetic(
+        family, kind="synthmnist", n_workers=4, n_samples=200,
+        heterogeneity="quality", fl_cfg=fl, seed=3, algorithm="fedavg")
+
+
+def child(args):
+    sess = build_session(args, ckpt_dir=args.ckpt_dir)
+    sess.run(args.kill_at)       # checkpoint_every=1 saved each round
+    print(f"[child] trained {args.kill_at} rounds, dying now",
+          flush=True)
+    os._exit(CHILD_EXIT)         # no cleanup — a preemption, not an exit
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("sync", "async"), default="sync")
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--kill-at", type=int, default=2, dest="kill_at")
+    ap.add_argument("--faults", default=FAULTS)
+    ap.add_argument("--ckpt-dir", default="/tmp/chaos_smoke_ckpt",
+                    dest="ckpt_dir")
+    args = ap.parse_args()
+
+    if os.environ.get(CHILD_ENV):
+        child(args)
+        return
+
+    for old in glob.glob(os.path.join(args.ckpt_dir, "*.ckpt*")):
+        os.remove(old)
+    env = dict(os.environ, **{CHILD_ENV: "1"})
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, os.path.abspath(__file__)]
+                          + sys.argv[1:], env=env)
+    assert proc.returncode == CHILD_EXIT, \
+        f"child exited {proc.returncode}, expected the kill sentinel"
+
+    ckpts = sorted(glob.glob(os.path.join(args.ckpt_dir, "*.ckpt")))
+    assert ckpts, "child died without leaving a checkpoint"
+    print(f"[parent] child killed; resuming from {ckpts[-1]}")
+
+    import numpy as np
+
+    resumed = build_session(args)
+    info = resumed.restore_checkpoint(ckpts[-1])
+    assert not info["resharded"], "same host must resume cleanly"
+    resumed.run(args.rounds - info["round_idx"])
+
+    reference = build_session(args)
+    reference.run(args.rounds)
+
+    import jax
+    err = max(float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+              for x, y in zip(jax.tree.leaves(reference.params),
+                              jax.tree.leaves(resumed.params)))
+    rows_match = all(
+        a["participants"] == b["participants"]
+        and a["sim_clock"] == b["sim_clock"]
+        and (a["dropped"], a["quarantined"]) ==
+            (b["dropped"], b["quarantined"])
+        for a, b in zip(reference.history, resumed.history))
+    print(f"[parent] param err vs uninterrupted: {err}  "
+          f"history match: {rows_match}")
+    assert err == 0.0, f"resume not bit-exact: param err {err}"
+    assert rows_match, "resumed history diverged from the reference"
+    assert len(reference.history) == len(resumed.history)
+    print(f"PASS: {args.mode} kill-at-{args.kill_at} resume is bit-exact "
+          f"over {args.rounds} rounds under faults '{args.faults}'")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,1 +1,5 @@
-from repro.checkpoint.io import save_checkpoint, restore_checkpoint
+from repro.checkpoint.io import (load_state, restore_checkpoint,
+                                 save_checkpoint, save_state)
+from repro.checkpoint.fleet import (restore_fleet_checkpoint,
+                                    restore_server, save_fleet_checkpoint,
+                                    snapshot_server)

@@ -1,0 +1,184 @@
+"""Round-granular fleet checkpointing: kill a training process at any
+applied server step and resume **bit-exact** against the uninterrupted
+run — in both ``mode="sync"`` and ``mode="async"``.
+
+What a snapshot holds (everything whose loss would fork the replay):
+
+* the server params and round counter, the accumulated ``history``, and
+  the sync-path sim clock;
+* the tracker's device-resident :class:`~repro.fl.selection.FleetArrays`
+  (participation counts, last accs, staleness/pending flags, failure
+  miss counts) — cohort RNG needs no snapshot: round ``r`` always draws
+  from ``SeedSequence(entropy=seed, spawn_key=(r,))``, and the fault
+  schedule is likewise a pure function of ``(plan.seed, engagement
+  id)``, so determinism is *derivational*, not stateful;
+* CFL's online accuracy predictor (MLP params, optimizer state, the
+  profile replay buffer, convergence latch);
+* the async runtime's full machine state via
+  ``FleetRuntime.state_snapshot()``: the event heap (with its sequence
+  tiebreak counter), every in-flight cohort's resident deltas and
+  bookkeeping masks, the group-id counter the fault draws key on, and
+  the retry/backoff ladder.
+
+Serialisation goes through ``checkpoint.io.save_state`` (host-pickled,
+device arrays pulled to numpy bit-exactly).
+
+Degraded path — **reshard + rewind** (maxtext ``elastic_utils``-style):
+restoring onto a different cohort-shard/device topology cannot replay
+in-flight groups bit-exactly (their deltas were reduced under another
+mesh), so the restore drops whatever was in flight, clears those
+clients' pending flags, and rewinds to the last aggregate boundary —
+the durable state (params, fleet arrays, history) survives and training
+re-dispatches from there. ``restore_fleet_checkpoint`` reports this in
+its info dict so callers can tell a clean resume from a rewind.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import load_state, save_state
+from repro.configs.base import config_fingerprint
+from repro.fl.selection import FleetArrays
+
+FORMAT_VERSION = 1
+
+
+def _host(tree):
+    return jax.tree.map(np.asarray, tree)
+
+
+def _device(tree):
+    return jax.tree.map(jnp.asarray, tree)
+
+
+def _predictor_snapshot(predictor) -> Optional[Dict]:
+    if predictor is None:
+        return None
+    return {
+        "params": _host(predictor.params),
+        "opt_state": _host(predictor.opt_state),
+        "buffer_x": [np.asarray(x) for x in predictor.buffer_x],
+        "buffer_y": list(predictor.buffer_y),
+        "converged": bool(predictor.converged),
+        "last_mae": float(predictor.last_mae),
+    }
+
+
+def _predictor_restore(predictor, snap: Optional[Dict]) -> None:
+    if predictor is None or snap is None:
+        return
+    predictor.params = _device(snap["params"])
+    predictor.opt_state = _device(snap["opt_state"])
+    predictor.buffer_x = [np.asarray(x) for x in snap["buffer_x"]]
+    predictor.buffer_y = list(snap["buffer_y"])
+    predictor.converged = bool(snap["converged"])
+    predictor.last_mae = float(snap["last_mae"])
+
+
+def snapshot_server(server) -> Dict:
+    """Snapshot a CFLServer/FedAvgServer (and its runtime, when built)
+    into a picklable host-side dict."""
+    arrays = server.tracker.arrays
+    runtime = getattr(server, "_runtime", None)
+    return {
+        "format_version": FORMAT_VERSION,
+        "round_idx": int(server.round_idx),
+        "sim_clock": float(getattr(server, "_sim_clock", 0.0)),
+        "mode": getattr(server.fl, "mode", "sync"),
+        "params": _host(server.params),
+        "history": list(server.history),
+        "fleet_arrays": _host({f.name: getattr(arrays, f.name)
+                               for f in dataclasses.fields(arrays)}),
+        "predictor": _predictor_snapshot(getattr(server, "predictor",
+                                                 None)),
+        "runtime": None if runtime is None else runtime.state_snapshot(),
+        # identity + topology fingerprints: architecture mismatch is an
+        # error, shard/device mismatch is the reshard-degraded path
+        "family": config_fingerprint(server.cfg),
+        "cohort_shards": int(getattr(server.fl, "cohort_shards", 1)),
+        "n_devices": len(jax.devices()),
+        "n_clients": len(server.clients),
+    }
+
+
+def save_fleet_checkpoint(path: str, server, metadata: Dict = None
+                          ) -> None:
+    """Write a resumable snapshot of ``server`` to ``path`` (atomic)."""
+    meta = {"round_idx": int(server.round_idx),
+            "mode": getattr(server.fl, "mode", "sync"),
+            "format_version": FORMAT_VERSION}
+    if metadata:
+        meta.update(metadata)
+    save_state(path, snapshot_server(server), metadata=meta)
+
+
+def restore_server(server, snap: Dict) -> Dict:
+    """Load a snapshot into a freshly built server (same family, fleet
+    and config as the saver). Returns an info dict:
+    ``{"round_idx", "resharded", "dropped_in_flight"}`` —
+    ``resharded=True`` means the shard/device topology changed and the
+    in-flight state was rewound instead of replayed (the degraded
+    path); bit-exact resume requires ``resharded=False``."""
+    if snap.get("format_version") != FORMAT_VERSION:
+        raise ValueError(
+            f"fleet checkpoint format {snap.get('format_version')} != "
+            f"supported {FORMAT_VERSION}")
+    if snap["family"] != config_fingerprint(server.cfg):
+        raise ValueError(
+            "checkpoint was written for a different architecture: "
+            f"{snap['family'][:80]}... vs this server's "
+            f"{config_fingerprint(server.cfg)[:80]}...")
+    if snap["n_clients"] != len(server.clients):
+        raise ValueError(
+            f"checkpoint is for a {snap['n_clients']}-client fleet; this "
+            f"server has {len(server.clients)} — fleet membership must "
+            f"match (elastic membership is a tracker.set_fleet concern, "
+            f"not a restore concern)")
+    server.params = _device(snap["params"])
+    server.round_idx = int(snap["round_idx"])
+    server._sim_clock = float(snap["sim_clock"])
+    server.history = list(snap["history"])
+    cols = {k: (None if v is None else jnp.asarray(v))
+            for k, v in snap["fleet_arrays"].items()}
+    server.tracker.arrays = FleetArrays(**cols)
+    _predictor_restore(getattr(server, "predictor", None),
+                       snap["predictor"])
+
+    resharded = (int(snap["cohort_shards"])
+                 != int(getattr(server.fl, "cohort_shards", 1))
+                 or int(snap["n_devices"]) != len(jax.devices()))
+    dropped: list = []
+    rt_snap = snap["runtime"]
+    if rt_snap is not None and not resharded:
+        server.runtime.load_state(rt_snap)
+    elif rt_snap is not None:
+        # reshard + rewind: in-flight deltas were produced under another
+        # mesh — drop them, free their clients, restart the event loop
+        # from the last aggregate boundary
+        for gs in rt_snap["groups"].values():
+            idx, valid, _ = gs["sel"]
+            live = ~(np.asarray(gs["consumed"])
+                     | np.asarray(gs["failed"])) & (np.asarray(valid) > 0)
+            dropped.extend(int(i) for i in np.asarray(idx)[live])
+        dropped.extend(int(c) for c in rt_snap["in_backoff"])
+        a = server.tracker.arrays
+        server.tracker.arrays = dataclasses.replace(
+            a, pending=jnp.zeros_like(a.pending),
+            staleness=jnp.zeros_like(a.staleness))
+        rt = server.runtime          # fresh machine, clean heap
+        rt.clock = float(rt_snap["clock"])
+        rt._events = []
+        rt._push(rt.clock, "dispatch", ())
+    return {"round_idx": server.round_idx, "resharded": resharded,
+            "dropped_in_flight": sorted(set(dropped))}
+
+
+def restore_fleet_checkpoint(path: str, server) -> Dict:
+    """Read ``path`` and load it into ``server`` (see
+    :func:`restore_server`)."""
+    return restore_server(server, load_state(path))

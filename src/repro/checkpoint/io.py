@@ -68,3 +68,45 @@ def restore_checkpoint(path: str, template: Any) -> Any:
 def load_metadata(path: str) -> Dict:
     with open(path + ".meta.json") as f:
         return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous state snapshots (checkpoint.fleet)
+# ---------------------------------------------------------------------------
+def _to_host(tree: Any) -> Any:
+    """Device arrays → numpy, bit-exact, leaving host objects alone."""
+    def leaf(x):
+        if isinstance(x, jax.Array):
+            return np.asarray(x)
+        return x
+    return jax.tree.map(leaf, tree)
+
+
+def save_state(path: str, state: Any, metadata: Dict = None) -> None:
+    """Snapshot an arbitrary host+device state tree (the fleet runtime's
+    event heap, in-flight cohorts, RNG bookkeeping, ...) to one file.
+
+    The npz manifest format above needs a same-shaped template to
+    restore into; a fleet checkpoint has no such template (in-flight
+    group count, per-family delta shapes and spec objects all vary), so
+    state snapshots use stdlib pickle with every jax array pulled to
+    numpy first (``np.asarray`` of a device array is bit-exact — this is
+    what the kill-and-resume bit-parity test leans on). Internal
+    format: same-version restore only, like the npz manifests.
+    """
+    import pickle
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    blob = pickle.dumps(_to_host(state), protocol=pickle.HIGHEST_PROTOCOL)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:        # atomic publish: never a torn file
+        f.write(blob)
+    os.replace(tmp, path)
+    if metadata is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(metadata, f, indent=2)
+
+
+def load_state(path: str) -> Any:
+    import pickle
+    with open(path, "rb") as f:
+        return pickle.load(f)

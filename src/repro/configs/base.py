@@ -336,5 +336,19 @@ def flops_per_token(cfg: ModelConfig, seq_len: int) -> float:
     return base + attn
 
 
+def config_fingerprint(cfg) -> str:
+    """Stable identity string for a family config — the class name plus
+    every dataclass field (works for ``ModelConfig`` here and
+    ``CNNConfig`` in `src/repro/configs/paper_cnn.py` alike). Fleet
+    checkpoints store it (`src/repro/checkpoint/fleet.py`) so a snapshot
+    refuses to restore into a different architecture up front instead of
+    failing deep inside a parameter-tree merge."""
+    if dataclasses.is_dataclass(cfg):
+        fields = ",".join(f"{f.name}={getattr(cfg, f.name)!r}"
+                          for f in dataclasses.fields(cfg))
+        return f"{type(cfg).__name__}({fields})"
+    return repr(cfg)
+
+
 MESH_AXES_SINGLE = ("data", "model")
 MESH_AXES_MULTI = ("pod", "data", "model")

@@ -64,10 +64,10 @@ def apply_server_update(params, delta, server_lr: float = 1.0):
 # ---------------------------------------------------------------------------
 # fused batched path (round engine): stacked client axis, one jitted program
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("coverage_norm",))
+@functools.partial(jax.jit, static_argnames=("coverage_norm", "sanitize"))
 def aggregate_apply(params, stacked_deltas, stacked_coverages, weights, *,
                     coverage_norm: bool = False, eps: float = 1e-8,
-                    participation=None):
+                    participation=None, sanitize: bool = False):
     """Fused Alg. 3 + Alg. 4 server step over a *stacked* cohort.
 
     stacked_deltas / stacked_coverages: pytrees whose leaves carry a
@@ -83,18 +83,31 @@ def aggregate_apply(params, stacked_deltas, stacked_coverages, weights, *,
     average runs over the *participating* mass only and entries covered
     solely by padding slots stay exactly 0 under coverage_norm. A runtime
     input, not a static one — subset churn never recompiles this program.
+
+    sanitize: zero non-finite delta entries *inside* the weighted sum.
+    Zeroing a quarantined client's weight is not enough on its own —
+    ``0 * NaN`` is NaN, so one poisoned slot would NaN the whole fused
+    sum; with ``sanitize`` the masked entries drop out exactly. Finite
+    deltas pass through bit-identically (``where`` on an all-true mask),
+    so the fault-free numerics are unchanged. The participating mass is
+    also floored at ``eps`` so a fully-quarantined cohort applies a
+    no-op step instead of 0/0.
     """
     w = weights.astype(jnp.float32)
     if participation is not None:
         w = w * participation.astype(jnp.float32)
 
+    def clean(d):
+        d = d.astype(jnp.float32)
+        return jnp.where(jnp.isfinite(d), d, 0.0) if sanitize else d
+
     def plain(d):
         wd = w.reshape((-1,) + (1,) * (d.ndim - 1))
-        return jnp.sum(d.astype(jnp.float32) * wd, 0) / jnp.sum(w)
+        return jnp.sum(clean(d) * wd, 0) / jnp.maximum(jnp.sum(w), eps)
 
     def covnorm(d, c):
         wd = w.reshape((-1,) + (1,) * (d.ndim - 1))
-        num = jnp.sum(d.astype(jnp.float32) * wd, 0)
+        num = jnp.sum(clean(d) * wd, 0)
         den = jnp.sum(c.astype(jnp.float32) * wd, 0)
         return num / jnp.maximum(den, eps)
 
@@ -120,10 +133,10 @@ def staleness_scale(staleness: float, decay: float) -> float:
     return float((1.0 + float(staleness)) ** (-float(decay)))
 
 
-@functools.partial(jax.jit, static_argnames=("coverage_norm",))
+@functools.partial(jax.jit, static_argnames=("coverage_norm", "sanitize"))
 def cohort_reduce(stacked_deltas, stacked_coverages, weights, *,
                   coverage_norm: bool = False, participation=None,
-                  scale=1.0):
+                  scale=1.0, sanitize: bool = False):
     """Reduce one completed dispatch group to its aggregation partial
     sums: ``(num, den)`` where ``num`` is the fp32 weighted delta sum per
     leaf and ``den`` is the matching coverage-weight sum per leaf
@@ -137,6 +150,11 @@ def cohort_reduce(stacked_deltas, stacked_coverages, weights, *,
     server step whenever B deltas have arrived. The compiled-program
     count stays bounded (reduce/add/apply — one each per family) no
     matter how completion order interleaves.
+
+    ``sanitize`` zeroes non-finite delta entries inside the sum (see
+    :func:`aggregate_apply`): a quarantined slot's 0 weight would still
+    poison the partial sum via ``0 * NaN`` without it. Coverage masks
+    are 0/1 and never sanitised.
     """
     w = weights.astype(jnp.float32)
     if participation is not None:
@@ -144,8 +162,11 @@ def cohort_reduce(stacked_deltas, stacked_coverages, weights, *,
     w = w * scale
 
     def num_leaf(d):
+        d = d.astype(jnp.float32)
+        if sanitize:
+            d = jnp.where(jnp.isfinite(d), d, 0.0)
         wd = w.reshape((-1,) + (1,) * (d.ndim - 1))
-        return jnp.sum(d.astype(jnp.float32) * wd, 0)
+        return jnp.sum(d * wd, 0)
 
     num = jax.tree.map(num_leaf, stacked_deltas)
     if coverage_norm:
@@ -178,10 +199,54 @@ def buffer_apply(params, num, den, *, coverage_norm: bool = False,
 
 
 # ---------------------------------------------------------------------------
+# delta validation: the quarantine gate in front of every aggregate
+# ---------------------------------------------------------------------------
+@jax.jit
+def delta_validity(stacked_deltas, participation, clip_factor):
+    """Per-client validity gate over a stacked ``(K, ...)`` delta tree:
+    returns ``(valid, norms)`` — (K,) float32 0/1 flags and the (K,)
+    fp32 global L2 norms.
+
+    A slot is valid iff every entry of its delta is finite **and** its
+    norm is within ``clip_factor ×`` the median norm of the finite
+    participating slots (robust to <50% outliers — exactly the poisoned
+    minority the gate exists for). ``clip_factor <= 0`` disables the
+    norm test (finite check only). ``participation`` masks which slots
+    vote in the median (padding/failed slots don't drag it); everything
+    is runtime data, so fault churn never recompiles this program.
+
+    Compose the result into :func:`cohort_reduce` /
+    :func:`aggregate_apply` by multiplying it into ``participation``
+    (with ``sanitize=True`` so the rejected entries also vanish from the
+    sums): quarantined deltas drop out of the numerator *and* the
+    coverage denominator without a recompile.
+    """
+    part = participation.astype(jnp.float32) > 0
+
+    def leaf_stats(d):
+        d32 = d.astype(jnp.float32)
+        axes = tuple(range(1, d32.ndim))
+        fin = jnp.isfinite(d32)
+        sq = jnp.sum(jnp.where(fin, d32 * d32, 0.0), axis=axes)
+        return sq, jnp.all(fin, axis=axes)
+
+    stats = [leaf_stats(d) for d in jax.tree.leaves(stacked_deltas)]
+    sq = functools.reduce(jnp.add, [s for s, _ in stats])
+    finite = functools.reduce(jnp.logical_and, [f for _, f in stats])
+    norm = jnp.sqrt(sq)
+    ref = jnp.where(part & finite, norm, jnp.nan)
+    limit = clip_factor * jnp.maximum(jnp.nanmedian(ref), 1e-12)
+    norm_ok = jnp.where(jnp.isnan(limit), True, norm <= limit)
+    ok = finite & ((clip_factor <= 0) | norm_ok)
+    return ok.astype(jnp.float32), norm
+
+
+# ---------------------------------------------------------------------------
 # hierarchical aggregation: per-shard partial sums + one collective
 # ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=None)
-def _hierarchical_program(mesh, coverage_norm: bool, has_participation: bool):
+def _hierarchical_program(mesh, coverage_norm: bool, has_participation: bool,
+                          sanitize: bool = False):
     """Compile the sharded aggregate+apply for one (mesh, flags) combo.
 
     Each cohort shard reduces its resident clients to local partial sums
@@ -197,8 +262,11 @@ def _hierarchical_program(mesh, coverage_norm: bool, has_participation: bool):
 
     def local(params, stacked_deltas, stacked_coverages, w):
         def num_leaf(d):
+            d = d.astype(jnp.float32)
+            if sanitize:
+                d = jnp.where(jnp.isfinite(d), d, 0.0)
             wd = w.reshape((-1,) + (1,) * (d.ndim - 1))
-            return jnp.sum(d.astype(jnp.float32) * wd, 0)
+            return jnp.sum(d * wd, 0)
         num = jax.tree.map(num_leaf, stacked_deltas)
         den = jax.tree.map(num_leaf, stacked_coverages) if coverage_norm \
             else jnp.sum(w)
@@ -228,14 +296,15 @@ def _hierarchical_program(mesh, coverage_norm: bool, has_participation: bool):
 def aggregate_apply_hierarchical(params, stacked_deltas, stacked_coverages,
                                  weights, *, mesh,
                                  coverage_norm: bool = False,
-                                 participation=None):
+                                 participation=None,
+                                 sanitize: bool = False):
     """Sharded twin of :func:`aggregate_apply`: same signature plus the
     cohort ``mesh``; numerics match the flat mean ≤1e-5 (same fp32
     partial sums, different reduction order). Requires the stacked client
     axis to divide the mesh (``sharding.cohort.effective_cohort_shards``
     guarantees it)."""
     fn = _hierarchical_program(mesh, bool(coverage_norm),
-                               participation is not None)
+                               participation is not None, bool(sanitize))
     if not coverage_norm:
         stacked_coverages = jax.tree.map(
             lambda d: jnp.zeros((d.shape[0], 1), jnp.float32),

@@ -122,6 +122,8 @@ class FedAvgServer:
         spec = self.family.full_spec()
         sel = self.tracker.select(self.round_idx)
         participants = [int(i) for i in sel.participants]
+        if getattr(self.fl, "faults", None) is not None:
+            return self._run_faulty_round(spec, sel)
         if self.tracker.is_full and self.fl.batched_rounds:
             seeds = [self.fl.seed * 7 + self.round_idx * 131 + k
                      for k in range(len(self.clients))]
@@ -168,7 +170,36 @@ class FedAvgServer:
                                                for t in times]))
                if times else 0.0,
                "sim_clock": self._sim_clock,
+               "mode": "sync",
+               "dropped": 0, "retried": 0, "quarantined": 0,
+               "quorum_waited_ms": barrier * 1e3}
+        self.history.append(rec)
+        self.round_idx += 1
+        return rec
+
+    def _run_faulty_round(self, spec, sel) -> Dict:
+        """Barrier round under the FaultPlan: shared shed/quarantine/
+        no-op-guard path (fl.faults.faulty_sync_round) with FedAvg's
+        full-spec cohort."""
+        from repro.fl.faults import faulty_sync_round
+        specs = [spec] * len(sel.participants)
+        accs, times, participants, _, stats = faulty_sync_round(
+            self, specs, sel)
+        barrier = max(times) if times else 0.0
+        self._sim_clock += barrier
+        rec = {"round": self.round_idx, "accs": accs,
+               "participants": participants,
+               "selection": self.tracker.policy.name,
+               "fairness": accuracy_fairness(accs if accs
+                                             else [float("nan")]),
+               "timing": round_time_fairness(times if times else [0.0]),
+               "staleness": 0.0,
+               "aggregate_lag": float(np.mean([barrier - t
+                                               for t in times]))
+               if times else 0.0,
+               "sim_clock": self._sim_clock,
                "mode": "sync"}
+        rec.update(stats)
         self.history.append(rec)
         self.round_idx += 1
         return rec

@@ -1,0 +1,297 @@
+"""Deterministic fault injection for the fleet runtime.
+
+Production fleets fail in exactly the places the fairness story lives:
+slow devices straggle past the deadline, flaky radios drop updates
+mid-round, broken edges ship NaN/Inf or exploded deltas, and whole
+cohort shards die with their host. This module makes those failures a
+*reproducible input* instead of an ambient hazard: a frozen
+:class:`FaultPlan` draws every fault from
+``np.random.SeedSequence(entropy=seed, spawn_key=(stream, key))`` — the
+same derivation discipline as cohort selection — so a chaos run replays
+bit-for-bit, a kill-and-resume replays the *same* faults it would have
+hit uninterrupted, and a hypothesis shrink of a failing plan is
+meaningful.
+
+Fault draws are keyed per **engagement** (the dispatch group id in async
+mode, the round index in sync mode), not per client: a client that
+failed and was re-enqueued gets a fresh draw on its retry, so a bounded
+drop rate can never deterministically starve one client forever.
+
+Corruption enters the compiled world through one jitted program
+(:func:`inject_deltas`) taking runtime ``(M,)`` code/scale vectors —
+fault churn never changes program shapes, so the engine's
+no-recompile-under-churn invariant survives a chaos run (asserted in
+``tests/test_faults.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# per-slot fault kinds (host-side plan)
+OK, DROP, STRAGGLE, NAN, INF, OUTLIER = range(6)
+
+# corruption codes for the jitted injector (runtime data, not kinds)
+_CODE_CLEAN, _CODE_NAN, _CODE_INF = 0, 1, 2
+
+# fault draws and sync-round draws must never collide with each other:
+# async engagements key on (STREAM_ASYNC, gid), sync rounds on
+# (STREAM_SYNC, round_idx)
+STREAM_ASYNC, STREAM_SYNC = 0, 1
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupFaults:
+    """One engagement's drawn faults: per-slot ``kinds`` (OK/DROP/...)
+    plus the dead shard index (or -1). Host-side numpy only."""
+    kinds: np.ndarray               # (M,) int
+    killed_shard: int = -1
+
+    @property
+    def drop(self) -> np.ndarray:
+        return self.kinds == DROP
+
+    @property
+    def straggle(self) -> np.ndarray:
+        return self.kinds == STRAGGLE
+
+    @property
+    def corrupt(self) -> np.ndarray:
+        return (self.kinds == NAN) | (self.kinds == INF) | \
+            (self.kinds == OUTLIER)
+
+    def any_fault(self) -> bool:
+        return bool((self.kinds != OK).any())
+
+    def codes_scales(self, outlier_scale: float):
+        """Runtime inputs for :func:`inject_deltas`: (M,) int32 corruption
+        codes and (M,) float32 multipliers (outliers scale, others 1)."""
+        codes = np.zeros_like(self.kinds, np.int32)
+        codes[self.kinds == NAN] = _CODE_NAN
+        codes[self.kinds == INF] = _CODE_INF
+        scales = np.ones_like(self.kinds, np.float32)
+        scales[self.kinds == OUTLIER] = np.float32(outlier_scale)
+        return jnp.asarray(codes), jnp.asarray(scales)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A reproducible fleet-failure schedule.
+
+    Rates are per dispatched slot per engagement: ``drop_rate`` clients
+    vanish mid-round (no delta ever arrives), ``straggle_rate`` clients
+    take ``straggle_factor``× their simulated time (busting any
+    deadline tighter than that), ``corrupt_rate`` clients return a bad
+    delta (uniformly NaN / Inf / ``outlier_scale``× norm outlier), and
+    with probability ``shard_kill_rate`` per engagement one cohort
+    shard dies wholesale (every slot it owns drops). ``seed``
+    namespaces the whole schedule; the same plan replayed over the same
+    run produces identical faults.
+    """
+    seed: int = 0
+    drop_rate: float = 0.0
+    straggle_rate: float = 0.0
+    straggle_factor: float = 8.0
+    corrupt_rate: float = 0.0
+    outlier_scale: float = 1e6
+    shard_kill_rate: float = 0.0
+
+    def __post_init__(self):
+        total = self.drop_rate + self.straggle_rate + self.corrupt_rate
+        if total > 1.0 + 1e-9:
+            raise ValueError(
+                f"drop+straggle+corrupt rates must sum to <= 1, got "
+                f"{total}")
+        for name in ("drop_rate", "straggle_rate", "corrupt_rate",
+                     "shard_kill_rate"):
+            v = getattr(self, name)
+            if not (0.0 <= v <= 1.0):
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+
+    def any_rates(self) -> bool:
+        return (self.drop_rate > 0 or self.straggle_rate > 0 or
+                self.corrupt_rate > 0 or self.shard_kill_rate > 0)
+
+    def draw(self, stream: int, key: int, n_slots: int,
+             n_shards: int = 1) -> GroupFaults:
+        """Draw one engagement's faults. ``(stream, key)`` is the
+        SeedSequence spawn key — async passes ``(STREAM_ASYNC, gid)``,
+        sync ``(STREAM_SYNC, round_idx)`` — so the schedule is a pure
+        function of the plan and the engagement id: replay-stable
+        across kill/resume, fresh per retry (a retried client rides a
+        new gid)."""
+        ss = np.random.SeedSequence(entropy=int(self.seed),
+                                    spawn_key=(int(stream), int(key)))
+        rng = np.random.RandomState(ss.generate_state(4))
+        u = rng.rand(n_slots)
+        kinds = np.full((n_slots,), OK, np.int64)
+        lo = 0.0
+        kinds[(u >= lo) & (u < lo + self.drop_rate)] = DROP
+        lo += self.drop_rate
+        kinds[(u >= lo) & (u < lo + self.straggle_rate)] = STRAGGLE
+        lo += self.straggle_rate
+        corrupt = (u >= lo) & (u < lo + self.corrupt_rate)
+        # corrupt mode drawn independently so rate changes don't reshuffle
+        modes = rng.randint(0, 3, size=n_slots)
+        kinds[corrupt] = np.asarray([NAN, INF, OUTLIER])[modes[corrupt]]
+        killed = -1
+        if n_shards > 1 and rng.rand() < self.shard_kill_rate:
+            killed = int(rng.randint(0, n_shards))
+            per = n_slots // n_shards
+            kinds[killed * per:(killed + 1) * per] = DROP
+        return GroupFaults(kinds=kinds, killed_shard=killed)
+
+
+@jax.jit
+def inject_deltas(stacked_deltas, codes, scales):
+    """Apply corruption to a stacked ``(M, ...)`` delta pytree on device:
+    ``codes`` (M,) int32 — 0 clean, 1 NaN, 2 Inf; ``scales`` (M,)
+    float32 multiplier (norm outliers). One compiled program per family
+    shape: which slots are corrupted is runtime data."""
+    def leaf(d):
+        c = codes.reshape((-1,) + (1,) * (d.ndim - 1))
+        s = scales.reshape((-1,) + (1,) * (d.ndim - 1))
+        out = d * s.astype(d.dtype)
+        out = jnp.where(c == _CODE_NAN, jnp.nan, out)
+        out = jnp.where(c == _CODE_INF, jnp.inf, out)
+        return out.astype(d.dtype)
+    return jax.tree.map(leaf, stacked_deltas)
+
+
+def faulty_sync_round(server, specs, sel):
+    """Barrier-round twin of the runtime's dispatch→deadline→aggregate
+    path, shared by CFLServer and FedAvgServer when ``fl.faults`` is set
+    in ``mode="sync"``.
+
+    Trains the cohort through the batched engine, draws this round's
+    faults (keyed ``(STREAM_SYNC, round_idx)``), sheds dropped and
+    late-past-deadline clients at the barrier (no intra-round retry —
+    sync semantics re-select next round; every shed client is credited a
+    fairness miss), quarantines corrupt deltas through
+    ``core.aggregate.delta_validity``, and applies the server step with
+    ``sanitize=True`` over the gated participation (a fully-shed round
+    is a no-op step, never NaN). Returns
+    ``(accs, times, participants, specs_kept, stats)`` over the kept
+    (contributing) clients; ``server.params`` is updated in place.
+    """
+    from repro.core.aggregate import (aggregate_apply,
+                                      aggregate_apply_hierarchical,
+                                      delta_validity)
+    fl = server.fl
+    engine = server.engine
+    if engine is None:
+        raise ValueError("fault injection requires the batched engine "
+                         "(batched_rounds=True)")
+    plan = resolve_fault_plan(fl.faults)
+    m = len(sel.idx)
+    specs_pad = list(specs) + [specs[0]] * (m - len(specs))
+    seeds = [server._client_seed(int(i)) for i in sel.idx]
+    theta0 = engine.broadcast_params(server.params, m)
+    res = engine.train_cohort(
+        theta0, specs_pad, server.client_data, batch_size=fl.batch_size,
+        epochs=fl.local_epochs, seeds=seeds,
+        eval_datasets=server.test_data, participation=sel)
+    covs = res.masks.param_mask if fl.coverage_norm else None
+    deltas = res.deltas
+
+    participants = [int(i) for i in sel.participants]
+    valid_slots = np.flatnonzero(sel.valid > 0)
+    n_steps_valid = [int(n) for n in sel.take_valid(res.n_steps)]
+    times_valid = server._simulated_times(specs, n_steps_valid,
+                                          participants)
+    times = np.zeros((m,), np.float64)
+    times[valid_slots] = times_valid
+
+    sh = engine.cohort_sharding(m)
+    kept = sel.valid > 0
+    dropped_ids: list = []
+    if plan is not None and plan.any_rates():
+        n_shards = int(sh.mesh.size) if sh is not None else 1
+        gf = plan.draw(STREAM_SYNC, server.round_idx, m, n_shards)
+        if gf.corrupt.any():
+            codes, scales = gf.codes_scales(plan.outlier_scale)
+            deltas = inject_deltas(deltas, codes, scales)
+        # deadline budget from the clean predicted times, *then* inflate
+        # stragglers — a straggler gets no extra rope for straggling
+        df = fl.deadline_factor if getattr(fl, "deadline_factor", None) \
+            is not None else 4.0
+        deadline = df * max(float(np.median(times_valid)), 1e-9) \
+            if len(times_valid) else 0.0
+        straggle = gf.straggle & (sel.valid > 0)
+        times[straggle] *= plan.straggle_factor
+        fail = (gf.drop | (times > deadline)) & (sel.valid > 0)
+        kept = kept & ~fail
+        dropped_ids = [int(sel.idx[s]) for s in np.flatnonzero(fail)]
+
+    part_np = np.asarray(sel.valid * kept, np.float32)
+    clip = float(getattr(fl, "norm_clip_factor", 6.0))
+    gatev, _ = delta_validity(deltas, jnp.asarray(part_np),
+                              jnp.float32(clip))
+    gv = np.asarray(gatev)
+    quar_slots = np.flatnonzero((part_np > 0) & (gv == 0))
+    part = jnp.asarray(part_np * gv.astype(np.float32))
+
+    weights = jnp.asarray(np.asarray(sel.weights, np.float32))
+    if sh is not None:
+        server.params = aggregate_apply_hierarchical(
+            server.params, deltas, covs, weights, mesh=sh.mesh,
+            coverage_norm=fl.coverage_norm, participation=part,
+            sanitize=True)
+    else:
+        server.params = aggregate_apply(
+            server.params, deltas, covs, weights,
+            coverage_norm=fl.coverage_norm, participation=part,
+            sanitize=True)
+
+    quarantined_ids = [int(sel.idx[s]) for s in quar_slots]
+    server.tracker.record_miss(dropped_ids)
+    server.tracker.record_miss(quarantined_ids)
+    kept_slots = np.flatnonzero(kept)
+    accs = [float(res.accs[s]) for s in kept_slots]
+    kept_times = [float(times[s]) for s in kept_slots]
+    kept_ids = [int(sel.idx[s]) for s in kept_slots]
+    specs_kept = [specs_pad[s] for s in kept_slots]
+    server.tracker.record(kept_ids, accs)
+    stats = {"dropped": len(dropped_ids), "retried": 0,
+             "quarantined": len(quar_slots),
+             "quorum_waited_ms": (max(kept_times) if kept_times else 0.0)
+             * 1e3}
+    return accs, kept_times, kept_ids, specs_kept, stats
+
+
+def resolve_fault_plan(spec) -> Optional[FaultPlan]:
+    """Coerce a config value into a FaultPlan: None/False → None, a
+    FaultPlan → itself, a dict → FaultPlan(**dict), a string →
+    ``"drop=0.2,straggle=0.1,corrupt=0.05,kill=0.1,seed=3"`` shorthand
+    (the ``--faults`` CLI surface; bare floats set ``drop``)."""
+    if spec is None or spec is False:
+        return None
+    if isinstance(spec, FaultPlan):
+        return spec
+    if isinstance(spec, dict):
+        return FaultPlan(**spec)
+    if isinstance(spec, (int, float)) and not isinstance(spec, bool):
+        return FaultPlan(drop_rate=float(spec))
+    if isinstance(spec, str):
+        alias = {"drop": "drop_rate", "straggle": "straggle_rate",
+                 "corrupt": "corrupt_rate", "kill": "shard_kill_rate",
+                 "seed": "seed", "outlier": "outlier_scale",
+                 "factor": "straggle_factor"}
+        kwargs = {}
+        for part in spec.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            if "=" not in part:
+                raise ValueError(f"bad --faults token {part!r}; expected "
+                                 f"key=value with keys {sorted(alias)}")
+            k, v = part.split("=", 1)
+            k = alias.get(k.strip(), k.strip())
+            kwargs[k] = int(v) if k == "seed" else float(v)
+        return FaultPlan(**kwargs)
+    raise TypeError(f"faults must be None, a FaultPlan, dict, number or "
+                    f"string, got {type(spec).__name__}")

@@ -4,7 +4,7 @@ The paper's server (Alg. 4) is lock-step — select, train a cohort, wait
 for the barrier, aggregate. Production fleets never synchronize:
 stragglers dominate the barrier exactly where the fairness story matters.
 This module replaces the blocking round loop with a **tick machine** over
-three event kinds driven by the simulated two-term latency clock
+five event kinds driven by the simulated two-term latency clock
 (``core.latency``):
 
 ``dispatch``    select a cohort among non-pending clients, run its local
@@ -15,13 +15,35 @@ three event kinds driven by the simulated two-term latency clock
 ``complete``    a client's delta "arrives": host-side bookkeeping only —
                 mark the slot done, fold its accuracy into the tracker.
                 When the number of arrived-but-unapplied deltas reaches
-                the buffer size B, schedule an ``aggregate``.
+                the quorum (buffer size B), schedule an ``aggregate``.
 ``aggregate``   FedBuff-style buffered server step: every arrived delta
                 is reduced group-by-group (one ``cohort_reduce`` partial
                 sum per in-flight cohort, discounted by the staleness
                 decay ``(1+s)^-a`` of *its* dispatch snapshot), the
                 buffer is applied in one ``buffer_apply``, the server
                 version advances, and the next ``dispatch`` is scheduled.
+``deadline``    the dispatch's time budget expires: slots that have not
+                arrived are **failed** — their miss is credited to the
+                fairness tracker's participation debt and the client is
+                re-enqueued with exponential backoff (bounded retries).
+                A late arrival after its deadline is discarded.
+``retry``       a failed client's backoff expires: it becomes selectable
+                again (a fresh engagement with a fresh fault draw).
+
+Failure semantics (``fl.faults.FaultPlan``): faults are deterministic
+per engagement — drop (no ``complete`` ever fires), straggle (simulated
+time inflated past the deadline), corrupt (NaN/Inf/norm-outlier deltas,
+injected on device through one jitted program), shard kill (a contiguous
+slot range of the cohort axis drops). Corrupted deltas are caught at
+aggregate time by the jitted quarantine gate
+(``core.aggregate.delta_validity``): quarantined slots drop out of both
+the update numerator and the coverage denominator (``sanitize=True``
+zeroes their non-finite entries inside the fused sums — a 0 weight alone
+would still poison them via ``0 * NaN``), and an all-quarantined buffer
+applies a no-op server step, never NaN. Every failed or quarantined
+engagement calls ``tracker.record_miss`` — the fairness policy scores a
+missed round like an owed one, so failure handling feeds the selection
+debt instead of silently starving flaky clients.
 
 Numerics contract (tests/test_async_runtime.py): with buffer = cohort
 size and zero staleness the aggregate fires exactly at the barrier with a
@@ -33,24 +55,28 @@ async operation (B < cohort, staleness > 0) the buffered path uses
 ``cohort_reduce``/``buffer_add``/``buffer_apply`` — three more jitted
 programs compiled once each, never per-round: the engine's
 2-compiled-programs-per-round invariant survives as a bounded program
-count under arbitrary completion interleavings.
+count under arbitrary completion interleavings, fault churn included
+(which slots fail is runtime data, never a shape).
 
 Staleness is **uniform per dispatch group** (every slot of a dispatch
 trained against the same server snapshot), so the decay is a host scalar
 per group and never enters the compiled program shapes. Per-client
-staleness/pending columns live device-resident in
+staleness/pending/miss columns live device-resident in
 ``fl.selection.FleetArrays`` for observability and selection.
 
 Servers stay thin policies over this runtime: they provide cohort specs
 (``cohort_specs``), per-client seeds (``_client_seed``), the simulated
 times (``_simulated_times``), and a ``post_aggregate`` hook (CFL's
-predictor update; FedAvg's no-op).
+predictor update; FedAvg's no-op). The whole machine is
+checkpointable: ``state_snapshot()`` / ``load_state()`` round-trip the
+event heap, in-flight groups (deltas included), and the retry ladder —
+``checkpoint.fleet`` builds bit-exact kill/resume on top.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -58,11 +84,19 @@ import numpy as np
 from repro.core.aggregate import (aggregate_apply,
                                   aggregate_apply_hierarchical, buffer_add,
                                   buffer_apply, cohort_reduce,
-                                  staleness_scale)
+                                  delta_validity, staleness_scale)
 from repro.core.fairness import accuracy_fairness, round_time_fairness
+from repro.fl.faults import STREAM_ASYNC, inject_deltas, resolve_fault_plan
 from repro.fl.selection import FleetState, Selection, _pad_selection
 
 DISPATCH, COMPLETE, AGGREGATE = "dispatch", "complete", "aggregate"
+DEADLINE, RETRY = "deadline", "retry"
+
+# with faults enabled but no explicit deadline, dropped clients must
+# still fail in bounded sim-time: default the budget to 4× the cohort's
+# median predicted time (generous on a healthy fleet, tight enough that
+# a straggle_factor=8 straggler always busts it)
+DEFAULT_DEADLINE_FACTOR = 4.0
 
 
 @dataclasses.dataclass
@@ -73,6 +107,8 @@ class InFlightCohort:
     device until every valid slot has been consumed by an aggregate —
     per-slot reduction at aggregate time is a masked ``cohort_reduce``
     over this block, so completion order never forces a device gather.
+    ``failed`` marks slots whose client missed the deadline (dropped or
+    straggling): they are settled without ever contributing.
     """
     version: int              # server version at dispatch (staleness base)
     dispatch_t: float
@@ -88,23 +124,49 @@ class InFlightCohort:
     consumed: np.ndarray      # (M,) bool — delta aggregated
     complete_t: np.ndarray    # (M,) arrival clock (aggregate-lag metric)
     full_parity: bool         # dispatched through the full-fleet path
+    failed: np.ndarray = None          # (M,) bool — missed its deadline
+    deadline_t: float = float("inf")   # this dispatch's time budget
+
+    def __post_init__(self):
+        if self.failed is None:
+            self.failed = np.zeros_like(self.completed)
 
     def pending_slots(self) -> np.ndarray:
         """Valid slots whose delta has arrived but not been applied."""
         return np.flatnonzero(self.completed & ~self.consumed
                               & (self.sel.valid > 0))
 
+    def expected_slots(self) -> int:
+        """Valid slots still in flight (not arrived, not failed)."""
+        return int(np.sum(~self.completed & ~self.failed
+                          & (self.sel.valid > 0)))
+
+    def all_settled(self) -> bool:
+        """Every valid slot either aggregated or failed — nothing left
+        to wait for."""
+        return bool(np.all((self.consumed | self.failed)
+                           [self.sel.valid > 0]))
+
+    # back-compat alias (pre-fault name)
     def all_consumed(self) -> bool:
-        return bool(np.all(self.consumed[self.sel.valid > 0]))
+        return self.all_settled()
 
 
 class FleetRuntime:
     """The buffered-async tick machine shared by CFLServer/FedAvgServer.
 
     ``buffer_size`` B: apply the server step whenever B deltas have
-    arrived (None = the dispatch cohort size, i.e. the sync barrier).
-    ``staleness_decay`` a: discount a delta dispatched s versions ago by
-    ``(1+s)^-a`` (0 disables; 0.5 is FedBuff's ``1/sqrt(1+s)``).
+    arrived (None = ``ceil(quorum_frac × cohort size)``; quorum_frac=1
+    is the sync barrier). ``staleness_decay`` a: discount a delta
+    dispatched s versions ago by ``(1+s)^-a`` (0 disables; 0.5 is
+    FedBuff's ``1/sqrt(1+s)``).
+
+    Fault-tolerance knobs come from the server's config: ``faults`` (a
+    ``fl.faults.FaultPlan``), ``deadline_factor`` (time budget as a
+    multiple of the cohort's median predicted time; defaults to 4 when
+    faults are on, else no deadline), ``max_retries`` / ``retry_backoff``
+    (exponential re-enqueue of failed clients), ``norm_clip_factor``
+    (the quarantine gate's robust norm threshold).
 
     Drive it with ``tick()`` (one event; returns the history record when
     the event was an aggregate, else None) or ``run_until_aggregate()``
@@ -123,9 +185,27 @@ class FleetRuntime:
         self.tracker = server.tracker
         self.buffer_size = buffer_size
         self.staleness_decay = float(staleness_decay)
+        fl = server.fl
+        self.faults = resolve_fault_plan(getattr(fl, "faults", None))
+        self.quorum_frac = float(getattr(fl, "quorum_frac", 1.0))
+        if not (0.0 < self.quorum_frac <= 1.0):
+            raise ValueError(f"quorum_frac must be in (0, 1], got "
+                             f"{self.quorum_frac}")
+        self.max_retries = int(getattr(fl, "max_retries", 2))
+        self.retry_backoff = float(getattr(fl, "retry_backoff", 0.5))
+        self.norm_clip_factor = float(getattr(fl, "norm_clip_factor", 6.0))
+        df = getattr(fl, "deadline_factor", None)
+        if df is None and self.faults is not None:
+            df = DEFAULT_DEADLINE_FACTOR
+        self.deadline_factor = None if df is None else float(df)
+        # the quarantine gate runs whenever faults are on (or explicitly
+        # requested); off by default so the fault-free numerics stay
+        # bit-identical to the pre-fault runtime
+        self._validate = self.faults is not None or \
+            bool(getattr(fl, "validate_deltas", False))
         self.clock = 0.0
         # in-flight cohorts keyed by a monotonically increasing group id —
-        # COMPLETE events carry the gid, so fully-consumed groups can be
+        # COMPLETE events carry the gid, so fully-settled groups can be
         # deleted while later groups still have events in flight without
         # invalidating any pending event's address
         self.groups: Dict[int, InFlightCohort] = {}
@@ -135,6 +215,10 @@ class FleetRuntime:
         self._agg_scheduled = False
         self._draining = False
         self._cohort_slots = None       # last dispatch's participant count
+        self._retry_attempts: Dict[int, int] = {}   # consecutive failures
+        self._in_backoff: Set[int] = set()
+        self._dropped_since_agg = 0     # failed engagements (deadline)
+        self._retried_since_agg = 0     # backoffs expired → re-selectable
         self._push(0.0, DISPATCH, ())
 
     # -- event plumbing ----------------------------------------------------
@@ -146,16 +230,21 @@ class FleetRuntime:
         return int(sum(len(g.pending_slots())
                        for g in self.groups.values()))
 
+    def _expected(self) -> int:
+        """Valid slots still in flight across every group."""
+        return int(sum(g.expected_slots() for g in self.groups.values()))
+
     def _effective_buffer(self) -> int:
         if self.buffer_size is not None:
             return max(1, int(self.buffer_size))
-        return max(1, int(self._cohort_slots or 1))
+        slots = int(self._cohort_slots or 1)
+        return max(1, int(np.ceil(self.quorum_frac * slots)))
 
     def tick(self) -> Optional[Dict]:
         """Process one event; returns the aggregate's history record when
         one fired. Deadlock guards: a drained queue with arrived deltas
-        flushes an aggregate (B never reached — e.g. B > cohort); a fully
-        idle fleet re-dispatches."""
+        flushes an aggregate (B never reached — e.g. B > cohort, or the
+        rest of the cohort failed); a fully idle fleet re-dispatches."""
         if not self._events:
             if self._buffered() > 0:
                 self._push(self.clock, AGGREGATE, ())
@@ -163,7 +252,7 @@ class FleetRuntime:
                 self._push(self.clock, DISPATCH, ())
             else:                        # pragma: no cover - defensive
                 raise RuntimeError("runtime stalled: pending deltas with "
-                                    "no scheduled events")
+                                   "no scheduled events")
         t, _, kind, payload = heapq.heappop(self._events)
         self.clock = max(self.clock, t)
         if kind == DISPATCH:
@@ -171,6 +260,12 @@ class FleetRuntime:
             return None
         if kind == COMPLETE:
             self._on_complete(t, *payload)
+            return None
+        if kind == DEADLINE:
+            self._on_deadline(t, *payload)
+            return None
+        if kind == RETRY:
+            self._on_retry(t, *payload)
             return None
         return self._on_aggregate(t)
 
@@ -187,12 +282,16 @@ class FleetRuntime:
         """Flush every in-flight cohort without dispatching new work:
         remaining ``complete`` events are processed and their deltas
         applied through buffered aggregates — each a real server step,
-        recorded in history like any other. Used by ``set_mode('sync')``
-        so a mode switch never drops an arrived update or leaves a
-        client flagged pending."""
+        recorded in history like any other. Clients stuck in
+        retry/backoff are dropped immediately (their failure was already
+        recorded as a miss when the engagement failed) — a drain never
+        waits on a backoff timer and never deadlocks. Used by
+        ``set_mode('sync')`` so a mode switch never drops an arrived
+        update or leaves a client flagged pending."""
         recs: List[Dict] = []
         self._draining = True
         try:
+            self._flush_backoff()
             for _ in range(max_ticks):
                 if not self.groups:
                     return recs
@@ -202,6 +301,15 @@ class FleetRuntime:
         finally:
             self._draining = False
         raise RuntimeError(f"drain incomplete after {max_ticks} ticks")
+
+    def _flush_backoff(self) -> None:
+        """Give up on every client waiting out a retry backoff: clear its
+        pending flag and retry ladder (the RETRY events left in the heap
+        become no-ops)."""
+        for cid in sorted(self._in_backoff):
+            self.tracker.clear_pending([cid])
+            self._retry_attempts.pop(cid, None)
+        self._in_backoff.clear()
 
     # -- dispatch ----------------------------------------------------------
     def _select_available(self, round_idx: int,
@@ -218,7 +326,9 @@ class FleetRuntime:
             np.asarray(full.predicted_times)[avail_ids]
         sub = FleetState([server.clients[int(i)] for i in avail_ids],
                          round_idx, full.last_accs[avail_ids],
-                         full.participation_counts[avail_ids], times)
+                         full.participation_counts[avail_ids], times,
+                         misses=None if full.misses is None
+                         else full.misses[avail_ids])
         sub_sel = tracker.policy.select(sub, tracker._round_rng(round_idx))
         local = sub_sel.participants
         weights = [float(w) for w, v in zip(sub_sel.weights, sub_sel.valid)
@@ -265,76 +375,186 @@ class FleetRuntime:
             batch_size=fl.batch_size, epochs=fl.local_epochs, seeds=seeds,
             eval_datasets=server.test_data, participation=participation)
         covs = res.masks.param_mask if fl.coverage_norm else None
+        deltas = res.deltas
 
         m = len(sel.idx)
         n_steps_valid = [int(n) for n in sel.take_valid(res.n_steps)]
         times_valid = server._simulated_times(
             specs_real, n_steps_valid, None if full_parity else participants)
         times = np.zeros((m,), np.float64)
-        times[np.flatnonzero(sel.valid > 0)] = times_valid
+        valid_slots = np.flatnonzero(sel.valid > 0)
+        times[valid_slots] = times_valid
+
+        # engagement-keyed fault draw: this gid, these slots, this once —
+        # a retried client rides a later gid and draws fresh
+        gid = self._next_gid
+        self._next_gid += 1
+        gf = None
+        if self.faults is not None and self.faults.any_rates():
+            sh = self.engine.cohort_sharding(m)
+            n_shards = int(sh.mesh.size) if sh is not None else 1
+            gf = self.faults.draw(STREAM_ASYNC, gid, m, n_shards)
+            if gf.corrupt.any():
+                codes, scales = gf.codes_scales(self.faults.outlier_scale)
+                deltas = inject_deltas(deltas, codes, scales)
+            straggle = gf.straggle & (sel.valid > 0)
+            times[straggle] *= self.faults.straggle_factor
+
+        deadline_t = float("inf")
+        if self.deadline_factor is not None and len(valid_slots):
+            # budget from the *clean* predicted times — a straggler gets
+            # no extra rope for straggling
+            base = float(np.median(np.asarray(times_valid)))
+            deadline_t = t + self.deadline_factor * max(base, 1e-9)
+
         group = InFlightCohort(
             version=r, dispatch_t=t, sel=sel, specs=specs_slots,
-            deltas=res.deltas, covs=covs, weights=weights,
+            deltas=deltas, covs=covs, weights=weights,
             accs=np.asarray(res.accs), n_steps=np.asarray(res.n_steps),
             times=times, completed=np.zeros((m,), bool),
             consumed=np.zeros((m,), bool),
             complete_t=np.zeros((m,), np.float64),
-            full_parity=full_parity)
-        gid = self._next_gid
-        self._next_gid += 1
+            full_parity=full_parity, failed=np.zeros((m,), bool),
+            deadline_t=deadline_t)
         self.groups[gid] = group
         self._cohort_slots = len(participants)
         self.tracker.mark_pending(participants)
-        for slot in np.flatnonzero(sel.valid > 0):
+        dropped = gf.drop if gf is not None else \
+            np.zeros((m,), bool)
+        for slot in valid_slots:
+            if dropped[slot]:
+                continue        # no delta will ever arrive: deadline fails it
             self._push(t + times[slot], COMPLETE, (gid, int(slot)))
+        if np.isfinite(deadline_t):
+            self._push(deadline_t, DEADLINE, (gid,))
 
     # -- complete ----------------------------------------------------------
     def _on_complete(self, t: float, gid: int, slot: int) -> None:
-        g = self.groups[gid]
+        g = self.groups.get(gid)
+        if g is None:
+            return              # group fully settled and freed already
+        if g.failed[slot]:
+            return              # late arrival past its deadline: discarded
         g.completed[slot] = True
         g.complete_t[slot] = t
-        self.tracker.record([int(g.sel.idx[slot])],
-                            [float(g.accs[slot])])
+        cid = int(g.sel.idx[slot])
+        self._retry_attempts.pop(cid, None)     # success resets the ladder
+        self.tracker.record([cid], [float(g.accs[slot])])
         if not self._agg_scheduled and \
                 self._buffered() >= self._effective_buffer():
             self._agg_scheduled = True
             self._push(t, AGGREGATE, ())
 
+    # -- deadline / retry --------------------------------------------------
+    def _on_deadline(self, t: float, gid: int) -> None:
+        g = self.groups.get(gid)
+        if g is None:
+            return
+        miss = np.flatnonzero((g.sel.valid > 0) & ~g.completed & ~g.failed)
+        if len(miss) == 0:
+            return
+        g.failed[miss] = True
+        for slot in miss:
+            self._fail_engagement(int(g.sel.idx[slot]), t)
+        self._dropped_since_agg += len(miss)
+        if g.all_settled() and len(g.pending_slots()) == 0:
+            del self.groups[gid]    # nothing arrived worth keeping
+        # the failures may have made the quorum unreachable: flush what
+        # arrived rather than waiting on a B that can no longer fill
+        if not self._agg_scheduled and self._buffered() > 0 and (
+                self._buffered() >= self._effective_buffer()
+                or self._expected() == 0):
+            self._agg_scheduled = True
+            self._push(t, AGGREGATE, ())
+
+    def _fail_engagement(self, cid: int, t: float) -> None:
+        """One client missed its deadline: credit the miss to the
+        fairness debt, then re-enqueue with exponential backoff — or
+        give up (clear pending) after ``max_retries`` consecutive
+        failures, or immediately when draining."""
+        self.tracker.record_miss([cid])
+        attempt = self._retry_attempts.get(cid, 0)
+        if self._draining or attempt >= self.max_retries:
+            self._retry_attempts.pop(cid, None)
+            self.tracker.clear_pending([cid])
+            return
+        self._retry_attempts[cid] = attempt + 1
+        self._in_backoff.add(cid)
+        self._push(t + self.retry_backoff * (2.0 ** attempt), RETRY,
+                   (cid,))
+
+    def _on_retry(self, t: float, cid: int) -> None:
+        if cid not in self._in_backoff:
+            return              # flushed by a drain: stale event
+        self._in_backoff.discard(cid)
+        self.tracker.clear_pending([cid])
+        self._retried_since_agg += 1
+
     # -- aggregate ---------------------------------------------------------
-    def _apply_buffered(self, contribs) -> None:
+    def _gate(self, g: InFlightCohort, mask: np.ndarray):
+        """Run the quarantine gate over one group's contributing slots:
+        returns the gated participation (jnp, ready for the fused
+        programs) and the quarantined slot indices."""
+        gatev, _ = delta_validity(g.deltas, jnp.asarray(mask),
+                                  jnp.float32(self.norm_clip_factor))
+        gv = np.asarray(gatev)
+        quarantined = np.flatnonzero((mask > 0) & (gv == 0))
+        return jnp.asarray(mask * gv.astype(np.float32)), quarantined
+
+    def _apply_buffered(self, contribs, quarantined) -> None:
         """The FedBuff step: per-group masked partial sums (scaled by each
-        group's staleness discount), tree-added, applied once."""
+        group's staleness discount), tree-added, applied once. With the
+        gate on, quarantined slots are zeroed out of each group's
+        participation (numerator *and* denominator); an all-quarantined
+        buffer reduces to (0, 0) and ``buffer_apply``'s eps floor turns
+        that into a no-op step."""
         server, fl = self.server, self.server.fl
         r = server.round_idx
         total = None
         for g, slots in contribs:
             mask = np.zeros((len(g.sel.idx),), np.float32)
             mask[slots] = 1.0
+            if self._validate:
+                part, quar = self._gate(g, mask)
+                quarantined.extend((g, int(s)) for s in quar)
+            else:
+                part = jnp.asarray(mask)
             scale = staleness_scale(r - g.version, self.staleness_decay)
             nd = cohort_reduce(g.deltas, g.covs, g.weights,
                                coverage_norm=fl.coverage_norm,
-                               participation=jnp.asarray(mask),
-                               scale=jnp.float32(scale))
+                               participation=part,
+                               scale=jnp.float32(scale),
+                               sanitize=self._validate)
             total = nd if total is None else buffer_add(total, nd)
         server.params = buffer_apply(server.params, *total,
                                      coverage_norm=fl.coverage_norm)
 
-    def _apply_exact(self, g: InFlightCohort) -> None:
+    def _apply_exact(self, g: InFlightCohort, quarantined) -> None:
         """Sync operating point (one fresh, fully-complete group): route
         through the same fused program as the sync path — bit-identical
-        to ``run_round`` in sync mode."""
+        to ``run_round`` in sync mode. With the gate on, participation
+        carries the gate's verdict (identical numerics when nothing is
+        quarantined: a 1.0 participation multiply and an all-true
+        ``where`` are exact)."""
         server, fl = self.server, self.server.fl
-        part = None if g.full_parity else \
-            jnp.asarray(np.asarray(g.sel.valid, np.float32))
+        if self._validate:
+            part, quar = self._gate(
+                g, np.asarray(g.sel.valid, np.float32))
+            quarantined.extend((g, int(s)) for s in quar)
+        else:
+            part = None if g.full_parity else \
+                jnp.asarray(np.asarray(g.sel.valid, np.float32))
         sh = self.engine.cohort_sharding(len(g.sel.idx))
         if sh is not None:
             server.params = aggregate_apply_hierarchical(
                 server.params, g.deltas, g.covs, g.weights, mesh=sh.mesh,
-                coverage_norm=fl.coverage_norm, participation=part)
+                coverage_norm=fl.coverage_norm, participation=part,
+                sanitize=self._validate)
         else:
             server.params = aggregate_apply(
                 server.params, g.deltas, g.covs, g.weights,
-                coverage_norm=fl.coverage_norm, participation=part)
+                coverage_norm=fl.coverage_norm, participation=part,
+                sanitize=self._validate)
 
     def _on_aggregate(self, t: float) -> Optional[Dict]:
         self._agg_scheduled = False
@@ -344,18 +564,25 @@ class FleetRuntime:
         if not contribs:
             return None
         r = server.round_idx
+        quarantined: List[tuple] = []   # (group, slot) pairs
         exact = (len(contribs) == 1
                  and r == contribs[0][0].version
                  and contribs[0][0].completed[
                      contribs[0][0].sel.valid > 0].all()
                  and not contribs[0][0].consumed.any())
         if exact:
-            self._apply_exact(contribs[0][0])
+            self._apply_exact(contribs[0][0], quarantined)
         else:
-            self._apply_buffered(contribs)
+            self._apply_buffered(contribs, quarantined)
+
+        # quarantined slots were *consumed with zero weight*: credit the
+        # miss (their update never made it into the model)
+        for g, s in quarantined:
+            self.tracker.record_miss([int(g.sel.idx[s])])
 
         # host bookkeeping: consume slots, free finished groups
         participants, accs, times, specs, lags, stale = [], [], [], [], [], []
+        waited = []
         for g, slots in contribs:
             g.consumed[slots] = True
             ids = [int(g.sel.idx[s]) for s in slots]
@@ -365,9 +592,10 @@ class FleetRuntime:
             specs.extend(g.specs[s] for s in slots)
             lags.extend(t - float(g.complete_t[s]) for s in slots)
             stale.extend([r - g.version] * len(slots))
+            waited.append(t - g.dispatch_t)
             self.tracker.clear_pending(ids)
         self.groups = {gid: g for gid, g in self.groups.items()
-                       if not g.all_consumed()}
+                       if not g.all_settled()}
 
         server.round_idx += 1
         self.tracker.bump_staleness()
@@ -383,8 +611,104 @@ class FleetRuntime:
             "sim_clock": float(t),
             "buffered": len(participants),
             "mode": "async",
+            "dropped": self._dropped_since_agg,
+            "retried": self._retried_since_agg,
+            "quarantined": len(quarantined),
+            "quorum_waited_ms": float(np.mean(waited)) * 1e3,
         }
+        self._dropped_since_agg = 0
+        self._retried_since_agg = 0
         rec.update(server.post_aggregate(specs, participants, accs))
         server.history.append(rec)
         self._push(t, DISPATCH, ())
         return rec
+
+    # -- checkpoint surface (checkpoint.fleet) -----------------------------
+    def state_snapshot(self) -> Dict:
+        """Everything needed to rebuild this machine bit-exactly in a
+        fresh process: the clock, the event heap, every in-flight
+        group's resident state (deltas pulled to host numpy), and the
+        retry ladder. Pure host data — picklable through
+        ``checkpoint.io.save_state``."""
+        import jax
+
+        def host(tree):
+            return jax.tree.map(np.asarray, tree)
+
+        groups = {}
+        for gid, g in self.groups.items():
+            groups[int(gid)] = {
+                "version": int(g.version),
+                "dispatch_t": float(g.dispatch_t),
+                "sel": (np.asarray(g.sel.idx), np.asarray(g.sel.valid),
+                        np.asarray(g.sel.weights)),
+                "specs": list(g.specs),
+                "deltas": host(g.deltas),
+                "covs": None if g.covs is None else host(g.covs),
+                "weights": np.asarray(g.weights),
+                "accs": np.asarray(g.accs),
+                "n_steps": np.asarray(g.n_steps),
+                "times": np.asarray(g.times),
+                "completed": np.asarray(g.completed),
+                "consumed": np.asarray(g.consumed),
+                "complete_t": np.asarray(g.complete_t),
+                "full_parity": bool(g.full_parity),
+                "failed": np.asarray(g.failed),
+                "deadline_t": float(g.deadline_t),
+            }
+        return {
+            "groups": groups,
+            "clock": float(self.clock),
+            "next_gid": int(self._next_gid),
+            "seq": int(self._seq),
+            "agg_scheduled": bool(self._agg_scheduled),
+            "cohort_slots": self._cohort_slots,
+            "events": [(float(t), int(s), k, tuple(p))
+                       for t, s, k, p in self._events],
+            "retry_attempts": dict(self._retry_attempts),
+            "in_backoff": sorted(self._in_backoff),
+            "dropped_since_agg": int(self._dropped_since_agg),
+            "retried_since_agg": int(self._retried_since_agg),
+        }
+
+    def load_state(self, snap: Dict) -> None:
+        """Inverse of :meth:`state_snapshot` (device residency restored
+        lazily by the first compiled program that touches each tree)."""
+        import jax
+
+        def dev(tree):
+            return jax.tree.map(jnp.asarray, tree)
+
+        self.clock = float(snap["clock"])
+        self._next_gid = int(snap["next_gid"])
+        self._seq = int(snap["seq"])
+        self._agg_scheduled = bool(snap["agg_scheduled"])
+        self._cohort_slots = snap["cohort_slots"]
+        self._events = [(float(t), int(s), k, tuple(p))
+                        for t, s, k, p in snap["events"]]
+        heapq.heapify(self._events)
+        self._retry_attempts = {int(k): int(v)
+                                for k, v in snap["retry_attempts"].items()}
+        self._in_backoff = set(int(c) for c in snap["in_backoff"])
+        self._dropped_since_agg = int(snap["dropped_since_agg"])
+        self._retried_since_agg = int(snap["retried_since_agg"])
+        self.groups = {}
+        for gid, gs in snap.get("groups", {}).items():
+            idx, valid, weights = gs["sel"]
+            self.groups[int(gid)] = InFlightCohort(
+                version=int(gs["version"]),
+                dispatch_t=float(gs["dispatch_t"]),
+                sel=Selection(idx, valid, weights),
+                specs=list(gs["specs"]),
+                deltas=dev(gs["deltas"]),
+                covs=None if gs["covs"] is None else dev(gs["covs"]),
+                weights=jnp.asarray(gs["weights"]),
+                accs=np.asarray(gs["accs"]),
+                n_steps=np.asarray(gs["n_steps"]),
+                times=np.asarray(gs["times"]),
+                completed=np.asarray(gs["completed"]),
+                consumed=np.asarray(gs["consumed"]),
+                complete_t=np.asarray(gs["complete_t"]),
+                full_parity=bool(gs["full_parity"]),
+                failed=np.asarray(gs["failed"]),
+                deadline_t=float(gs["deadline_t"]))

@@ -82,15 +82,27 @@ class FleetArrays:
     predicted_times: jnp.ndarray      # (K,) float32, NaN = not predicted
     staleness: jnp.ndarray            # (K,) int32
     pending: jnp.ndarray              # (K,) float32 0/1
+    # rounds a client was dispatched for but failed to contribute (drop /
+    # deadline miss / quarantine) — integrates into the fairness policy's
+    # participation debt so failure handling can't silently starve the
+    # flaky edge of representation. None = no failures recorded yet
+    # (back-compat with positional construction of the 7 base columns).
+    miss_counts: Optional[jnp.ndarray] = None   # (K,) int32
 
     def tree_flatten(self):
         return ((self.n_samples, self.quality, self.last_accs,
                  self.participation_counts, self.predicted_times,
-                 self.staleness, self.pending), None)
+                 self.staleness, self.pending, self.miss_counts), None)
 
     @classmethod
     def tree_unflatten(cls, _, leaves):
         return cls(*leaves)
+
+    def misses(self) -> jnp.ndarray:
+        """(K,) float32 failure-miss counts (0 when never recorded)."""
+        if self.miss_counts is None:
+            return jnp.zeros_like(self.n_samples)
+        return self.miss_counts.astype(jnp.float32)
 
     @property
     def n_clients(self) -> int:
@@ -107,7 +119,8 @@ class FleetArrays:
             participation_counts=jnp.zeros((k,), jnp.int32),
             predicted_times=jnp.full((k,), jnp.nan, jnp.float32),
             staleness=jnp.zeros((k,), jnp.int32),
-            pending=jnp.zeros((k,), jnp.float32))
+            pending=jnp.zeros((k,), jnp.float32),
+            miss_counts=jnp.zeros((k,), jnp.int32))
 
     def lossiness(self) -> jnp.ndarray:
         """1 − last_acc with never-seen clients pinned to 1.0 (max) — the
@@ -141,6 +154,7 @@ class FleetState:
     pending: Optional[np.ndarray] = None           # (K,) 0/1
     n_samples_arr: Optional[np.ndarray] = None     # (K,) — clients=None
     qualities_arr: Optional[np.ndarray] = None     # (K,) — clients=None
+    misses: Optional[np.ndarray] = None            # (K,) failure misses
 
     @property
     def n_clients(self) -> int:
@@ -340,10 +354,13 @@ class FairnessSelection(SelectionPolicy):
     group reweighting.
 
     Sampling score: ``lossiness_k + debt_gamma * debt_k`` where
-    ``debt_k = round_idx * m/K − participation_counts[k]`` (clients owed
-    rounds score higher; never-seen clients are maximally lossy, so the
-    policy explores the fleet before exploiting). m clients are drawn
-    without replacement proportional to score.
+    ``debt_k = max(round_idx * m/K − participation_counts[k], 0) +
+    miss_counts[k]`` (clients owed rounds score higher; never-seen
+    clients are maximally lossy, so the policy explores the fleet before
+    exploiting; every *failed* engagement — drop, deadline miss,
+    quarantine — credits a full round of debt, the GIFAIR-style antidote
+    to the participation bias of silently dropping flaky clients). m
+    clients are drawn without replacement proportional to score.
 
     Aggregation weights: clients are grouped by data-quality level (the
     paper's quality heterogeneity axis); each group's weight multiplier is
@@ -367,6 +384,8 @@ class FairnessSelection(SelectionPolicy):
         loss = state.lossiness()
         expected = state.round_idx * m / k
         debt = np.maximum(expected - state.participation_counts, 0.0)
+        if state.misses is not None:
+            debt = debt + np.asarray(state.misses, np.float64)
         score = np.maximum(loss + self.debt_gamma * debt, 1e-6)
         probs = score / score.sum()
         chosen = rng.choice(k, size=m, replace=False, p=probs)
@@ -395,6 +414,7 @@ class FairnessSelection(SelectionPolicy):
         expected = round_idx * (m / k)
         debt = jnp.maximum(
             expected - arrays.participation_counts.astype(jnp.float32), 0.0)
+        debt = debt + arrays.misses()
         return jnp.maximum(loss + self.debt_gamma * debt, 1e-6)
 
     def _array_weights(self, arrays: FleetArrays, idx, w):
@@ -604,7 +624,9 @@ class FleetTracker:
                           self.participation_counts,
                           self.predicted_times(),
                           staleness=np.asarray(self.arrays.staleness),
-                          pending=np.asarray(self.arrays.pending))
+                          pending=np.asarray(self.arrays.pending),
+                          misses=None if self.arrays.miss_counts is None
+                          else np.asarray(self.arrays.miss_counts))
 
     def _round_rng(self, round_idx: int) -> np.random.RandomState:
         if self.rng_mode == "legacy":
@@ -652,6 +674,26 @@ class FleetTracker:
             participation_counts=a.participation_counts.at[ids].add(1),
             last_accs=a.last_accs.at[ids].set(
                 jnp.asarray(np.asarray(accs, np.float32))))
+
+    def record_miss(self, participants: Sequence[int]):
+        """Credit a failed engagement (drop / deadline miss / quarantine)
+        to each client's participation debt: the fairness policy scores
+        a missed round exactly like an owed one, so failure handling
+        never silently starves flaky clients of representation."""
+        if not len(participants):
+            return
+        ids = jnp.asarray(np.asarray(participants, np.int32))
+        a = self.arrays
+        miss = a.miss_counts if a.miss_counts is not None else \
+            jnp.zeros_like(a.participation_counts)
+        self.arrays = dataclasses.replace(
+            a, miss_counts=miss.at[ids].add(1))
+
+    def miss_counts(self) -> np.ndarray:
+        """(K,) failure-miss counts (numpy view; zeros if none yet)."""
+        if self.arrays.miss_counts is None:
+            return np.zeros((len(self.clients),), np.int64)
+        return np.asarray(self.arrays.miss_counts)
 
     # -- async-runtime bookkeeping (array programs over FleetArrays) ---
     def mark_pending(self, participants: Sequence[int]):

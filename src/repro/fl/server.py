@@ -77,6 +77,35 @@ class CFLConfig:
     # collision-free across nearby seeds) | 'legacy' (the pre-runtime
     # modular mixing, kept so recorded benches stay reproducible)
     selection_rng: str = "seedseq"
+    # deterministic fault injection (fl.faults): None disables; a
+    # FaultPlan / dict / "drop=0.2,corrupt=0.05" shorthand enables the
+    # chaos harness in both modes (resolve_fault_plan coerces)
+    faults: object = None
+    # async quorum: the server step fires when ceil(quorum_frac × cohort)
+    # deltas have arrived (async_buffer, when set, overrides); 1.0 is the
+    # sync barrier. Sync mode sheds stragglers via deadline_factor
+    # instead (a barrier round has no partial-wait semantics).
+    quorum_frac: float = 1.0
+    # per-dispatch time budget as a multiple of the cohort's median
+    # predicted round time; slots not arrived by then are failed
+    # (miss + retry). None = no deadline, except when faults are on
+    # (defaults to 4× so dropped clients fail in bounded sim-time)
+    deadline_factor: Optional[float] = None
+    # failed clients re-enqueue with exponential backoff
+    # (retry_backoff × 2^attempt sim-seconds), up to max_retries
+    # consecutive failures, then they give up until re-selected
+    max_retries: int = 2
+    retry_backoff: float = 0.5
+    # quarantine gate: reject deltas with non-finite entries or norm >
+    # norm_clip_factor × the cohort's median finite norm (<= 0 keeps the
+    # finite check only). Active when faults are on or
+    # validate_deltas=True.
+    norm_clip_factor: float = 6.0
+    validate_deltas: bool = False
+    # round-granular checkpointing (checkpoint.fleet): save a resumable
+    # snapshot every N applied server steps into checkpoint_dir
+    checkpoint_every: Optional[int] = None
+    checkpoint_dir: str = "checkpoints/fleet"
     seed: int = 0
 
 
@@ -231,24 +260,34 @@ class CFLServer:
         participants = [int(i) for i in sel.participants]
         specs = self.sample_submodels(
             None if self.tracker.is_full else participants)
-        if self.fl.batched_rounds:
-            accs, times = self._train_round_batched(specs, sel)
+        stats = None
+        if getattr(self.fl, "faults", None) is not None:
+            from repro.fl.faults import faulty_sync_round
+            accs, times, participants, specs_kept, stats = \
+                faulty_sync_round(self, specs, sel)
+            extras = self.post_aggregate(specs_kept, participants, accs) \
+                if participants else {}
         else:
-            accs, times = self._train_round_sequential(specs, sel)
-
-        extras = self.post_aggregate(specs, participants, accs)
-        self.tracker.record(participants, accs)
+            if self.fl.batched_rounds:
+                accs, times = self._train_round_batched(specs, sel)
+            else:
+                accs, times = self._train_round_sequential(specs, sel)
+            extras = self.post_aggregate(specs, participants, accs)
+            self.tracker.record(participants, accs)
 
         rec = {
             "round": self.round_idx,
             "participants": participants,
             "selection": self.tracker.policy.name,
             "accs": accs,
-            "fairness": accuracy_fairness(accs),
-            "timing": round_time_fairness(times),
+            "fairness": accuracy_fairness(accs if accs
+                                          else [float("nan")]),
+            "timing": round_time_fairness(times if times else [0.0]),
         }
         rec.update(extras)
         rec.update(self._sync_clock_columns(times))
+        if stats is not None:
+            rec.update(stats)
         self.history.append(rec)
         self.round_idx += 1
         return rec
@@ -257,7 +296,9 @@ class CFLServer:
         """Sync rows carry the same scheduling columns as async ones:
         staleness is 0 by construction, aggregate_lag is the barrier wait
         (how long each delta sat before the straggler arrived), and
-        sim_clock accumulates the barrier round times."""
+        sim_clock accumulates the barrier round times. Failure stats are
+        the honest zeros for a fault-free barrier round (the fault path
+        overrides them)."""
         barrier = max(times) if times else 0.0
         self._sim_clock += barrier
         return {"staleness": 0.0,
@@ -265,7 +306,9 @@ class CFLServer:
                                                 for t in times]))
                 if times else 0.0,
                 "sim_clock": self._sim_clock,
-                "mode": "sync"}
+                "mode": "sync",
+                "dropped": 0, "retried": 0, "quarantined": 0,
+                "quorum_waited_ms": barrier * 1e3}
 
     # ------------------------------------------------------------------
     def _train_round_batched(self, specs, sel: Optional[Selection] = None):

@@ -168,7 +168,11 @@ class CFLSession:
                 _reject_il_selection(selection)
             else:
                 self.server.set_selection(selection)
+        every = getattr(self.fl, "checkpoint_every", None)
         if self.algorithm == "il":
+            if every:
+                raise ValueError("IL is single-shot — there is no round "
+                                 "boundary to checkpoint at")
             if self._il_history:
                 # IL trains each client from the initial parent for the
                 # whole budget in one shot — a second run() would silently
@@ -188,7 +192,41 @@ class CFLSession:
             return self.history
         for _ in range(rounds):
             self.server.run_round()
+            if every and self.server.round_idx % every == 0:
+                self.save_checkpoint(self._checkpoint_path())
         return self.history
+
+    # -- fault tolerance: round-granular checkpoint/resume -------------
+    def _checkpoint_path(self) -> str:
+        import os
+        return os.path.join(
+            getattr(self.fl, "checkpoint_dir", "checkpoints/fleet"),
+            f"round_{self.server.round_idx:06d}.ckpt")
+
+    def save_checkpoint(self, path: Optional[str] = None) -> str:
+        """Snapshot the full fleet state (server params, round counter,
+        history, tracker arrays, predictor, and — in async mode — the
+        runtime's event heap, in-flight cohorts and retry ladder) so a
+        killed process can resume bit-exactly. Returns the path written
+        (default: ``fl.checkpoint_dir/round_NNNNNN.ckpt``)."""
+        if self.server is None:
+            raise RuntimeError("IL keeps no resumable fleet state")
+        from repro.checkpoint.fleet import save_fleet_checkpoint
+        path = path if path is not None else self._checkpoint_path()
+        save_fleet_checkpoint(path, self.server,
+                              metadata={"algorithm": self.algorithm})
+        return path
+
+    def restore_checkpoint(self, path: str) -> Dict:
+        """Load a checkpoint written by :meth:`save_checkpoint` into this
+        (freshly built, same-config) session and continue from its round.
+        Returns the restore info dict — ``resharded=True`` flags the
+        degraded reshard+rewind path (in-flight work dropped, bit-exact
+        replay not guaranteed)."""
+        if self.server is None:
+            raise RuntimeError("IL keeps no resumable fleet state")
+        from repro.checkpoint.fleet import restore_fleet_checkpoint
+        return restore_fleet_checkpoint(path, self.server)
 
     # ------------------------------------------------------------------
     @property
