@@ -41,11 +41,18 @@ discounting) against the sync barrier on the same straggler-skewed
 fleet, recording simulated rounds/sec, aggregate-lag and fleet fairness
 per buffer size — written to ``BENCH_round_engine_async.json``.
 
+``--overlap`` runs the double-buffered-round leg (``CFLConfig.overlap``,
+the fl/engine.py prefetch ring): eager vs overlapped host wall-clock
+steps/sec on the skewed fleet, asserting bit-exact params, a non-zero
+prefetch hit rate, zero added programs and no throughput regression —
+written to ``BENCH_round_engine_overlap.json``.
+
   PYTHONPATH=src python -m benchmarks.round_engine            # full sweep
   PYTHONPATH=src python -m benchmarks.round_engine --single cnn seq 32
   PYTHONPATH=src python -m benchmarks.round_engine --single cnn kernels 8
   PYTHONPATH=src python -m benchmarks.round_engine --selection
   PYTHONPATH=src python -m benchmarks.round_engine --async
+  PYTHONPATH=src python -m benchmarks.round_engine --overlap
 """
 from __future__ import annotations
 
@@ -416,6 +423,93 @@ def run_async(seed: int = 0, n_workers: int = 8,
     return rows
 
 
+# ---------------------------------------------------------------------------
+# double-buffered round leg: overlapped host pipeline vs eager packing
+# ---------------------------------------------------------------------------
+OVERLAP_ROUNDS = 6
+
+
+def run_overlap(seed: int = 0, n_workers: int = 8,
+                rounds: int = OVERLAP_ROUNDS, reps: int = 3) -> List[Row]:
+    """Eager vs double-buffered (``overlap=True``) host wall-clock on the
+    same straggler-skewed CNN fleet, uniform half-fleet cohorts (the
+    stateless policy the prefetch ring can always speculate on). Both
+    legs run one compile-warmup round, then ``reps`` timed blocks of
+    ``rounds`` rounds each; steps/sec comes from the best block (min
+    wall), which is the standard way to read a host-pipelining change
+    through scheduler noise. Acceptance: overlapped >= eager steps/sec
+    (the ring can only hide the pack/H2D gap, never add device work —
+    asserted together with bit-exact params and the zero-added-programs
+    invariant, so the perf row can't silently buy throughput with
+    drift)."""
+    import jax
+
+    from repro.fl import CFLConfig, CFLSession
+
+    def _leg(overlap):
+        fl = CFLConfig(n_workers=n_workers, local_epochs=1, batch_size=32,
+                       seed=seed, selection="uniform", overlap=overlap)
+        sess = CFLSession.from_synthetic(
+            ENGINE_CNN, kind="synthmnist", n_workers=n_workers,
+            n_samples=n_workers * 60, heterogeneity="both", seed=seed,
+            fl_cfg=fl)
+        sess.run(1)                       # compile + first-touch warmup
+        walls = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            sess.run(rounds)
+            jax.block_until_ready(sess.server.params)
+            walls.append(time.perf_counter() - t0)
+        return sess, walls
+
+    rows: List[Row] = []
+    eager_sess, eager_walls = _leg(False)
+    over_sess, over_walls = _leg(True)
+    err = max(float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+              for x, y in zip(jax.tree.leaves(eager_sess.server.params),
+                              jax.tree.leaves(over_sess.server.params)))
+    stats = over_sess.server.engine.prefetch_stats()
+    n_prog_eager = eager_sess.server.engine._train_eval._cache_size()
+    n_prog_over = over_sess.server.engine._train_eval._cache_size()
+    for tag, sess, walls in (("eager", eager_sess, eager_walls),
+                             ("overlap", over_sess, over_walls)):
+        best = min(walls)
+        sps = rounds / best
+        rows.append(json_row(
+            f"round_engine_overlap_{tag}_{n_workers}c",
+            best / rounds * 1e6,
+            family="cnn", mode="batched", n_workers=n_workers,
+            selection="uniform", overlap=float(tag == "overlap"),
+            steps_per_sec=sps, reps=float(reps),
+            rounds_per_rep=float(rounds),
+            n_programs=float(sess.server.engine._train_eval._cache_size()),
+            prefetch_staged=float(stats["staged"]),
+            prefetch_hits=float(stats["hits"]),
+            prefetch_misses=float(stats["misses"]),
+            param_err_vs_eager=err))
+        print(f"  {tag:>8}: best {best / rounds:.3f}s/round "
+              f"({sps:.3f} steps/s) over {reps}x{rounds} rounds")
+    by = parse_json_rows(rows)
+    eager_sps = by[f"round_engine_overlap_eager_{n_workers}c"][
+        "steps_per_sec"]
+    over_sps = by[f"round_engine_overlap_overlap_{n_workers}c"][
+        "steps_per_sec"]
+    rows.append(json_row(
+        f"round_engine_overlap_speedup_{n_workers}c", 0.0,
+        family="cnn", n_workers=n_workers, selection="uniform",
+        x=over_sps / eager_sps))
+    print(f"  overlap speedup: {over_sps / eager_sps:.3f}x  "
+          f"(hits {stats['hits']}/{stats['staged']} staged, "
+          f"param err {err})")
+    # acceptance: same numerics, same programs, no throughput regression
+    assert err == 0.0, f"overlap changed numerics: {err}"
+    assert stats["hits"] > 0, f"ring never hit: {stats}"
+    assert n_prog_over == n_prog_eager, (n_prog_over, n_prog_eager)
+    assert over_sps >= eager_sps, \
+        f"overlapped slower than eager: {over_sps:.3f} < {eager_sps:.3f}"
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--single", nargs=3, metavar=("FAMILY", "MODE", "N"))
@@ -426,7 +520,23 @@ def main():
                     help="event-driven runtime leg: buffered-async buffer "
                          "sweep vs the sync barrier (simulated rounds/sec"
                          ", aggregate-lag, fleet fairness)")
+    ap.add_argument("--overlap", dest="overlap_leg", action="store_true",
+                    help="double-buffered round leg: overlapped host "
+                         "pipeline vs eager packing (host steps/sec, "
+                         "prefetch hit rate, bit-exactness)")
     args = ap.parse_args()
+    if args.overlap_leg:
+        from benchmarks.common import emit
+        rows = run_overlap()
+        emit(rows)
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        out_path = os.path.join(root, "BENCH_round_engine_overlap.json")
+        with open(out_path, "w") as f:
+            json.dump([dict(json.loads(derived), name=name, us=us)
+                       for name, us, derived in rows], f, indent=1)
+            f.write("\n")
+        print(f"wrote {out_path}")
+        return
     if args.async_leg:
         from benchmarks.common import emit
         rows = run_async()

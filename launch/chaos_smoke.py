@@ -13,6 +13,7 @@ uninterrupted reference run. Sync must match bit-for-bit; async too
   PYTHONPATH=src python launch/chaos_smoke.py                # sync
   PYTHONPATH=src python launch/chaos_smoke.py --mode async
   PYTHONPATH=src python launch/chaos_smoke.py --rounds 6 --kill-at 3
+  PYTHONPATH=src python launch/chaos_smoke.py --overlap      # prefetch on
 
 Used by the ``faults`` CI job as the kill-resume gate; exits non-zero
 on any parity violation.
@@ -38,6 +39,7 @@ def build_session(args, ckpt_dir=None):
                        groupnorm_groups=4, elastic_widths=(0.5, 1.0))
     fl = CFLConfig(n_workers=4, local_epochs=1, batch_size=32, lr=0.05,
                    seed=3, mode=args.mode, faults=args.faults,
+                   overlap=args.overlap,
                    async_buffer=2 if args.mode == "async" else None,
                    checkpoint_every=1 if ckpt_dir else None,
                    checkpoint_dir=ckpt_dir or "checkpoints/fleet")
@@ -60,6 +62,9 @@ def main():
     ap.add_argument("--rounds", type=int, default=4)
     ap.add_argument("--kill-at", type=int, default=2, dest="kill_at")
     ap.add_argument("--faults", default=FAULTS)
+    ap.add_argument("--overlap", action="store_true",
+                    help="run with the double-buffered prefetch ring on "
+                         "(the checkpoint then carries a staged cohort)")
     ap.add_argument("--ckpt-dir", default="/tmp/chaos_smoke_ckpt",
                     dest="ckpt_dir")
     args = ap.parse_args()

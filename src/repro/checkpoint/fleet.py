@@ -97,6 +97,12 @@ def snapshot_server(server) -> Dict:
         "predictor": _predictor_snapshot(getattr(server, "predictor",
                                                  None)),
         "runtime": None if runtime is None else runtime.state_snapshot(),
+        # the prefetch ring stores derivation metadata only (round,
+        # seeds, selection triple) — the staged tensors are a pure
+        # function of the resident packs, so restore re-stages them
+        # bit-exactly instead of pickling device buffers
+        "prefetch": (None if getattr(server, "engine", None) is None
+                     else server.engine.prefetch_snapshot()),
         # identity + topology fingerprints: architecture mismatch is an
         # error, shard/device mismatch is the reshard-degraded path
         "family": config_fingerprint(server.cfg),
@@ -174,6 +180,18 @@ def restore_server(server, snap: Dict) -> Dict:
         rt.clock = float(rt_snap["clock"])
         rt._events = []
         rt._push(rt.clock, "dispatch", ())
+    engine = getattr(server, "engine", None)
+    if engine is not None:
+        if resharded:
+            # staged streams were packed for another mesh's padding —
+            # drop them; the eager path re-packs on the next round
+            engine.flush_prefetch("restore-resharded")
+            engine.enable_prefetch(
+                int((snap.get("prefetch") or {}).get("depth", 0)))
+        else:
+            engine.prefetch_restore(snap.get("prefetch") or {},
+                                    server.client_data,
+                                    getattr(server, "test_data", None))
     return {"round_idx": server.round_idx, "resharded": resharded,
             "dropped_in_flight": sorted(set(dropped))}
 

@@ -57,9 +57,16 @@ class FedAvgServer:
                 self.family, lr=fl_cfg.lr, momentum=fl_cfg.momentum)
         # back-compat alias (None when running the sequential loop)
         self.engine = self._runner if fl_cfg.batched_rounds else None
+        if self.engine is not None:
+            self.tracker.add_invalidate_hook(
+                lambda: self.engine.flush_prefetch("fleet-invalidate"))
+            if getattr(fl_cfg, "overlap", False):
+                self.engine.enable_prefetch(
+                    getattr(fl_cfg, "prefetch_depth", 1))
 
     def set_selection(self, selection) -> None:
-        """Swap the client-selection policy for the rounds that follow."""
+        """Swap the client-selection policy for the rounds that follow
+        (flushes any cohort prefetched under the old policy)."""
         self.tracker.set_policy(selection)
 
     def set_mode(self, mode: str) -> None:
@@ -67,13 +74,29 @@ class FedAvgServer:
         rounds over fl.runtime.FleetRuntime) for the rounds that follow.
         Switching to sync with deltas still in flight drains the runtime
         first (each flush aggregate is a server step, recorded in
-        ``history``), so no arrived update is dropped."""
+        ``history``), so no arrived update is dropped. Staged prefetch
+        state is flushed: the modes predict different next cohorts."""
         if mode not in ("sync", "async"):
             raise ValueError(f"mode must be 'sync' or 'async', "
                              f"got {mode!r}")
         if mode == "sync" and self._runtime is not None:
             self._runtime.drain()
+        if self.engine is not None:
+            self.engine.flush_prefetch("set_mode")
         self.fl.mode = mode
+
+    def set_overlap(self, overlap: bool) -> None:
+        """Toggle the double-buffered host pipeline (engine prefetch
+        ring) for the rounds that follow — same contract as
+        ``CFLServer.set_overlap``."""
+        if self.engine is None:
+            if overlap:
+                raise ValueError("overlap requires the batched engine "
+                                 "(batched_rounds=True)")
+            return
+        self.fl.overlap = bool(overlap)
+        self.engine.enable_prefetch(
+            getattr(self.fl, "prefetch_depth", 1) if overlap else 0)
 
     @property
     def runtime(self):
@@ -93,8 +116,34 @@ class FedAvgServer:
             batch_size=self.fl.batch_size, epochs=self.fl.local_epochs)
 
     # -- runtime hooks -----------------------------------------------------
-    def _client_seed(self, k: int) -> int:
-        return self.fl.seed * 7 + self.round_idx * 131 + k
+    def _client_seed(self, k: int, round_idx=None) -> int:
+        r = self.round_idx if round_idx is None else int(round_idx)
+        return self.fl.seed * 7 + r * 131 + k
+
+    def _stage_next_round(self, round_idx=None) -> None:
+        """Prefetch hook: stage round r+1's cohort while round r's fused
+        program runs on device — same contract and safety argument as
+        ``CFLServer._stage_next_round`` (state-independent policies
+        only; value-validated at consume time)."""
+        engine = self.engine
+        if engine is None or not engine.prefetch_enabled:
+            return
+        if getattr(self.tracker.policy, "state_dependent", True):
+            return
+        r = (self.round_idx + 1) if round_idx is None else int(round_idx)
+        sel = self.tracker.select(r)
+        faulty = getattr(self.fl, "faults", None) is not None
+        if not faulty and self.tracker.is_full:
+            seeds = [self._client_seed(k, r)
+                     for k in range(len(self.clients))]
+            participation = None
+        else:
+            seeds = [self._client_seed(int(i), r) for i in sel.idx]
+            participation = sel
+        engine.stage_cohort(
+            r, self.client_data, batch_size=self.fl.batch_size,
+            epochs=self.fl.local_epochs, seeds=seeds,
+            eval_datasets=self.test_data, participation=participation)
 
     def cohort_specs(self, participants=None) -> List:
         n = len(self.clients) if participants is None else len(participants)
@@ -131,7 +180,8 @@ class FedAvgServer:
             self.params, accs, n_steps_all = self._runner.run_fl_round(
                 self.params, [spec] * len(self.clients), self.client_data,
                 self.test_data, sizes, batch_size=self.fl.batch_size,
-                epochs=self.fl.local_epochs, seeds=seeds)
+                epochs=self.fl.local_epochs, seeds=seeds,
+                prefetch_hook=self._stage_next_round)
         elif self.fl.batched_rounds:
             m = len(sel.idx)
             seeds = [self.fl.seed * 7 + self.round_idx * 131 + int(i)
@@ -140,7 +190,7 @@ class FedAvgServer:
                 self.params, [spec] * m, self.client_data, self.test_data,
                 None, batch_size=self.fl.batch_size,
                 epochs=self.fl.local_epochs, seeds=seeds,
-                participation=sel)
+                participation=sel, prefetch_hook=self._stage_next_round)
             accs = sel.take_valid(accs_pad)
             n_steps_all = [int(n) for n in sel.take_valid(n_steps_pad)]
         else:

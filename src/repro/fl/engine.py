@@ -37,6 +37,20 @@ axis is committed to a 1-D ``cohort`` mesh (``sharding.cohort``) before
 dispatch; jit propagates the layout so the whole round — local train, local
 eval, and the fused aggregate+apply reduction — scales across devices with
 one collective per round.
+
+**Double-buffered prefetch** (``enable_prefetch``): while round r's fused
+train+eval program runs on device, the host can already pack round r+1's
+batch streams and stage its gathers/H2D — ``stage_cohort`` builds exactly
+the tensors the next ``train_cohort`` call would, into a bounded ring of
+:class:`StagedCohort` entries. Consumption is **value-validated**: a
+staged entry is used only when the eventual call's selection triple,
+seeds, batch/epoch geometry and resident-data identity all match, so the
+staged tensors are bit-identical to what the eager path would have built
+(jax async dispatch provides the actual wall-clock overlap; staging adds
+zero compiled programs — it reuses the same pack/gather/device_put calls).
+A mismatch silently falls back to eager packing and flushes the ring:
+overlap can only ever cost a re-pack, never numerics. Callers flush on
+policy/fleet/mode changes, drain, quorum misses, and checkpoint restore.
 """
 from __future__ import annotations
 
@@ -165,6 +179,32 @@ def pack_eval(datasets: Sequence[Dict[str, np.ndarray]]) -> EvalPack:
 # the engine
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
+class StagedCohort:
+    """One prefetched cohort: host-packed + H2D-staged tensors for a round
+    that has not started yet. Entries are pure functions of their key
+    fields (selection triple, seeds, geometry, resident-pack identity), so
+    a hit hands ``train_cohort`` bit-identical inputs and a stale
+    prediction can only cost a re-pack, never numerics."""
+    round_idx: int                   # staged-for round (observability/ckpt)
+    batch_size: int
+    epochs: int
+    seeds: Tuple[int, ...]
+    data_ref: object                 # strong ref: id identity can't recycle
+    eval_ref: object
+    has_eval: bool
+    stream: Tuple                    # (idx, sv, stv) device, cohort-sharded
+    n_steps: np.ndarray
+    sel_idx: Optional[np.ndarray] = None      # None = full-cohort entry
+    sel_valid: Optional[np.ndarray] = None
+    sel_weights: Optional[np.ndarray] = None
+    x: Optional[jax.Array] = None             # subset path: staged gathers
+    y: Optional[jax.Array] = None
+    ex: Optional[jax.Array] = None
+    ey: Optional[jax.Array] = None
+    ev: Optional[jax.Array] = None
+
+
+@dataclasses.dataclass
 class CohortResult:
     deltas: Dict            # stacked (K, ...) masked updates ω_0 − ω_E
     trained: Dict           # stacked (K, ...) locally-trained parent params
@@ -220,6 +260,11 @@ class BatchedRoundEngine:
         self._masks_cache: "OrderedDict[Tuple, CohortMasks]" = OrderedDict()
         self._requested_shards = int(cohort_shards)
         self._cohort_meshes: Dict[int, jax.sharding.Mesh] = {}
+        # double-buffered prefetch ring (enable_prefetch); 0 = disabled
+        self._prefetch_depth = 0
+        self._prefetch_ring: List[StagedCohort] = []
+        self._prefetch_stats = {"staged": 0, "hits": 0, "misses": 0,
+                                "flushes": 0}
 
     @property
     def kernel_path(self) -> str:
@@ -237,6 +282,209 @@ class BatchedRoundEngine:
         if mesh is None:
             mesh = self._cohort_meshes.setdefault(s, cohort_mesh(s))
         return cohort_axis_sharding(mesh)
+
+    # -- double-buffered prefetch ring -------------------------------------
+    @property
+    def prefetch_enabled(self) -> bool:
+        return self._prefetch_depth > 0
+
+    def enable_prefetch(self, depth: int = 1) -> None:
+        """Turn the double-buffered host pipeline on: up to ``depth``
+        future cohorts may be staged at once. ``depth <= 0`` disables
+        and flushes whatever is staged."""
+        depth = int(depth)
+        if depth <= 0:
+            self.flush_prefetch("disabled")
+            self._prefetch_depth = 0
+            return
+        self._prefetch_depth = depth
+        while len(self._prefetch_ring) > depth:
+            self._prefetch_ring.pop(0)
+
+    def flush_prefetch(self, reason: str = "") -> None:
+        """Drop every staged cohort — the buffer refs are released (the
+        'donation' side of the ring) and the next round packs eagerly.
+        Called on policy/fleet/mode changes, drain, quorum misses and
+        checkpoint restore; a flush can only forfeit overlap, never
+        change numerics."""
+        del reason      # observability hook; kept out of the stats key
+        if self._prefetch_ring:
+            self._prefetch_stats["flushes"] += 1
+            self._prefetch_ring.clear()
+
+    def prefetch_stats(self) -> Dict[str, int]:
+        """Copy of the ring counters: staged / hits / misses / flushes."""
+        return dict(self._prefetch_stats)
+
+    def stage_cohort(self, round_idx: int, datasets: Sequence[Dict], *,
+                     batch_size: int, epochs: int, seeds: Sequence[int],
+                     eval_datasets: Optional[Sequence[Dict]] = None,
+                     participation=None) -> None:
+        """Pack + H2D-stage a *future* round's cohort while the current
+        round's fused program still runs on device. Builds exactly the
+        tensors the matching ``train_cohort`` call would (same
+        ``_pack_streams`` / gather / ``shard_cohort`` code paths, so a
+        hit is bit-identical by construction) and appends them to the
+        ring. No-op unless ``enable_prefetch`` was called."""
+        if not self.prefetch_enabled:
+            return
+        seeds = tuple(int(s) for s in seeds)
+        if participation is None:
+            # only the streams depend on the round; warm the resident
+            # packs so first-round H2D doesn't land on the hot path
+            self._cohort_data(datasets)
+            if eval_datasets is not None:
+                self._eval_pack(eval_datasets)
+            stream, n_steps = self._full_stream(datasets, batch_size,
+                                                epochs, seeds)
+            entry = StagedCohort(
+                round_idx=int(round_idx), batch_size=int(batch_size),
+                epochs=int(epochs), seeds=seeds, data_ref=datasets,
+                eval_ref=eval_datasets,
+                has_eval=eval_datasets is not None, stream=stream,
+                n_steps=n_steps)
+        else:
+            t = self._subset_tensors(datasets, participation, batch_size,
+                                     epochs, seeds, eval_datasets)
+            entry = StagedCohort(
+                round_idx=int(round_idx), batch_size=int(batch_size),
+                epochs=int(epochs), seeds=seeds, data_ref=datasets,
+                eval_ref=eval_datasets,
+                has_eval=eval_datasets is not None, stream=t["stream"],
+                n_steps=t["n_steps"],
+                sel_idx=np.array(participation.idx, copy=True),
+                sel_valid=np.array(participation.valid, copy=True),
+                sel_weights=np.array(participation.weights, copy=True),
+                x=t["x"], y=t["y"], ex=t["ex"], ey=t["ey"], ev=t["ev"])
+        self._prefetch_ring.append(entry)
+        self._prefetch_stats["staged"] += 1
+        while len(self._prefetch_ring) > self._prefetch_depth:
+            self._prefetch_ring.pop(0)
+
+    def _take_staged(self, datasets, eval_datasets, participation,
+                     batch_size: int, epochs: int, seeds):
+        """Pop the staged entry matching this exact call, if any.
+        Matching is by value — selection triple, seeds, geometry, and
+        resident-pack identity — so a hit cannot change what the compiled
+        program sees. On a hit the entry leaves the ring (its buffers are
+        donated to the round) along with anything staged before it; on a
+        miss the whole ring is flushed (a wrong prediction means the
+        pipeline desynced — stale tensors must not linger)."""
+        if not self.prefetch_enabled or not self._prefetch_ring:
+            return None
+        seeds = tuple(int(s) for s in seeds)
+        for pos, e in enumerate(self._prefetch_ring):
+            if (e.batch_size == int(batch_size)
+                    and e.epochs == int(epochs) and e.seeds == seeds
+                    and e.data_ref is datasets
+                    and e.has_eval == (eval_datasets is not None)
+                    and (not e.has_eval or e.eval_ref is eval_datasets)
+                    and self._sel_match(e, participation)):
+                del self._prefetch_ring[:pos + 1]
+                self._prefetch_stats["hits"] += 1
+                if e.sel_idx is None:
+                    return {"stream": e.stream, "n_steps": e.n_steps}
+                return {"x": e.x, "y": e.y, "stream": e.stream,
+                        "n_steps": e.n_steps, "ex": e.ex, "ey": e.ey,
+                        "ev": e.ev}
+        self._prefetch_stats["misses"] += 1
+        self.flush_prefetch("stale")
+        return None
+
+    @staticmethod
+    def _sel_match(e: StagedCohort, part) -> bool:
+        if (e.sel_idx is None) != (part is None):
+            return False
+        if part is None:
+            return True
+        return (np.array_equal(e.sel_idx, np.asarray(part.idx))
+                and np.array_equal(e.sel_valid, np.asarray(part.valid))
+                and np.array_equal(e.sel_weights,
+                                   np.asarray(part.weights)))
+
+    def prefetch_snapshot(self) -> Dict:
+        """Host-side ring snapshot for ``checkpoint.fleet``: each entry's
+        *derivation* (round, selection triple, seeds, geometry) rather
+        than its device tensors — staging is a pure function of the
+        resident packs, so restore re-stages bit-exactly."""
+        entries = []
+        for e in self._prefetch_ring:
+            entries.append({
+                "round_idx": int(e.round_idx),
+                "batch_size": int(e.batch_size),
+                "epochs": int(e.epochs),
+                "seeds": [int(s) for s in e.seeds],
+                "has_eval": bool(e.has_eval),
+                "sel": None if e.sel_idx is None else (
+                    np.asarray(e.sel_idx), np.asarray(e.sel_valid),
+                    np.asarray(e.sel_weights)),
+            })
+        return {"depth": int(self._prefetch_depth), "entries": entries,
+                "stats": dict(self._prefetch_stats)}
+
+    def prefetch_restore(self, snap: Dict, datasets,
+                         eval_datasets=None) -> None:
+        """Rebuild the staged ring from :meth:`prefetch_snapshot` against
+        the (restored) resident packs."""
+        from repro.fl.selection import Selection
+        self.flush_prefetch("restore")
+        self._prefetch_depth = int(snap.get("depth", self._prefetch_depth))
+        for es in snap.get("entries", []):
+            sel = es.get("sel")
+            part = None if sel is None else Selection(
+                np.asarray(sel[0]), np.asarray(sel[1]),
+                np.asarray(sel[2]))
+            self.stage_cohort(
+                es["round_idx"], datasets, batch_size=es["batch_size"],
+                epochs=es["epochs"], seeds=es["seeds"],
+                eval_datasets=eval_datasets if es.get("has_eval")
+                else None,
+                participation=part)
+        if snap.get("stats"):
+            self._prefetch_stats = {k: int(v)
+                                    for k, v in snap["stats"].items()}
+
+    def _full_stream(self, datasets, batch_size: int, epochs: int, seeds):
+        """The full-cohort stream tensors (the only round-dependent part
+        of ``pack_cohort`` — x/y come from the cached resident pack)."""
+        idx, sv, stv, n_steps = _pack_streams(
+            [len(d["y"]) for d in datasets], batch_size, epochs=epochs,
+            seeds=seeds)
+        sh = self.cohort_sharding(len(datasets))
+        return shard_cohort((idx, sv, stv), sh), n_steps
+
+    def _subset_tensors(self, datasets, part, batch_size: int, epochs: int,
+                        seeds, eval_datasets) -> Dict:
+        """Everything ``_train_cohort_subset`` feeds the compiled program
+        beyond params/masks: the device gathers of the selected clients'
+        packs and the fleet-padded stream tensors. Shared by the eager
+        path and ``stage_cohort`` so staged == eager bit-for-bit."""
+        m = len(part.idx)
+        sh = self.cohort_sharding(m)
+        gidx = jnp.asarray(np.asarray(part.idx, np.int32))
+        x_full, y_full = self._cohort_data(datasets)
+        x = shard_cohort(jnp.take(x_full, gidx, 0), sh)
+        y = shard_cohort(jnp.take(y_full, gidx, 0), sh)
+        # step padding is the *fleet-wide* max so S never depends on which
+        # subset was selected (shape churn would mean program churn)
+        s_fleet = max(n_stream_steps(len(d["y"]), batch_size, epochs)
+                      for d in datasets)
+        lengths = [len(datasets[i]["y"]) if v > 0 else 0
+                   for i, v in zip(part.idx, part.valid)]
+        idx, sv, stv, n_steps = _pack_streams(
+            lengths, batch_size, epochs=epochs, seeds=seeds,
+            n_steps_pad=s_fleet)
+        out = {"x": x, "y": y, "stream": shard_cohort((idx, sv, stv), sh),
+               "n_steps": n_steps, "ex": None, "ey": None, "ev": None}
+        if eval_datasets is not None:
+            pack = self._eval_pack(eval_datasets)
+            valid_col = jnp.asarray(
+                np.asarray(part.valid, np.float32))[:, None]
+            out["ex"] = shard_cohort(jnp.take(pack.x, gidx, 0), sh)
+            out["ey"] = shard_cohort(jnp.take(pack.y, gidx, 0), sh)
+            out["ev"] = shard_cohort(
+                jnp.take(pack.valid, gidx, 0) * valid_col, sh)
+        return out
 
     # -- single-client programs (vmapped over the cohort) ------------------
     def _client_train(self, theta0, pmask, fwd, data_x, data_y, idx, svalid,
@@ -288,7 +536,8 @@ class BatchedRoundEngine:
                      datasets: Sequence[Dict], *, batch_size: int,
                      epochs: int, seeds: Sequence[int],
                      eval_datasets: Optional[Sequence[Dict]] = None,
-                     participation=None) -> CohortResult:
+                     participation=None, prefetch_hook=None
+                     ) -> CohortResult:
         """Run every client's local epochs (and, when eval_datasets is
         given, its local test pass) as one compiled program.
 
@@ -299,37 +548,51 @@ class BatchedRoundEngine:
         are cached across rounds; the subset is gathered on device), and
         padding slots train zero steps. Step padding is the fleet-wide
         max, so the packed shapes — and therefore the compiled programs —
-        are invariant under subset churn."""
+        are invariant under subset churn.
+
+        ``prefetch_hook`` (no-arg callable) runs after the fused program
+        is *dispatched* but before its results are materialised — the
+        double-buffering seam: the hook stages the next cohort's packs
+        (``stage_cohort``) while this cohort still runs on device. When
+        the prefetch ring already holds a matching staged entry for
+        *this* call, its tensors are consumed instead of re-packing."""
         if participation is not None:
             return self._train_cohort_subset(
                 theta0_stacked, specs, datasets, participation,
                 batch_size=batch_size, epochs=epochs, seeds=seeds,
-                eval_datasets=eval_datasets)
+                eval_datasets=eval_datasets, prefetch_hook=prefetch_hook)
         sh = self.cohort_sharding(len(specs))
         masks = self._cohort_masks(specs)
-        cohort = pack_cohort(datasets, batch_size, epochs=epochs,
-                             seeds=seeds, data=self._cohort_data(datasets))
+        x, y = self._cohort_data(datasets)
+        staged = self._take_staged(datasets, eval_datasets, None,
+                                   batch_size, epochs, seeds)
+        if staged is not None:
+            stream, n_steps = staged["stream"], staged["n_steps"]
+        else:
+            stream, n_steps = self._full_stream(datasets, batch_size,
+                                                epochs, seeds)
         theta0_stacked = shard_cohort(theta0_stacked, sh)
-        stream = shard_cohort((cohort.idx, cohort.sample_valid,
-                               cohort.step_valid), sh)
         if eval_datasets is None:
             deltas, trained = self._train(
-                theta0_stacked, masks.param_mask, masks.fwd, cohort.x,
-                cohort.y, *stream)
-            return CohortResult(deltas, trained, masks, cohort.n_steps)
+                theta0_stacked, masks.param_mask, masks.fwd, x, y, *stream)
+            if prefetch_hook is not None:
+                prefetch_hook()
+            return CohortResult(deltas, trained, masks, n_steps)
         pack = self._eval_pack(eval_datasets)
         deltas, trained, accs = self._train_eval(
-            theta0_stacked, masks.param_mask, masks.fwd, cohort.x, cohort.y,
+            theta0_stacked, masks.param_mask, masks.fwd, x, y,
             *stream, pack.x, pack.y, pack.valid)
-        return CohortResult(deltas, trained, masks, cohort.n_steps,
+        if prefetch_hook is not None:
+            prefetch_hook()     # overlaps with the in-flight fused program
+        return CohortResult(deltas, trained, masks, n_steps,
                             np.asarray(accs))
 
     def _train_cohort_subset(self, theta0_stacked, specs: Sequence,
                              datasets: Sequence[Dict], participation, *,
                              batch_size: int, epochs: int,
                              seeds: Sequence[int],
-                             eval_datasets: Optional[Sequence[Dict]] = None
-                             ) -> CohortResult:
+                             eval_datasets: Optional[Sequence[Dict]] = None,
+                             prefetch_hook=None) -> CohortResult:
         """Fixed-size padded subset round: gather the selected clients out
         of the fleet-resident packs on device, pad streams to the
         fleet-wide step count, and run the same compiled programs."""
@@ -341,34 +604,25 @@ class BatchedRoundEngine:
                 f"{m}, got {len(specs)}/{len(seeds)}")
         sh = self.cohort_sharding(m)
         masks = self._cohort_masks(specs)
-        gidx = jnp.asarray(np.asarray(part.idx, np.int32))
-        x_full, y_full = self._cohort_data(datasets)
-        x = shard_cohort(jnp.take(x_full, gidx, 0), sh)
-        y = shard_cohort(jnp.take(y_full, gidx, 0), sh)
-        # step padding is the *fleet-wide* max so S never depends on which
-        # subset was selected (shape churn would mean program churn)
-        s_fleet = max(n_stream_steps(len(d["y"]), batch_size, epochs)
-                      for d in datasets)
-        lengths = [len(datasets[i]["y"]) if v > 0 else 0
-                   for i, v in zip(part.idx, part.valid)]
-        idx, sv, stv, n_steps = _pack_streams(
-            lengths, batch_size, epochs=epochs, seeds=seeds,
-            n_steps_pad=s_fleet)
+        t = self._take_staged(datasets, eval_datasets, part, batch_size,
+                              epochs, seeds)
+        if t is None:
+            t = self._subset_tensors(datasets, part, batch_size, epochs,
+                                     seeds, eval_datasets)
         theta0_stacked = shard_cohort(theta0_stacked, sh)
-        stream = shard_cohort((idx, sv, stv), sh)
         if eval_datasets is None:
             deltas, trained = self._train(
-                theta0_stacked, masks.param_mask, masks.fwd, x, y, *stream)
-            return CohortResult(deltas, trained, masks, n_steps)
-        pack = self._eval_pack(eval_datasets)
-        valid_col = jnp.asarray(np.asarray(part.valid, np.float32))[:, None]
-        ex = shard_cohort(jnp.take(pack.x, gidx, 0), sh)
-        ey = shard_cohort(jnp.take(pack.y, gidx, 0), sh)
-        ev = shard_cohort(jnp.take(pack.valid, gidx, 0) * valid_col, sh)
+                theta0_stacked, masks.param_mask, masks.fwd, t["x"],
+                t["y"], *t["stream"])
+            if prefetch_hook is not None:
+                prefetch_hook()
+            return CohortResult(deltas, trained, masks, t["n_steps"])
         deltas, trained, accs = self._train_eval(
-            theta0_stacked, masks.param_mask, masks.fwd, x, y, *stream,
-            ex, ey, ev)
-        return CohortResult(deltas, trained, masks, n_steps,
+            theta0_stacked, masks.param_mask, masks.fwd, t["x"], t["y"],
+            *t["stream"], t["ex"], t["ey"], t["ev"])
+        if prefetch_hook is not None:
+            prefetch_hook()     # overlaps with the in-flight fused program
+        return CohortResult(deltas, trained, masks, t["n_steps"],
                             np.asarray(accs))
 
     def _cohort_masks(self, specs: Sequence) -> CohortMasks:
@@ -416,7 +670,7 @@ class BatchedRoundEngine:
                      datasets: Sequence[Dict], test_datasets: Sequence[Dict],
                      sizes: Sequence[float], *, batch_size: int, epochs: int,
                      seeds: Sequence[int], coverage_norm: bool = False,
-                     participation=None):
+                     participation=None, prefetch_hook=None):
         """One full FL round — cohort local train + eval fused, then fused
         aggregate+apply. The single dispatch contract shared by CFLServer
         and FedAvgServer (FedAvg is specs=[full_spec]*K, coverage off).
@@ -440,7 +694,8 @@ class BatchedRoundEngine:
         res = self.train_cohort(theta0, specs, datasets,
                                 batch_size=batch_size, epochs=epochs,
                                 seeds=seeds, eval_datasets=test_datasets,
-                                participation=participation)
+                                participation=participation,
+                                prefetch_hook=prefetch_hook)
         covs = res.masks.param_mask if coverage_norm else None
         sh = self.cohort_sharding(len(specs))
         if participation is None:

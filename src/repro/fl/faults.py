@@ -194,7 +194,8 @@ def faulty_sync_round(server, specs, sel):
     res = engine.train_cohort(
         theta0, specs_pad, server.client_data, batch_size=fl.batch_size,
         epochs=fl.local_epochs, seeds=seeds,
-        eval_datasets=server.test_data, participation=sel)
+        eval_datasets=server.test_data, participation=sel,
+        prefetch_hook=getattr(server, "_stage_next_round", None))
     covs = res.masks.param_mask if fl.coverage_norm else None
     deltas = res.deltas
 

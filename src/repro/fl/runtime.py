@@ -291,6 +291,8 @@ class FleetRuntime:
         recs: List[Dict] = []
         self._draining = True
         try:
+            # a drain means no further dispatches: staged cohorts are dead
+            self.engine.flush_prefetch("drain")
             self._flush_backoff()
             for _ in range(max_ticks):
                 if not self.groups:
@@ -336,6 +338,39 @@ class FleetRuntime:
         return _pad_selection([int(avail_ids[i]) for i in local], weights,
                               m_fleet)
 
+    def _stage_next_dispatch(self) -> None:
+        """Prefetch hook for the dispatch seam: while this dispatch's
+        fused train+eval still runs on device, stage the *next*
+        dispatch's cohort. The prediction assumes the steady state — the
+        in-flight cohort fully consumed by the next aggregate, so round
+        r+1 dispatches at full availability with the policy's
+        derivational draw (``tracker.select`` is side-effect-free for
+        any round). Under churn (partial availability, deadline misses,
+        retries) the prediction is wrong: the staged entry fails its
+        value validation, the round packs eagerly, and numerics are
+        untouched — the flush points below keep stale state from ever
+        surviving a RETRY/DEADLINE/drain."""
+        engine = self.engine
+        if not engine.prefetch_enabled or self._draining:
+            return
+        server, fl = self.server, self.server.fl
+        if getattr(self.tracker.policy, "state_dependent", True):
+            return
+        r = server.round_idx + 1
+        sel = self.tracker.select(r)
+        if self.tracker.is_full and \
+                len(sel.participants) == len(server.clients):
+            seeds = [server._client_seed(k, r)
+                     for k in range(len(server.clients))]
+            participation = None
+        else:
+            seeds = [server._client_seed(int(i), r) for i in sel.idx]
+            participation = sel
+        engine.stage_cohort(
+            r, server.client_data, batch_size=fl.batch_size,
+            epochs=fl.local_epochs, seeds=seeds,
+            eval_datasets=server.test_data, participation=participation)
+
     def _on_dispatch(self, t: float) -> None:
         if self._draining:
             return              # the post-drain idle guard re-dispatches
@@ -373,7 +408,8 @@ class FleetRuntime:
         res = self.engine.train_cohort(
             theta0, specs_slots, server.client_data,
             batch_size=fl.batch_size, epochs=fl.local_epochs, seeds=seeds,
-            eval_datasets=server.test_data, participation=participation)
+            eval_datasets=server.test_data, participation=participation,
+            prefetch_hook=self._stage_next_dispatch)
         covs = res.masks.param_mask if fl.coverage_norm else None
         deltas = res.deltas
 
@@ -454,6 +490,9 @@ class FleetRuntime:
         if len(miss) == 0:
             return
         g.failed[miss] = True
+        # misses change availability / fairness debt, so any staged cohort
+        # drawn under the old fleet state is now speculative at best
+        self.engine.flush_prefetch("deadline")
         for slot in miss:
             self._fail_engagement(int(g.sel.idx[slot]), t)
         self._dropped_since_agg += len(miss)
@@ -489,6 +528,8 @@ class FleetRuntime:
         self._in_backoff.discard(cid)
         self.tracker.clear_pending([cid])
         self._retried_since_agg += 1
+        # a retry restores availability: staged availability is stale
+        self.engine.flush_prefetch("retry")
 
     # -- aggregate ---------------------------------------------------------
     def _gate(self, g: InFlightCohort, mask: np.ndarray):

@@ -255,6 +255,13 @@ class SelectionPolicy:
     """
 
     name = "abstract"
+    # Does select() read mutable per-round fleet state (last accs,
+    # participation debt, misses)? Policies that don't — their round-r
+    # draw is a pure function of (seed, r) and stable fleet metadata —
+    # can be drawn one round *early* by the engine's double-buffered
+    # prefetch (the staged cohort is guaranteed to match). Base default
+    # is the conservative True: unknown custom policies never prefetch.
+    state_dependent = True
 
     def __init__(self, fraction: float = 0.5):
         if not (0.0 < fraction <= 1.0):
@@ -313,6 +320,7 @@ class FullParticipation(SelectionPolicy):
     """Every client, every round — the paper's regime and the default."""
 
     name = "full"
+    state_dependent = False     # everyone, every round — trivially stable
 
     def __init__(self, fraction: float = 1.0):
         super().__init__(1.0)
@@ -338,6 +346,7 @@ class UniformSelection(SelectionPolicy):
     FedAvg weighting over whoever participates)."""
 
     name = "uniform"
+    state_dependent = False     # pure function of the per-round RNG
 
     def select(self, state: FleetState,
                rng: np.random.RandomState) -> Selection:
@@ -370,6 +379,9 @@ class FairnessSelection(SelectionPolicy):
     """
 
     name = "fairness"
+    # scores read last_accs/debt/misses, which mutate every round — a
+    # round-early draw would (correctly) never match; don't prefetch it
+    state_dependent = True
 
     def __init__(self, fraction: float = 0.5, debt_gamma: float = 0.5,
                  group_beta: float = 1.0):
@@ -463,6 +475,9 @@ class LatencySelection(SelectionPolicy):
     """
 
     name = "latency"
+    # predicted_times is a cached LUT snapshot, not per-round state — it
+    # only changes via invalidate(), which flushes the prefetch ring
+    state_dependent = False
 
     def __init__(self, fraction: float = 0.5, deadline_q: float = 0.75):
         super().__init__(fraction)
@@ -579,6 +594,14 @@ class FleetTracker:
         self._predicted_times_fn = predicted_times_fn
         self._predicted_times: Optional[np.ndarray] = None
         self.arrays = FleetArrays.from_clients(clients)
+        # listeners notified on invalidate() (set_policy / set_fleet) —
+        # the engine's prefetch ring registers here so staged cohorts
+        # drawn under the old policy/fleet can never be consumed
+        self._invalidate_hooks: List = []
+
+    def add_invalidate_hook(self, fn) -> None:
+        """Register a no-arg callable fired by :meth:`invalidate`."""
+        self._invalidate_hooks.append(fn)
 
     # -- legacy numpy views (read-only) --------------------------------
     @property
@@ -602,8 +625,11 @@ class FleetTracker:
 
     def invalidate(self):
         """Drop the cached per-client round-time predictions (stale after
-        a latency-LUT or fleet change); recomputed lazily on next use."""
+        a latency-LUT or fleet change); recomputed lazily on next use.
+        Also fires the registered invalidate hooks (prefetch flush)."""
         self._predicted_times = None
+        for fn in self._invalidate_hooks:
+            fn()
 
     @property
     def is_full(self) -> bool:

@@ -65,6 +65,15 @@ class CFLConfig:
     # 'async' = event-driven buffered rounds (FedBuff-style) driven by the
     # simulated latency clock
     mode: str = "sync"
+    # double-buffered host pipeline (fl.engine prefetch ring): while round
+    # r's fused train+eval runs on device, the host packs + H2D-stages
+    # round r+1's cohort, keyed off the policy's already-drawn next
+    # selection. Value-validated at consume time, so overlap is bit-exact
+    # vs eager — a stale staged cohort falls back to eager packing.
+    overlap: bool = False
+    # how many future cohorts the prefetch ring may hold (>= 1); only
+    # meaningful with overlap=True
+    prefetch_depth: int = 1
     # async buffer size B: apply the server step whenever B deltas have
     # arrived; None = the dispatch cohort size (i.e. the sync barrier,
     # which with staleness_decay=0 reproduces sync numerics exactly)
@@ -141,6 +150,13 @@ class CFLServer:
                 cohort_shards=fl_cfg.cohort_shards,
                 elastic_kernels=fl_cfg.elastic_kernels)
             self._seq = None
+            # staged cohorts drawn under an old policy/fleet must never
+            # be consumed: any tracker invalidation flushes the ring
+            self.tracker.add_invalidate_hook(
+                lambda: self.engine.flush_prefetch("fleet-invalidate"))
+            if getattr(fl_cfg, "overlap", False):
+                self.engine.enable_prefetch(
+                    getattr(fl_cfg, "prefetch_depth", 1))
         else:
             self.engine = None
             self._seq = SequentialFamilyTrainer(
@@ -151,7 +167,9 @@ class CFLServer:
         """Swap the client-selection policy ('full' | 'uniform' |
         'fairness' | 'latency' or a SelectionPolicy instance) for the
         rounds that follow — the engine's compiled programs survive the
-        swap as long as the padded cohort size does."""
+        swap as long as the padded cohort size does. Any cohort the
+        prefetch ring staged under the old policy is flushed (via the
+        tracker's invalidate hook)."""
         self.tracker.set_policy(selection)
 
     def set_mode(self, mode: str) -> None:
@@ -161,13 +179,29 @@ class CFLServer:
         drains the runtime first — remaining completions are aggregated
         (each a server step, recorded in ``history``) before the first
         sync round, so no arrived update is dropped and no client stays
-        flagged pending."""
+        flagged pending. Staged prefetch state is flushed either way:
+        the two modes predict different next cohorts."""
         if mode not in ("sync", "async"):
             raise ValueError(f"mode must be 'sync' or 'async', "
                              f"got {mode!r}")
         if mode == "sync" and self._runtime is not None:
             self._runtime.drain()
+        if self.engine is not None:
+            self.engine.flush_prefetch("set_mode")
         self.fl.mode = mode
+
+    def set_overlap(self, overlap: bool) -> None:
+        """Toggle the double-buffered host pipeline for the rounds that
+        follow (``CFLConfig.overlap`` / ``prefetch_depth``). Disabling
+        flushes whatever is staged; numerics are identical either way."""
+        if self.engine is None:
+            if overlap:
+                raise ValueError("overlap requires the batched engine "
+                                 "(batched_rounds=True)")
+            return
+        self.fl.overlap = bool(overlap)
+        self.engine.enable_prefetch(
+            getattr(self.fl, "prefetch_depth", 1) if overlap else 0)
 
     @property
     def runtime(self):
@@ -218,8 +252,41 @@ class CFLServer:
             seed=self.fl.seed + self.round_idx)
 
     # ------------------------------------------------------------------
-    def _client_seed(self, k: int) -> int:
-        return self.fl.seed * 7 + self.round_idx * 131 + k
+    def _client_seed(self, k: int, round_idx: Optional[int] = None) -> int:
+        r = self.round_idx if round_idx is None else int(round_idx)
+        return self.fl.seed * 7 + r * 131 + k
+
+    def _stage_next_round(self, round_idx: Optional[int] = None) -> None:
+        """Prefetch hook (the double-buffering seam): called by the
+        engine after round r's fused program is dispatched but before
+        its results are materialised — draw round r+1's cohort from the
+        derivational selection RNG (side-effect-free for any round) and
+        stage its packs/H2D while r still runs on device. Only fires for
+        state-independent policies (a fairness draw depends on this
+        round's ``record``, so an early draw would never match); the
+        staged entry is value-validated at consume time either way, so
+        a wrong prediction costs a re-pack, never numerics. Mirrors the
+        exact ``train_cohort`` call ``run_round`` will make, including
+        the faults path's always-subset participation."""
+        engine = self.engine
+        if engine is None or not engine.prefetch_enabled:
+            return
+        if getattr(self.tracker.policy, "state_dependent", True):
+            return
+        r = (self.round_idx + 1) if round_idx is None else int(round_idx)
+        sel = self.tracker.select(r)
+        faulty = getattr(self.fl, "faults", None) is not None
+        if not faulty and self.tracker.is_full:
+            seeds = [self._client_seed(k, r)
+                     for k in range(len(self.clients))]
+            participation = None
+        else:
+            seeds = [self._client_seed(int(i), r) for i in sel.idx]
+            participation = sel
+        engine.stage_cohort(
+            r, self.client_data, batch_size=self.fl.batch_size,
+            epochs=self.fl.local_epochs, seeds=seeds,
+            eval_datasets=self.test_data, participation=participation)
 
     def _simulated_times(self, specs, n_steps,
                          client_ids: Optional[Sequence[int]] = None
@@ -323,7 +390,8 @@ class CFLServer:
                 self.params, specs, self.client_data, self.test_data,
                 [c.n_samples for c in self.clients],
                 batch_size=self.fl.batch_size, epochs=self.fl.local_epochs,
-                seeds=seeds, coverage_norm=self.fl.coverage_norm)
+                seeds=seeds, coverage_norm=self.fl.coverage_norm,
+                prefetch_hook=self._stage_next_round)
             return accs, self._simulated_times(specs, n_steps)
         # pad per-slot specs with a repeat of slot 0 (weight 0, no steps —
         # only its mask-table entry is reused, never its update)
@@ -334,7 +402,8 @@ class CFLServer:
             self.params, specs_pad, self.client_data, self.test_data,
             None, batch_size=self.fl.batch_size,
             epochs=self.fl.local_epochs, seeds=seeds,
-            coverage_norm=self.fl.coverage_norm, participation=sel)
+            coverage_norm=self.fl.coverage_norm, participation=sel,
+            prefetch_hook=self._stage_next_round)
         accs = sel.take_valid(accs_pad)
         n_steps = [int(n) for n in sel.take_valid(n_steps_pad)]
         participants = [int(i) for i in sel.participants]

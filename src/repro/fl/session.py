@@ -134,7 +134,8 @@ class CFLSession:
 
     # ------------------------------------------------------------------
     def run(self, rounds: int, selection=None,
-            mode: Optional[str] = None) -> List[Dict]:
+            mode: Optional[str] = None,
+            overlap: Optional[bool] = None) -> List[Dict]:
         """Run ``rounds`` FL rounds and return the history.
 
         What you pass: ``rounds`` (int); optionally ``selection`` — a
@@ -150,7 +151,12 @@ class CFLSession:
         ``fairness`` / ``timing`` / ``participants`` / ``selection`` and
         the scheduling columns ``staleness`` / ``aggregate_lag`` /
         ``sim_clock`` / ``mode`` (cfl also ``specs`` and
-        ``predictor_mae``).
+        ``predictor_mae``). Optionally ``overlap`` — True/False toggles
+        the batched engine's double-buffered prefetch
+        (``CFLConfig.overlap`` / ``prefetch_depth``) for these and
+        subsequent rounds; it is a host-pipelining knob and never
+        changes results (staged cohorts are value-validated at consume
+        time and fall back to the eager pack on any mismatch).
 
         IL runs the same local budget with no aggregation, recorded as
         one history entry; partial participation and round scheduling are
@@ -168,6 +174,11 @@ class CFLSession:
                 _reject_il_selection(selection)
             else:
                 self.server.set_selection(selection)
+        if overlap is not None:
+            if self.algorithm == "il":
+                raise ValueError("IL has no round pipeline to overlap — "
+                                 "overlap only applies to cfl/fedavg")
+            self.server.set_overlap(overlap)
         every = getattr(self.fl, "checkpoint_every", None)
         if self.algorithm == "il":
             if every:

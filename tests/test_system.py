@@ -6,7 +6,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.configs.paper_cnn import CNNConfig
@@ -18,12 +17,6 @@ CFG = CNNConfig(name="system-test", in_channels=1, image_size=28,
                 groupnorm_groups=4, elastic_widths=(0.5, 1.0))
 
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="pre-existing (seed-state) accuracy shortfall: at this tiny "
-           "scale/seed the 3-round trained parent does not reliably beat "
-           "a cold init on pooled client data — tracked since PR 1; the "
-           "round-artifact and checkpoint assertions pass")
 def test_full_cfl_pipeline(tmp_path):
     fl = CFLConfig(n_workers=4, local_epochs=2, batch_size=32, lr=0.08,
                    seed=1)
